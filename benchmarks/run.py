@@ -1,0 +1,326 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus figure-specific JSON to
+results/).  Scaled to this 1-core container: prefill sizes, durations and
+thread counts shrink; ratios and starvation behavior are the claims
+(EXPERIMENTS.md SSClaims maps each figure to its validation).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig6 mvstore   # a subset
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def _save(name: str, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"bench_{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 / Fig. 6: (a,b)-tree throughput across TMs and workloads
+# ---------------------------------------------------------------------------
+
+
+def bench_fig6_throughput(structs=("abtree",), quick: bool = False):
+    from benchmarks.workload import run_workload
+    from repro.configs.paper_stm import MultiverseParams, WorkloadConfig
+
+    tms = ["multiverse", "tl2", "dctl", "norec", "tinystm"]
+    rows = []
+    for structure in structs:
+        # RQ size = full prefill (the paper's RQs span 1%% of 1M keys and
+        # take ~ms; here the GIL only interleaves updaters into reads of
+        # comparable duration, so RQs scan the whole structure)
+        wls = [
+            WorkloadConfig("no_rq_0upd", structure=structure, rq_pct=0.0,
+                           search_pct=0.90, prefill=3000, key_range=6000,
+                           rq_size=3000, n_threads=3, duration_s=1.5),
+            WorkloadConfig("rq_0upd", structure=structure, rq_pct=0.005,
+                           search_pct=0.895, prefill=3000, key_range=6000,
+                           rq_size=3000, n_threads=3, duration_s=1.5),
+            WorkloadConfig("no_rq_2upd", structure=structure, rq_pct=0.0,
+                           search_pct=0.90, prefill=3000, key_range=6000,
+                           rq_size=3000, n_threads=3,
+                           n_dedicated_updaters=2, duration_s=1.5),
+            WorkloadConfig("rq_2upd", structure=structure, rq_pct=0.005,
+                           search_pct=0.895, prefill=3000, key_range=6000,
+                           rq_size=3000, n_threads=3,
+                           n_dedicated_updaters=2, duration_s=2.5),
+        ]
+        if quick:
+            wls = wls[-1:]
+        for wl in wls:
+            for tm in tms:
+                # K1/K2/K3 count ATTEMPTS; one RQ attempt here costs ~10ms
+                # (vs ~0.1ms on the paper's EPYC), so the thresholds scale
+                # down by the same ~100x to keep the same wall-clock
+                # engagement point (paper SS5 tunables)
+                params = MultiverseParams(k1=4, k2=6, k3=6,
+                                          lock_table_bits=12)                     if tm == "multiverse" else None
+                r = run_workload(tm, wl, params=params)
+                rows.append(r)
+                _emit(f"fig6/{structure}/{wl.name}/{tm}",
+                      1e6 / max(r["ops_per_sec"], 1e-9),
+                      f"ops/s={r['ops_per_sec']:.0f};rqs={r['rqs']};"
+                      f"failed={r['failed_ops']}")
+    _save("fig6", rows)
+    return rows
+
+
+def bench_appendix_structs():
+    """Hashmap (size queries) + external BST, paper Appendix A."""
+    return bench_fig6_throughput(structs=("hashmap", "extbst"),
+                                 quick=True)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: time-varying workload; mode switching vs forced Q / forced U
+# ---------------------------------------------------------------------------
+
+
+def bench_fig8_timevarying():
+    from benchmarks.workload import run_workload
+    from repro.configs.paper_stm import WorkloadConfig
+
+    base = dict(structure="abtree", prefill=2000, key_range=4000,
+                rq_size=2000, n_threads=2, duration_s=4.0)
+    # calm: point ops only, updaters idle; stormy: RQs + active updaters
+    # (paper Fig. 8's interval structure)
+    calm = WorkloadConfig("calm", rq_pct=0.0, search_pct=0.80,
+                          n_dedicated_updaters=0, **base)
+    stormy = WorkloadConfig("stormy", rq_pct=0.02, search_pct=0.78,
+                            n_dedicated_updaters=2, **base)
+
+    def interval_factory(tid):
+        t0 = time.time()
+
+        def cb():
+            # 1s calm / 1s stormy intervals
+            return stormy if int(time.time() - t0) % 2 else calm
+        return cb
+
+    # spawn with updater slots present; the interval callback idles them
+    spawn = dataclasses.replace(calm, n_dedicated_updaters=2)
+    rows = []
+    for variant, forced in [("adaptive", None), ("forcedQ", "Q"),
+                            ("forcedU", "U")]:
+        r = run_workload("multiverse", spawn, forced_mode=forced,
+                         time_series=True,
+                         interval_cb_factory=interval_factory)
+        r["variant"] = variant
+        rows.append(r)
+        _emit(f"fig8/{variant}", 1e6 / max(r["ops_per_sec"], 1e-9),
+              f"ops/s={r['ops_per_sec']:.0f};"
+              f"transitions={r['stm_stats'].get('mode_transitions', 0)}")
+    _save("fig8", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9: memory — version-node footprint, with vs without RQs
+# ---------------------------------------------------------------------------
+
+
+def bench_fig9_memory():
+    """Dynamic multiversioning pays for versions only while RQs need
+    them: track live version nodes under both workloads."""
+    import threading
+    from benchmarks.workload import (ThreadResult, make_struct, make_tm,
+                                     prefill, worker_loop)
+    from repro.configs.paper_stm import WorkloadConfig
+
+    rows = []
+    for name, rq_pct in [("no_rq", 0.0), ("rq", 0.02)]:
+        # low base contention (big key range, 1 reader) so Mode-Q stays
+        # version-free without RQs — versions appear only when RQs do
+        wl = WorkloadConfig(f"mem_{name}", rq_pct=rq_pct,
+                            search_pct=0.88 - rq_pct, prefill=3000,
+                            key_range=50000, rq_size=3000, n_threads=1,
+                            n_dedicated_updaters=1, duration_s=2.0,
+                            updater_sleep_s=3e-4)
+        import sys as _sys
+        old_si = _sys.getswitchinterval()
+        _sys.setswitchinterval(2e-5)   # fine interleave: no GIL bursts
+        from repro.configs.paper_stm import MultiverseParams
+        tm = make_tm("multiverse", 2,
+                     params=MultiverseParams(k1=5, lock_table_bits=12))
+        s = make_struct("abtree", tm)
+        prefill(tm, s, wl)
+        stop = threading.Event()
+        res = [ThreadResult() for _ in range(2)]
+        ths = [threading.Thread(target=worker_loop,
+                                args=(tm, s, wl, t, stop, res[t], t >= 1))
+               for t in range(2)]
+        [t.start() for t in ths]
+        peak_nodes = 0
+        t0 = time.time()
+        while time.time() - t0 < wl.duration_s:
+            time.sleep(0.1)
+            nodes = 0
+            for b in tm.vlt.nonempty_buckets():
+                node = tm.vlt._buckets[b]
+                while node is not None:
+                    v = node.vlist.head
+                    while v is not None:
+                        nodes += 1
+                        v = v.older
+                    node = node.next
+            peak_nodes = max(peak_nodes, nodes)
+        stop.set()
+        [t.join() for t in ths]
+        _sys.setswitchinterval(old_si)
+        st = tm.stats()
+        tm.stop()
+        rows.append({"workload": name, "peak_version_nodes": peak_nodes,
+                     "unversioned_buckets": st["unversioned_buckets"],
+                     "ebr_freed": st["ebr_freed"]})
+        _emit(f"fig9/{name}", float(peak_nodes),
+              f"peak_version_nodes={peak_nodes};"
+              f"freed={st['ebr_freed']}")
+    _save("fig9", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# MVStore: Mode-Q vs Mode-U step overhead + snapshot behavior (Layer B)
+# ---------------------------------------------------------------------------
+
+
+def bench_mvstore():
+    import jax
+    from repro.configs import MVStoreConfig, ShapeConfig, smoke_config
+    from repro.core import mvstore
+    from repro.launch.train import Trainer
+
+    cfg = smoke_config("qwen2.5-3b")
+    shape = ShapeConfig("b", 64, 4, "train")
+    rows = []
+    for mode in ("Q", "U"):
+        tr = Trainer(cfg, shape, mvcfg=MVStoreConfig(mode=mode))
+        state = tr.state
+        for s in range(3):
+            state, m = tr.train_step(state, tr.batch_at(s))
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        n = 10
+        for s in range(3, 3 + n):
+            state, m = tr.train_step(state, tr.batch_at(s))
+        jax.block_until_ready(m["loss"])
+        dt = (time.time() - t0) / n
+        t1 = time.time()
+        view, ok = mvstore.mv_snapshot(state.mv, int(state.mv.clock))
+        jax.block_until_ready(jax.tree.leaves(view)[0])
+        snap_s = time.time() - t1
+        stale_ok = bool(mvstore.mv_snapshot(state.mv,
+                                            int(state.mv.clock) - 1)[1])
+        tr.controller.stop()
+        rows.append({"mode": mode, "step_s": dt, "snapshot_s": snap_s,
+                     "stale_read_ok": stale_ok,
+                     "ring_bytes": mvstore.ring_bytes(state.mv)})
+        _emit(f"mvstore/mode{mode}", dt * 1e6,
+              f"snapshot_us={snap_s*1e6:.0f};stale_ok={stale_ok};"
+              f"ring_bytes={mvstore.ring_bytes(state.mv)}")
+    # Mode U must serve stale reads that Mode Q aborts
+    assert rows[1]["stale_read_ok"] and not rows[0]["stale_read_ok"]
+    _save("mvstore", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenches (interpret mode — correctness-path timing only)
+# ---------------------------------------------------------------------------
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+
+    def timeit(fn, n=3):
+        fn()
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.time() - t0) / n
+
+    t = timeit(lambda: ops.flash_attention(q, k, v, causal=True,
+                                           block_q=64, block_k=64))
+    _emit("kernels/flash_attention_interp", t * 1e6, f"S={S};H={H};D={D}")
+    rows.append({"kernel": "flash_attention", "seconds": t})
+
+    ring = jax.random.normal(key, (4, 1024, 64), jnp.float32)
+    ts = jnp.asarray([1, 5, 3, -1], jnp.int32)
+    t = timeit(lambda: ops.snapshot_select(ring, ts, jnp.int32(4)))
+    _emit("kernels/snapshot_select_interp", t * 1e6, "R=4;n=64k")
+    rows.append({"kernel": "snapshot_select", "seconds": t})
+    _save("kernels", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Roofline report (reads the dry-run sweep results)
+# ---------------------------------------------------------------------------
+
+
+def bench_roofline_report():
+    from benchmarks.roofline_report import render
+    fit = os.path.join(RESULTS_DIR, "dryrun_fit.jsonl")
+    probes = os.path.join(RESULTS_DIR, "dryrun_probes.jsonl")
+    if not os.path.exists(fit):
+        _emit("roofline/skipped", 0.0, "no dry-run results found")
+        return []
+    rows = render(fit, probes if os.path.exists(probes) else None)
+    for r in rows:
+        if r.get("roofline_fraction") is not None:
+            _emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                  f"dominant={r.get('dominant')};"
+                  f"frac={r['roofline_fraction']:.3f}")
+    return rows
+
+
+BENCHES = {
+    "fig6": bench_fig6_throughput,
+    "appendix": bench_appendix_structs,
+    "fig8": bench_fig8_timevarying,
+    "fig9": bench_fig9_memory,
+    "mvstore": bench_mvstore,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline_report,
+}
+
+
+def main() -> None:
+    which = [a for a in sys.argv[1:] if a in BENCHES] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in which:
+        t0 = time.time()
+        try:
+            BENCHES[name]()
+        except Exception as e:  # noqa: BLE001
+            _emit(f"{name}/ERROR", 0.0, repr(e)[:160])
+        _emit(f"{name}/total_wall", (time.time() - t0) * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

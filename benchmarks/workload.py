@@ -1,0 +1,169 @@
+"""The paper's benchmark methodology (SS5), scaled to this container.
+
+Workloads mix searches / inserts / deletes / range queries over a
+prefilled structure, with DEDICATED UPDATER threads whose operations never
+commit read-only and whose throughput is NOT counted (otherwise algorithms
+with no real RQ support get propped up — paper Fig. 7).  Python threads
+under the GIL make absolute ops/sec meaningless vs the paper's EPYC
+numbers; the CLAIMS are relational (Multiverse vs baselines ratios,
+starvation behavior) and those reproduce (EXPERIMENTS.md SSClaims).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.configs.paper_stm import MultiverseParams, WorkloadConfig
+from repro.core.baselines import BASELINES
+from repro.core.stm import (AbortTx, MaxRetriesExceeded, Multiverse, run)
+from repro.structs import ABTree, ExternalBST, HashMap
+
+MAX_RETRIES = 2000          # 'maximum allowed aborts' before an op quits
+
+
+def make_tm(name: str, n_threads: int,
+            params: Optional[MultiverseParams] = None,
+            forced_mode: Optional[str] = None):
+    if name == "multiverse":
+        tm = Multiverse(n_threads, params or MultiverseParams(
+            lock_table_bits=12))
+        if forced_mode == "U":
+            # forced-U variant (Fig. 8): jump the counter to Mode U and
+            # pin a synthetic sticky bit so the bg thread stays there
+            tm.mode_counter.store(2)
+            tm.first_obs_mode_u_ts.store(tm.clock.load())
+            tm.announce[0].sticky_mode_u = True
+        elif forced_mode == "Q":
+            tm.params = dataclasses.replace(tm.params, k2=1 << 30,
+                                            k3=1 << 30)
+        return tm
+    return BASELINES[name](n_threads)
+
+
+def make_struct(kind: str, tm):
+    if kind == "abtree":
+        return ABTree(tm)
+    if kind == "hashmap":
+        return HashMap(tm, n_buckets=1 << 12)
+    return ExternalBST(tm)
+
+
+def prefill(tm, s, cfg: WorkloadConfig):
+    rnd = random.Random(42)
+    n = 0
+    while n < cfg.prefill:
+        k = rnd.randrange(cfg.key_range)
+        if run(tm, lambda tx, k=k: s.insert(tx, k, k), tid=0):
+            n += 1
+
+
+@dataclasses.dataclass
+class ThreadResult:
+    ops: int = 0
+    rqs: int = 0
+    failed_ops: int = 0
+    aborts_seen: int = 0
+
+
+def worker_loop(tm, s, cfg: WorkloadConfig, tid: int, stop: threading.Event,
+                res: ThreadResult, dedicated_updater: bool,
+                interval_cb=None):
+    rnd = random.Random(1000 + tid)
+    is_hash = isinstance(s, HashMap)
+    while not stop.is_set():
+        if interval_cb is not None:
+            cfg = interval_cb()
+            if dedicated_updater and cfg.n_dedicated_updaters == 0:
+                time.sleep(0.001)     # updaters idle through calm intervals
+                continue
+        r = rnd.random()
+        k = rnd.randrange(cfg.key_range)
+        try:
+            if dedicated_updater:
+                # never commits read-only (paper SS5)
+                run(tm, lambda tx: s.upsert_touch(tx, k, k), tid=tid,
+                    max_retries=MAX_RETRIES)
+                if cfg.updater_sleep_s:
+                    time.sleep(cfg.updater_sleep_s)
+            elif r < cfg.search_pct:
+                run(tm, lambda tx: s.search(tx, k), tid=tid,
+                    max_retries=MAX_RETRIES)
+            elif r < cfg.search_pct + cfg.rq_pct:
+                if is_hash:
+                    run(tm, lambda tx: s.size_query(tx), tid=tid,
+                        max_retries=MAX_RETRIES)
+                else:
+                    run(tm, lambda tx: s.range_query(tx, k, cfg.rq_size),
+                        tid=tid, max_retries=MAX_RETRIES)
+                res.rqs += 1
+            elif r < cfg.search_pct + cfg.rq_pct + (
+                    1 - cfg.search_pct - cfg.rq_pct) / 2:
+                run(tm, lambda tx: s.insert(tx, k, k), tid=tid,
+                    max_retries=MAX_RETRIES)
+            else:
+                run(tm, lambda tx: s.delete(tx, k), tid=tid,
+                    max_retries=MAX_RETRIES)
+            res.ops += 1
+        except MaxRetriesExceeded:
+            res.failed_ops += 1
+
+
+def run_workload(tm_name: str, cfg: WorkloadConfig, *,
+                 params: Optional[MultiverseParams] = None,
+                 forced_mode: Optional[str] = None,
+                 time_series: bool = False,
+                 interval_cb_factory=None) -> Dict:
+    """One trial.  Returns throughput of regular threads only."""
+    import sys
+    total_threads = cfg.n_threads + cfg.n_dedicated_updaters
+    tm = make_tm(tm_name, total_threads, params, forced_mode)
+    s = make_struct(cfg.structure, tm)
+    prefill(tm, s, cfg)
+    # fine-grained GIL switching: without this, an entire RQ often runs
+    # between two thread switches and dedicated updaters can never
+    # interleave (the paper's contention disappears into GIL artifacts)
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(2e-5)
+    stop = threading.Event()
+    results = [ThreadResult() for _ in range(total_threads)]
+    threads = []
+    for t in range(total_threads):
+        dedicated = t >= cfg.n_threads
+        cb = interval_cb_factory(t) if interval_cb_factory else None
+        threads.append(threading.Thread(
+            target=worker_loop,
+            args=(tm, s, cfg, t, stop, results[t], dedicated, cb)))
+    series = []
+    t0 = time.time()
+    [th.start() for th in threads]
+    if time_series:
+        while time.time() - t0 < cfg.duration_s:
+            time.sleep(0.2)
+            series.append((time.time() - t0,
+                           sum(r.ops for r in results[:cfg.n_threads])))
+    else:
+        time.sleep(cfg.duration_s)
+    stop.set()
+    [th.join() for th in threads]
+    sys.setswitchinterval(old_interval)
+    dt = time.time() - t0
+    regular = results[:cfg.n_threads]
+    stats = tm.stats() if hasattr(tm, "stats") else {}
+    tm.stop()
+    out = {
+        "tm": tm_name + (f"-{forced_mode}" if forced_mode else ""),
+        "workload": cfg.name,
+        "structure": cfg.structure,
+        "threads": cfg.n_threads,
+        "updaters": cfg.n_dedicated_updaters,
+        "ops_per_sec": sum(r.ops for r in regular) / dt,
+        "rqs": sum(r.rqs for r in regular),
+        "failed_ops": sum(r.failed_ops for r in regular),
+        "stm_stats": {k: v for k, v in stats.items()},
+    }
+    if time_series:
+        out["series"] = series
+    return out

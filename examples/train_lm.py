@@ -1,0 +1,34 @@
+"""End-to-end driver: train an LM with the full framework stack.
+
+Uses the real substrate: config registry, MVStore parameter store, AdamW,
+deterministic data pipeline, fault-tolerant supervisor with snapshot-
+consistent async checkpoints.  Default is a CPU-friendly reduced config;
+``--full`` selects the real arch (for accelerator hosts).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2-780m \
+        --steps 50 --inject-failure-at 30     # kill a node mid-run
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (accelerator hosts)")
+    ap.add_argument("--inject-failure-at", type=int, default=-1)
+    args = ap.parse_args()
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--seq", "64", "--batch", "8",
+            "--inject-failure-at", str(args.inject_failure_at)]
+    if not args.full:
+        argv.append("--smoke")
+    raise SystemExit(train_main(argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Print top collectives for a 1-layer probe of an arch (hillclimb diag)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import sys
+
+from repro.configs import MVStoreConfig, get_config, get_shape
+from repro.configs.base import ShapeConfig
+from repro.launch.dryrun import (_metrics, cell_rules, compile_once,
+                                 default_parallel)
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "moonshot-v1-16b-a3b"
+cfg = dataclasses.replace(get_config(arch), n_layers=1)
+shape0 = get_shape("train_4k")
+mesh = make_production_mesh()
+pcfg0 = default_parallel(cfg, shape0, mesh)
+shape = ShapeConfig("train_4k", 4096,
+                    shape0.global_batch // pcfg0.microbatches, "train")
+pcfg = dataclasses.replace(pcfg0, microbatches=1, probe_unroll=True,
+                           scan_layers=False)
+rules = cell_rules(mesh, shape, pcfg, global_batch=shape.global_batch)
+c, t = compile_once(cfg, shape, mesh, pcfg,
+                    MVStoreConfig(enabled=True, mode="Q"),
+                    adamw.AdamWConfig(), rules)
+m = _metrics(c)
+print(f"{arch} 1L/1mb: wire {m['wire_bytes']/1e9:.3f} GB/chip, "
+      f"tpu_bytes {m['tpu_bytes']/1e9:.1f} GB")
+for e in m["coll_top"][:10]:
+    print(f"  {e['wire_bytes']/1e9:8.3f} GB {e['kind']:18s} "
+          f"g={e['group']:4d} {e['type'][:100]}")

@@ -1,0 +1,161 @@
+"""Snapshot-consistent asynchronous checkpointing via the MVStore.
+
+This is the paper's long-running read as a first-class feature: a
+checkpoint is a versioned read-only transaction.  The writer (trainer)
+never pauses — the checkpointer resolves a consistent parameter view at
+its read clock (`mv_snapshot`) and serializes in a background thread.  In
+Mode Q a hot trainer will abort the unversioned read (clock advanced) and
+the checkpointer's retries eventually flip the store to Mode U via the
+K-heuristics, exactly like any other reader.
+
+On-disk layout:  <dir>/step_<n>/manifest.json + <leaf-index>.npy files.
+Restore rebuilds the TrainState (params + moments + clocks) and the data
+pipeline resumes from the recorded step (bitwise-deterministic stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import mvstore
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), x) for p, x in flat], treedef
+
+
+def save_checkpoint(directory: str, step: int, state, *,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Synchronous write of a (already consistent) state pytree."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten(state)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype == "bfloat16":
+            arr = arr.astype(np.float32)   # np.save can't hold bf16
+        fn = f"{i:05d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append(
+            {"path": path, "file": fn, "shape": list(arr.shape),
+             "dtype": logical_dtype})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, d)          # atomic publish (restart-crash safe)
+    return d
+
+
+def restore_checkpoint(directory: str, template) -> Tuple[int, Any, Dict]:
+    """Latest checkpoint under ``directory`` restored into ``template``'s
+    structure.  Returns (step, state, extra)."""
+    steps = sorted(p for p in os.listdir(directory)
+                   if p.startswith("step_") and not p.endswith(".tmp"))
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, steps[-1])
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    flat, treedef = _flatten(template)
+    leaves = []
+    for path, leaf in flat:
+        e = by_path[path]
+        arr = np.load(os.path.join(d, e["file"]))
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype)
+                      if hasattr(leaf, "dtype") else arr)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    return manifest["step"], state, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Async checkpointer: a snapshot-reader thread that serializes
+    consistent views while training proceeds."""
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 reader=None):
+        self.directory = directory
+        self.keep = keep
+        self.reader = reader          # optional mvcontroller.ReaderHandle
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._inflight = 0
+        self._cv = threading.Condition()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+        self.saved = []
+        self.errors = []
+
+    def submit(self, step: int, mv_state: mvstore.MVStoreState, opt_state,
+               *, extra=None) -> bool:
+        """Take a consistent snapshot NOW (versioned read at the current
+        clock) and enqueue serialization.  Returns False if the snapshot
+        aborted (caller may retry next step — the reader retry loop)."""
+        read_clock = int(mv_state.clock)
+        if self.reader is not None:
+            self.reader.begin(read_clock)
+        view, ok = mvstore.mv_snapshot(mv_state, read_clock)
+        n_reads = len(jax.tree.leaves(view))
+        if not bool(ok):
+            if self.reader is not None:
+                self.reader.on_abort(n_reads)
+            return False
+        if self.reader is not None:
+            self.reader.on_commit(n_reads, read_clock)
+        # materialize on host before the trainer donates the buffers
+        host_view = jax.tree.map(np.asarray, view)
+        host_opt = jax.tree.map(np.asarray, opt_state)
+        with self._cv:
+            try:
+                self._q.put_nowait((step, host_view, host_opt, extra))
+            except queue.Full:
+                return False
+            self._inflight += 1
+        return True
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, view, opt, extra = item
+            try:
+                save_checkpoint(self.directory, step,
+                                {"params": view, "opt": opt}, extra=extra)
+                self.saved.append(step)
+                self._gc()
+            except Exception as e:  # noqa: BLE001
+                self.errors.append(repr(e))
+            finally:
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+
+    def _gc(self):
+        steps = sorted(p for p in os.listdir(self.directory)
+                       if p.startswith("step_")
+                       and not p.endswith(".tmp"))
+        for old in steps[:-self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.directory, old),
+                          ignore_errors=True)
+
+    def wait_idle(self, timeout: float = 30.0):
+        with self._cv:
+            self._cv.wait_for(lambda: self._inflight == 0, timeout=timeout)
+
+    def close(self):
+        self.wait_idle()
+        self._q.put(None)
+        self._worker.join(timeout=5)

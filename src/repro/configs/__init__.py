@@ -1,0 +1,137 @@
+"""Config registry: ``get_config('<arch-id>')`` and reduced smoke variants.
+
+Arch ids use dashes (CLI form, e.g. ``--arch qwen2.5-3b``); module names use
+underscores.  ``SHAPES`` holds the assigned input-shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (
+    SHAPES,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    MVStoreConfig,
+    ParallelConfig,
+    RunConfig,
+    ShapeConfig,
+)
+
+from repro.configs import (  # noqa: E402  (registry imports)
+    deepseek_7b,
+    jamba_v0_1_52b,
+    llama4_scout_17b_a16e,
+    mamba2_780m,
+    minitron_4b,
+    mistral_large_123b,
+    moonshot_v1_16b_a3b,
+    paligemma_3b,
+    qwen2_5_3b,
+    seamless_m4t_medium,
+)
+
+_MODULES = [
+    jamba_v0_1_52b,
+    paligemma_3b,
+    qwen2_5_3b,
+    deepseek_7b,
+    mistral_large_123b,
+    minitron_4b,
+    mamba2_780m,
+    llama4_scout_17b_a16e,
+    moonshot_v1_16b_a3b,
+    seamless_m4t_medium,
+]
+
+REGISTRY: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+ARCH_IDS = sorted(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {', '.join(ARCH_IDS)}")
+    return REGISTRY[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for CPU smoke tests: same family/structure, tiny dims.
+# ---------------------------------------------------------------------------
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """A reduced config of the same family as ``name``.
+
+    Keeps the structural features (GQA ratio, MoE routing, hybrid interleave,
+    enc-dec, frontend stubs) while shrinking width/depth/vocab so one
+    forward/train step runs on CPU in seconds.
+    """
+    full = get_config(name)
+    n_layers = {
+        "hybrid": 8,   # one full interleave period
+        "moe": 2,
+        "ssm": 2,
+    }.get(full.family, 2)
+    if full.is_encdec:
+        n_layers = 2
+    kv_ratio = max(1, full.n_heads // max(full.n_kv_heads, 1))
+    n_heads = 4 if full.n_heads else 0
+    n_kv = max(1, n_heads // kv_ratio) if n_heads else 0
+    moe = full.moe
+    if moe.num_experts:
+        moe = dataclasses.replace(
+            moe,
+            num_experts=min(8, moe.num_experts),
+            experts_per_token=min(2, moe.experts_per_token),
+            d_ff_expert=64,
+        )
+    mamba = dataclasses.replace(
+        full.mamba, d_state=16, head_dim=8, chunk=32)
+    return dataclasses.replace(
+        full,
+        name=full.name + "-smoke",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=16 if n_heads else 0,
+        d_ff=128 if full.d_ff else 0,
+        vocab_size=512,
+        moe=moe,
+        mamba=mamba,
+        n_encoder_layers=2 if full.is_encdec else 0,
+        frontend_len=min(full.frontend_len, 8),
+        attn_layer_period=full.attn_layer_period and 4,
+        attn_layer_offset=full.attn_layer_offset and 2,
+    )
+
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+SMOKE_DECODE_SHAPE = ShapeConfig(
+    "smoke_decode", seq_len=32, global_batch=2, kind="decode")
+
+__all__ = [
+    "ARCH_IDS",
+    "REGISTRY",
+    "SHAPES",
+    "SMOKE_SHAPE",
+    "SMOKE_DECODE_SHAPE",
+    "MambaConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "MVStoreConfig",
+    "ParallelConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_shape",
+    "smoke_config",
+]

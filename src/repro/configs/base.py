@@ -1,0 +1,196 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; input-shape
+cells are ``ShapeConfig``s; parallel/runtime knobs live in ``ParallelConfig``
+and ``MVStoreConfig`` (the paper's technique).  Configs are plain frozen
+dataclasses so they hash (usable as jit static args) and print reproducibly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Shape cells (assigned): seq_len x global_batch, and which step they lower.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / performance knobs.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How a step is sharded over the production mesh.
+
+    The mesh axes are ('pod',) 'data', 'model'.  Defaults implement
+    DP+FSDP over 'data' (and 'pod'), Megatron TP + expert parallelism over
+    'model'.  ``pipeline_stages`` > 1 activates the optional pipeline
+    schedule over the 'pod' axis (multi-pod meshes only).
+    """
+
+    fsdp: bool = True                 # shard params/opt-state over 'data' too
+    microbatches: int = 1             # gradient-accumulation steps (scan)
+    remat: str = "block"              # 'none' | 'block' (checkpoint each layer)
+    attn_impl: str = "blockwise"      # 'blockwise' | 'pallas' | 'naive'
+    attn_block_q: int = 1024          # blockwise-attention tile sizes
+    attn_block_k: int = 1024
+    decode_attn_chunk: int = 0        # 0 = unchunked decode attention
+    pipeline_stages: int = 1          # >1: pipeline over 'pod'
+    moe_capacity_factor: float = 1.25
+    # beyond-paper perf knobs (hillclimb; see EXPERIMENTS.md SSPerf)
+    gather_mode: str = "take"         # embedding lookup: 'take' | 'onehot'
+    scan_layers: bool = True
+    # roofline-probe mode: unroll every inner scan (attention pair loop,
+    # SSD chunk loop, decode chunks, microbatches) so HLO cost analysis
+    # counts true per-step work (XLA counts while bodies once)
+    probe_unroll: bool = False
+
+
+@dataclass(frozen=True)
+class MVStoreConfig:
+    """The paper's technique (dynamic multiversioning) at the parameter-store
+    level.  ``ring_slots`` is R, the bounded version-list length (TPU
+    adaptation of the paper's unbounded lists).  ``mode`` selects the traced
+    local mode of the compiled step ('Q' = unversioned fast path, 'U' =
+    copy-on-write versioned commit).  See core/mvstore.py.
+    """
+
+    enabled: bool = True
+    ring_slots: int = 2
+    mode: str = "Q"                   # local mode baked into the traced step
+    fused_commit: bool = False        # use the fused_adamw Pallas kernel path
+
+    def replace(self, **kw) -> "MVStoreConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Model architecture.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    experts_per_token: int = 0
+    d_ff_expert: int = 0
+    num_shared_experts: int = 0
+    every_n_layers: int = 1           # MoE replaces FFN every n layers
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    # SSM / hybrid
+    mamba: MambaConfig = field(default_factory=MambaConfig)
+    attn_layer_period: int = 0        # hybrid: 1 attention layer per period
+    attn_layer_offset: int = 0
+    # encoder-decoder
+    is_encdec: bool = False
+    n_encoder_layers: int = 0
+    # modality frontend (stub): number of prepended embedding positions
+    frontend: str = "none"            # none | vision | audio
+    frontend_len: int = 0
+    # capability flags
+    supports_long_context: bool = False  # sub-quadratic path for long_500k
+    long_context_note: str = ""
+    # numerics
+    dtype: str = "bfloat16"
+    source: str = ""                  # provenance tag from the assignment
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        v = self.vocab_size
+        return ((v + multiple - 1) // multiple) * multiple
+
+    def is_moe_layer(self, i: int) -> bool:
+        m = self.moe
+        if m.num_experts == 0:
+            return False
+        return (i % m.every_n_layers) == (m.every_n_layers - 1)
+
+    def is_attn_layer(self, i: int) -> bool:
+        """Hybrid archs: which mixer a layer uses (attention vs mamba)."""
+        if self.family == "ssm":
+            return False
+        if self.attn_layer_period <= 0:
+            return True
+        return (i % self.attn_layer_period) == self.attn_layer_offset
+
+    def supports_shape(self, shape: ShapeConfig) -> Tuple[bool, str]:
+        """Whether a shape cell is runnable; returns (ok, skip-reason)."""
+        if shape.name == "long_500k" and not self.supports_long_context:
+            return False, (
+                "long_500k skipped: pure full-attention arch (no "
+                "sub-quadratic path); see DESIGN.md SS5"
+            )
+        return True, ""
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """One fully-specified run: arch x shape x parallelism x MVStore mode."""
+
+    model: ModelConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    mvstore: MVStoreConfig = field(default_factory=MVStoreConfig)
+    seed: int = 0
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,19 @@
+"""The paper's contribution, two layers (DESIGN.md SS2):
+
+Layer A — faithful word-based Multiverse STM (stm.py + friends) with the
+TL2/DCTL/NOrec/TinySTM baselines it is evaluated against.
+
+Layer B — MVStore (mvstore.py): the same dynamic-multiversioning policy at
+parameter-block granularity for TPU-pod training/serving, driven by
+mvcontroller.py.
+"""
+from repro.core.mvstore import (  # noqa: F401
+    MVStoreState,
+    mv_commit,
+    mv_init,
+    mv_snapshot,
+    ring_bytes,
+    unversion_blocks,
+    version_blocks,
+    versioned_paths,
+)

@@ -1,0 +1,375 @@
+"""Baseline STMs the paper compares against (SS5/SS6), on the same harness.
+
+  TL2     — commit-time locking, buffered writes, GV-style global clock.
+  DCTL    — encounter-time locking, in-place writes, deferred clock
+            (incremented by aborts), irrevocable fallback after N aborts.
+  NOrec   — single global seqlock, buffered writes, value validation.
+  TinySTM — encounter-time locking + snapshot (timestamp) extension.
+
+All share TMBase's heap and the `run(tm, fn, tid)` retry loop, so every
+benchmark data structure runs unmodified on every TM.  None of these keep
+versions: a long read-only transaction aborts whenever a concurrent commit
+advances a lock version past its read clock — the behavior Multiverse's
+versioned path removes (paper Figs. 1/6/7).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+from repro.core.clock import AtomicInt, GlobalClock
+from repro.core.locks import LockState, LockTable
+from repro.core.stm import AbortTx, TMBase
+
+
+class _Ctx:
+    __slots__ = ("tid", "r_clock", "read_set", "write_map", "undo",
+                 "attempts", "irrevocable", "stats", "read_vals",
+                 "read_only")
+
+    def __init__(self, tid: int):
+        self.tid = tid
+        self.attempts = 0
+        self.irrevocable = False
+        self.stats = {"commits": 0, "aborts": 0, "versioned_commits": 0,
+                      "ro_commits": 0, "mode_cas": 0}
+        self.reset()
+
+    def reset(self):
+        self.r_clock = 0
+        self.read_set: List[tuple] = []
+        self.write_map: Dict[int, Any] = {}
+        self.undo: Dict[int, Any] = {}
+        self.read_vals: List[tuple] = []
+        self.read_only = True
+
+
+class _BaselineTM(TMBase):
+    def __init__(self, n_threads: int, lock_bits: int = 16):
+        super().__init__(n_threads)
+        self.clock = GlobalClock(0)
+        self.locks = LockTable(lock_bits)
+        self._ctxs = [_Ctx(t) for t in range(n_threads)]
+
+    def ctx(self, tid):
+        return self._ctxs[tid]
+
+    def begin(self, tid: int):
+        ctx = self._ctxs[tid]
+        ctx.reset()
+        ctx.r_clock = self.clock.load()
+        return _BTx(self, ctx)
+
+    def tx_alloc(self, ctx, n, init=None):
+        return self.alloc(n, init)
+
+    def stats(self) -> Dict[str, int]:
+        out = {"commits": 0, "aborts": 0, "ro_commits": 0}
+        for c in self._ctxs:
+            for k in out:
+                out[k] += c.stats[k]
+        return out
+
+    def _abort(self, ctx):
+        ctx.stats["aborts"] += 1
+        ctx.attempts += 1
+        raise AbortTx()
+
+
+class _BTx:
+    __slots__ = ("_tm", "_ctx")
+
+    def __init__(self, tm, ctx):
+        self._tm = tm
+        self._ctx = ctx
+
+    def read(self, addr):
+        return self._tm.tm_read(self._ctx, addr)
+
+    def write(self, addr, value):
+        self._tm.tm_write(self._ctx, addr, value)
+
+    def alloc(self, n, init=None):
+        return self._tm.tx_alloc(self._ctx, n, init)
+
+    @property
+    def read_count(self):
+        return len(self._ctx.read_set) + len(self._ctx.read_vals)
+
+
+# ---------------------------------------------------------------------------
+# TL2
+# ---------------------------------------------------------------------------
+
+
+class TL2(_BaselineTM):
+    """Deferred (commit-time) locking, buffered writes, GV4-style clock."""
+
+    def tm_read(self, ctx, addr):
+        if addr in ctx.write_map:
+            return ctx.write_map[addr]
+        idx = self.locks.index(addr)
+        st1 = self.locks.read(idx)
+        data = self._heap[addr]
+        st2 = self.locks.read(idx)
+        if st1.locked or st2.locked or st1.version != st2.version or \
+                st1.version > ctx.r_clock:
+            self._abort(ctx)
+        ctx.read_set.append((idx, st1.version))
+        return data
+
+    def tm_write(self, ctx, addr, value):
+        ctx.read_only = False
+        ctx.write_map[addr] = value
+
+    def _try_commit(self, ctx):
+        if ctx.read_only:
+            ctx.stats["ro_commits"] += 1
+            ctx.attempts = 0
+            return
+        locked: List[int] = []
+        try:
+            for addr in ctx.write_map:
+                idx = self.locks.index(addr)
+                st = self.locks.read(idx)
+                if not self.locks.try_lock(idx, st, ctx.tid):
+                    self._abort(ctx)
+                if idx not in locked:
+                    locked.append(idx)
+            wv = self.clock.increment()          # GV4-ish: one fetch-add
+            for idx, seen in ctx.read_set:
+                st = self.locks.read(idx)
+                if (st.locked and st.tid != ctx.tid) or st.version > \
+                        ctx.r_clock:
+                    self._abort(ctx)
+            for addr, value in ctx.write_map.items():
+                self._heap[addr] = value
+            for idx in locked:
+                self.locks.unlock(idx, wv)
+            locked.clear()
+            ctx.stats["commits"] += 1
+            ctx.attempts = 0
+        finally:
+            for idx in locked:
+                self.locks.unlock(idx)
+
+
+# ---------------------------------------------------------------------------
+# DCTL
+# ---------------------------------------------------------------------------
+
+
+class DCTL(_BaselineTM):
+    """Encounter-time locking, in-place writes, deferred clock (bumped on
+    abort), single-token irrevocable mode after ``irrevocable_after``
+    aborts (the paper uses 100)."""
+
+    def __init__(self, n_threads, lock_bits: int = 16,
+                 irrevocable_after: int = 100):
+        super().__init__(n_threads)
+        self.irrevocable_after = irrevocable_after
+        self._irrevocable_token = threading.Lock()
+
+    def begin(self, tid):
+        ctx = self._ctxs[tid]
+        ctx.reset()
+        if ctx.attempts >= self.irrevocable_after and not ctx.irrevocable:
+            self._irrevocable_token.acquire()
+            ctx.irrevocable = True
+        ctx.r_clock = self.clock.load()
+        return _BTx(self, ctx)
+
+    def tm_read(self, ctx, addr):
+        idx = self.locks.index(addr)
+        if addr in ctx.undo or (ctx.irrevocable and self._lock_for(ctx,
+                                                                   idx)):
+            return self._heap[addr]
+        data = self._heap[addr]
+        st = self.locks.read(idx)
+        if not self.locks.validate(st, ctx.r_clock, ctx.tid):
+            self._rollback_abort(ctx)
+        ctx.read_set.append((idx, st.version))
+        return data
+
+    def _lock_for(self, ctx, idx) -> bool:
+        """Irrevocable path: claim locks even for reads; spin, never abort."""
+        while True:
+            st = self.locks.read(idx)
+            if st.locked and st.tid == ctx.tid:
+                return True
+            if not st.locked and self.locks.try_lock(idx, st, ctx.tid):
+                ctx.write_map[idx] = True        # remember to release
+                return True
+
+    def tm_write(self, ctx, addr, value):
+        ctx.read_only = False
+        idx = self.locks.index(addr)
+        if ctx.irrevocable:
+            self._lock_for(ctx, idx)
+        else:
+            st = self.locks.read(idx)
+            if not self.locks.validate(st, ctx.r_clock, ctx.tid):
+                self._rollback_abort(ctx)
+            if not self.locks.try_lock(idx, st, ctx.tid):
+                self._rollback_abort(ctx)
+            ctx.write_map[idx] = True
+        if addr not in ctx.undo:
+            ctx.undo[addr] = self._heap[addr]
+        self._heap[addr] = value
+
+    def _rollback_abort(self, ctx):
+        for addr, old in ctx.undo.items():
+            self._heap[addr] = old
+        nxt = self.clock.increment()             # deferred clock: abort bump
+        for idx in ctx.write_map:
+            self.locks.unlock(idx, nxt)
+        self._abort(ctx)
+
+    def _try_commit(self, ctx):
+        if ctx.read_only and not ctx.write_map:
+            ctx.stats["ro_commits"] += 1
+            self._finish(ctx)
+            return
+        if not ctx.irrevocable:
+            for idx, seen in ctx.read_set:
+                st = self.locks.read(idx)
+                if not self.locks.validate(st, ctx.r_clock, ctx.tid):
+                    self._rollback_abort(ctx)
+        cc = self.clock.load()
+        for idx in ctx.write_map:
+            self.locks.unlock(idx, cc)
+        ctx.stats["commits"] += 1
+        self._finish(ctx)
+
+    def _finish(self, ctx):
+        if ctx.irrevocable:
+            ctx.irrevocable = False
+            self._irrevocable_token.release()
+        ctx.attempts = 0
+
+
+# ---------------------------------------------------------------------------
+# NOrec
+# ---------------------------------------------------------------------------
+
+
+class NOrec(_BaselineTM):
+    """No ownership records: one global seqlock + value validation."""
+
+    def __init__(self, n_threads, lock_bits: int = 16):
+        super().__init__(n_threads)
+        self.seq = AtomicInt(0)
+
+    def begin(self, tid):
+        ctx = self._ctxs[tid]
+        ctx.reset()
+        while True:
+            s = self.seq.load()
+            if s % 2 == 0:
+                ctx.r_clock = s
+                break
+        return _BTx(self, ctx)
+
+    def _validate_values(self, ctx) -> int:
+        while True:
+            s = self.seq.load()
+            if s % 2 == 1:
+                continue
+            for addr, val in ctx.read_vals:
+                if self._heap[addr] != val:
+                    self._abort(ctx)
+            if self.seq.load() == s:
+                return s
+
+    def tm_read(self, ctx, addr):
+        if addr in ctx.write_map:
+            return ctx.write_map[addr]
+        val = self._heap[addr]
+        while self.seq.load() != ctx.r_clock:
+            ctx.r_clock = self._validate_values(ctx)
+            val = self._heap[addr]
+        ctx.read_vals.append((addr, val))
+        return val
+
+    def tm_write(self, ctx, addr, value):
+        ctx.read_only = False
+        ctx.write_map[addr] = value
+
+    def _try_commit(self, ctx):
+        if ctx.read_only:
+            ctx.stats["ro_commits"] += 1
+            ctx.attempts = 0
+            return
+        while True:
+            s = ctx.r_clock
+            if self.seq.cas(s, s + 1):
+                break
+            ctx.r_clock = self._validate_values(ctx)
+        for addr, val in ctx.read_vals:
+            if self._heap[addr] != val:
+                self.seq.store(s + 2)
+                self._abort(ctx)
+        for addr, value in ctx.write_map.items():
+            self._heap[addr] = value
+        self.seq.store(s + 2)
+        ctx.stats["commits"] += 1
+        ctx.attempts = 0
+
+
+# ---------------------------------------------------------------------------
+# TinySTM (encounter-time locking + snapshot extension)
+# ---------------------------------------------------------------------------
+
+
+class TinySTM(DCTL):
+    """TinySTM-style: DCTL's ETL write path, but the clock advances on every
+    commit and readers EXTEND their snapshot instead of aborting when they
+    hit a newer-but-consistent version."""
+
+    def __init__(self, n_threads, lock_bits: int = 16):
+        super().__init__(n_threads, lock_bits,
+                         irrevocable_after=1 << 30)   # no irrevocable mode
+
+    def tm_read(self, ctx, addr):
+        if addr in ctx.undo:
+            return self._heap[addr]
+        idx = self.locks.index(addr)
+        while True:
+            st = self.locks.read(idx)
+            if st.locked and st.tid != ctx.tid:
+                self._rollback_abort(ctx)
+            data = self._heap[addr]
+            st2 = self.locks.read(idx)
+            if st2.locked or st2.version != st.version:
+                continue                      # raced a writer: reread
+            if st.version > ctx.r_clock:
+                # snapshot extension: revalidate at the new clock, then
+                # loop to re-read the value under the extended snapshot
+                now = self.clock.load()
+                for i2, seen in ctx.read_set:
+                    st3 = self.locks.read(i2)
+                    if (st3.locked and st3.tid != ctx.tid) or \
+                            st3.version != seen:
+                        self._rollback_abort(ctx)
+                ctx.r_clock = now
+                continue
+            ctx.read_set.append((idx, st.version))
+            return data
+
+    def _try_commit(self, ctx):
+        if ctx.read_only and not ctx.write_map:
+            ctx.stats["ro_commits"] += 1
+            ctx.attempts = 0
+            return
+        for idx, seen in ctx.read_set:
+            st = self.locks.read(idx)
+            if (st.locked and st.tid != ctx.tid) or st.version != seen:
+                self._rollback_abort(ctx)
+        cc = self.clock.increment()
+        for idx in ctx.write_map:
+            self.locks.unlock(idx, cc)
+        ctx.stats["commits"] += 1
+        ctx.attempts = 0
+
+
+BASELINES = {"tl2": TL2, "dctl": DCTL, "norec": NOrec, "tinystm": TinySTM}

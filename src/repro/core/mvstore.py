@@ -1,0 +1,222 @@
+"""MVStore: the paper's dynamic multiversioning at parameter-store level.
+
+Layer-B adaptation (DESIGN.md SS2): parameter blocks are the transactional
+addresses, the optimizer commit is the update transaction, snapshot readers
+(eval / checkpoint / serve-from-trainer) are the long-running read-only
+transactions, and the global clock is a replicated step counter.
+
+Version lists become bounded HBM rings of R slots per versioned block (the
+TPU adaptation of the paper's unbounded lists; overflow surfaces as reader
+abort/retry, exactly like a paper conflict).  Which blocks are versioned is
+STATIC per compiled step — a compiled step function is a transaction whose
+local mode was fixed at begin (trace) time; the host-side controller
+(mvcontroller.py) changes the global mode and swaps step variants at step
+boundaries, which is the paper's local-mode-lags-global-mode-by-one rule.
+
+Commit semantics per mode (paper Table 1):
+  - local Mode Q, unversioned block: in-place write, no versioning work.
+  - local Mode Q, versioned block:   in-place write + ring append (paper:
+    "keeping both the version list and the unversioned location up to
+    date"), published atomically at the step boundary (TBD analogue).
+  - local Mode U (and QtoU/UtoQ):    every written block must be versioned
+    -> ring append for all blocks.
+
+Snapshot reads resolve each block to the newest version with
+ts <= read_clock (versioned blocks), or to the live value with a
+lock-validation check clock <= read_clock (unversioned blocks, the Mode-Q
+reader path that aborts when the writer advanced the clock).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, FrozenSet, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MVStoreConfig
+
+NO_TS = jnp.int32(-1)          # empty ring slot
+
+
+class MVStoreState(NamedTuple):
+    """live: the in-place values ('addresses').  ring/ring_ts exist only for
+    versioned blocks (dict keyed by block path -> [R, ...] / [R])."""
+    live: Any
+    ring: dict
+    ring_ts: dict
+    clock: jnp.ndarray          # int32 global clock
+
+
+VersionedSet = Union[str, FrozenSet[str]]  # 'all' | 'none' | explicit paths
+
+
+def block_paths(params) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return [jax.tree_util.keystr(p) for p, _ in flat]
+
+
+def _is_versioned(path: str, versioned: VersionedSet) -> bool:
+    if versioned == "all":
+        return True
+    if versioned == "none" or not versioned:
+        return False
+    return path in versioned
+
+
+def resolve_versioned(params, versioned: VersionedSet) -> FrozenSet[str]:
+    return frozenset(p for p in block_paths(params)
+                     if _is_versioned(p, versioned))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def mv_init(params, cfg: MVStoreConfig,
+            versioned: VersionedSet = "none") -> MVStoreState:
+    """Build store state.  Versioned blocks get an R-slot ring seeded with
+    the current value at the current clock (paper SS3.1.1: the initial
+    version takes the last consistent value and the earliest safe ts)."""
+    R = cfg.ring_slots
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    ring, ring_ts = {}, {}
+    for p, leaf in flat:
+        path = jax.tree_util.keystr(p)
+        if _is_versioned(path, versioned):
+            buf = jnp.zeros((R,) + leaf.shape, leaf.dtype)
+            ring[path] = buf.at[0].set(leaf)
+            ring_ts[path] = jnp.full((R,), NO_TS).at[0].set(0)
+    return MVStoreState(live=params, ring=ring, ring_ts=ring_ts,
+                        clock=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# commit (the update-transaction write path)
+# ---------------------------------------------------------------------------
+
+
+def mv_commit(state: MVStoreState, new_params, *, local_mode: str,
+              cfg: MVStoreConfig) -> MVStoreState:
+    """Publish an optimizer step.  Rings rotate: the new value lands in slot
+    ``clock' % R`` — a bounded version list ordered by timestamp."""
+    new_clock = state.clock + 1
+    ring, ring_ts = state.ring, state.ring_ts
+    must_version = local_mode in ("U", "QtoU", "UtoQ")
+    if must_version:
+        # every written block must already be in the versioned set: the
+        # controller guarantees this before handing out a Mode-U step.
+        missing = [p for p in block_paths(new_params) if p not in ring]
+        if missing:
+            raise ValueError(
+                f"Mode {local_mode} commit with unversioned blocks "
+                f"{missing[:3]}... — controller must version first")
+    if ring:
+        R = cfg.ring_slots
+        slot = (new_clock % R).astype(jnp.int32)
+        flat, _ = jax.tree_util.tree_flatten_with_path(new_params)
+        new_ring, new_ts = {}, {}
+        for p, leaf in flat:
+            path = jax.tree_util.keystr(p)
+            if path in ring:
+                new_ring[path] = jax.lax.dynamic_update_index_in_dim(
+                    ring[path], leaf.astype(ring[path].dtype), slot, 0)
+                new_ts[path] = jax.lax.dynamic_update_index_in_dim(
+                    ring_ts[path], new_clock.astype(jnp.int32), slot, 0)
+        ring, ring_ts = new_ring, new_ts
+    return MVStoreState(live=new_params, ring=ring, ring_ts=ring_ts,
+                        clock=new_clock)
+
+
+# ---------------------------------------------------------------------------
+# snapshot read (the versioned read-only transaction)
+# ---------------------------------------------------------------------------
+
+
+def _select_version(buf, ts, read_clock, impl: str):
+    """Newest slot with NO_TS < ts <= read_clock.  Returns (value, ok)."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.snapshot_select(buf, ts, read_clock)
+    valid = jnp.logical_and(ts != NO_TS, ts <= read_clock)
+    masked = jnp.where(valid, ts, NO_TS)
+    idx = jnp.argmax(masked)
+    ok = jnp.any(valid)
+    return jax.lax.dynamic_index_in_dim(buf, idx, 0, keepdims=False), ok
+
+
+def mv_snapshot(state: MVStoreState, read_clock, *,
+                assume_versioned: bool = False,
+                impl: str = "xla") -> Tuple[Any, jnp.ndarray]:
+    """Resolve a consistent view at ``read_clock``.
+
+    ``assume_versioned``: the local-Mode-U reader path — every relevant
+    block is versioned by the writers' invariant, so unversioned blocks are
+    read live *without* validation (they cannot have been written since
+    Mode U began; paper SS4.2).  Mode-Q readers validate unversioned blocks
+    against the clock and abort (ok=False) when the writer has advanced.
+    Returns (params_view, ok scalar bool).
+    """
+    ok = jnp.asarray(True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state.live)
+    out = []
+    for p, leaf in flat:
+        path = jax.tree_util.keystr(p)
+        if path in state.ring:
+            val, vok = _select_version(state.ring[path],
+                                       state.ring_ts[path], read_clock,
+                                       impl)
+            ok = jnp.logical_and(ok, vok)
+            out.append(val.astype(leaf.dtype))
+        else:
+            if not assume_versioned:
+                ok = jnp.logical_and(ok, state.clock <= read_clock)
+            out.append(leaf)
+    view = jax.tree_util.tree_unflatten(
+        treedef, out)
+    return view, ok
+
+
+# ---------------------------------------------------------------------------
+# host-side maintenance (controller helpers)
+# ---------------------------------------------------------------------------
+
+
+def version_blocks(state: MVStoreState, paths, cfg: MVStoreConfig,
+                   first_obs_mode_u_ts: Optional[int] = None
+                   ) -> MVStoreState:
+    """Version additional blocks (reader-triggered in Mode Q; writer-forced
+    in Mode U).  The initial version takes the live value; its timestamp is
+    the earliest safe one — firstObsModeUTs when valid, else the current
+    clock (the 'lock version'), per paper SS4.2."""
+    ring = dict(state.ring)
+    ring_ts = dict(state.ring_ts)
+    R = cfg.ring_slots
+    ts0 = (jnp.int32(first_obs_mode_u_ts)
+           if first_obs_mode_u_ts is not None else state.clock)
+    flat, _ = jax.tree_util.tree_flatten_with_path(state.live)
+    for p, leaf in flat:
+        path = jax.tree_util.keystr(p)
+        if path in paths and path not in ring:
+            buf = jnp.zeros((R,) + leaf.shape, leaf.dtype)
+            ring[path] = buf.at[0].set(leaf)
+            ring_ts[path] = jnp.full((R,), NO_TS).at[0].set(ts0)
+    return state._replace(ring=ring, ring_ts=ring_ts)
+
+
+def unversion_blocks(state: MVStoreState, paths) -> MVStoreState:
+    """Drop rings (the background thread's unversioning; EBR analogue is
+    host GC — a ring is only dropped when no live reader pins it, enforced
+    by the controller's epoch refcounts)."""
+    ring = {k: v for k, v in state.ring.items() if k not in paths}
+    ring_ts = {k: v for k, v in state.ring_ts.items() if k not in paths}
+    return state._replace(ring=ring, ring_ts=ring_ts)
+
+
+def versioned_paths(state: MVStoreState) -> FrozenSet[str]:
+    return frozenset(state.ring)
+
+
+def ring_bytes(state: MVStoreState) -> int:
+    return int(sum(v.size * v.dtype.itemsize for v in state.ring.values()))

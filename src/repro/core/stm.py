@@ -1,0 +1,607 @@
+"""Multiverse STM — faithful implementation of the paper's Algorithms 1-5.
+
+Word-based opaque STM with dynamic multiversioning:
+  * unversioned path: DCTL-style (global clock, versioned locks,
+    encounter-time locking, in-place writes, commit-time read revalidation,
+    clock incremented by aborts);
+  * versioned read-only path: version-list traversal with TBD blocking and
+    deleted timestamps;
+  * four TM modes on a monotone counter (Q, QtoU, U, UtoQ) with the
+    Q->QtoU CAS open to workers and all other transitions centralized in
+    the background thread, which also unversions VLT buckets in Mode Q
+    using the L/P commit-delta heuristic and drives EBR.
+
+The user API is `run(tm, fn)` where fn(tx) performs tx.read/tx.write —
+aborts raise AbortTx and retry at begin, the setjmp/longjmp analogue.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.configs.paper_stm import MultiverseParams
+from repro.core import heuristics as heur
+from repro.core import modes as M
+from repro.core.bloom import BloomTable
+from repro.core.clock import AtomicInt, GlobalClock
+from repro.core.ebr import EBR, TxRetireBuffer
+from repro.core.locks import LockState, LockTable
+from repro.core.vlt import DELETED_TS, VLT, VersionList, VListNode
+
+
+class AbortTx(Exception):
+    """Transaction abort (longjmp back to beginTxn)."""
+
+
+class MaxRetriesExceeded(Exception):
+    """A transaction hit the retry cap (baselines quit here; paper SS5)."""
+
+
+class TMBase:
+    """Shared heap + allocation interface (structures build on this)."""
+
+    def __init__(self, n_threads: int):
+        self.n_threads = n_threads
+        self._heap: List[Any] = []
+        self._heap_lock = threading.Lock()
+        self.name = type(self).__name__
+
+    # heap ---------------------------------------------------------------
+    def alloc(self, n: int, init: Any = None) -> int:
+        with self._heap_lock:
+            base = len(self._heap)
+            self._heap.extend([init] * n)
+            return base
+
+    def peek(self, addr: int) -> Any:
+        """Non-transactional read (test/debug only)."""
+        return self._heap[addr]
+
+    def stop(self) -> None:  # pragma: no cover - overridden
+        pass
+
+
+class _TxCtx:
+    """Per-thread transaction context (paper Alg. 1 thread locals)."""
+
+    __slots__ = (
+        "tid", "r_clock", "attempts", "read_only", "read_cnt", "versioned",
+        "local_mode_counter", "local_mode", "read_set", "write_set",
+        "versioned_write_set", "retires", "initial_versioned_ts", "active",
+        "stats", "alloc_log", "no_versioning")
+
+    def __init__(self, tid: int):
+        self.tid = tid
+        self.attempts = 0
+        self.versioned = False
+        self.no_versioning = False
+        self.active = False
+        self.stats = {"commits": 0, "aborts": 0, "versioned_commits": 0,
+                      "mode_cas": 0, "ro_commits": 0}
+        self.reset()
+        self.initial_versioned_ts: Optional[int] = None
+
+    def reset(self):
+        self.r_clock = 0
+        self.read_only = True
+        self.read_cnt = 0
+        self.local_mode_counter = 0
+        self.local_mode = M.MODE_Q
+        self.read_set: List[tuple] = []          # (idx, version_seen)
+        self.write_set: Dict[int, Any] = {}      # addr -> old value
+        # addr -> (vlist, node): the vlist lets rollback UNLINK the node
+        self.versioned_write_set: Dict[int, tuple] = {}
+        self.alloc_log: List[tuple] = []
+
+
+class Multiverse(TMBase):
+    def __init__(self, n_threads: int,
+                 params: Optional[MultiverseParams] = None,
+                 start_bg: bool = True):
+        super().__init__(n_threads)
+        self.params = params or MultiverseParams()
+        bits = self.params.lock_table_bits
+        self.clock = GlobalClock(0)
+        self.locks = LockTable(bits)
+        self.bloom = BloomTable(bits, self.params.bloom_bits)
+        self.vlt = VLT(bits)
+        self.mode_counter = AtomicInt(0)         # mode = counter & 3
+        self.first_obs_mode_u_ts = AtomicInt(-1)
+        self.min_mode_u_reads = heur.MinModeUReadCount()
+        self.ebr = EBR(n_threads)
+        self.announce = [heur.ThreadAnnouncement()
+                         for _ in range(n_threads)]
+        self.unversion_heur = heur.UnversionThreshold(self.params)
+        self._ctxs = [_TxCtx(t) for t in range(n_threads)]
+        self._retire_bufs = [TxRetireBuffer(self.ebr)
+                             for _ in range(n_threads)]
+        self.stats_unversioned_buckets = 0
+        self.stats_mode_transitions = 0
+        self._stop = threading.Event()
+        self._bg: Optional[threading.Thread] = None
+        if start_bg:
+            self._bg = threading.Thread(target=self._bg_thread, daemon=True)
+            self._bg.start()
+
+    # ------------------------------------------------------------------
+    # transaction lifecycle (Alg. 1)
+    # ------------------------------------------------------------------
+    def ctx(self, tid: int) -> _TxCtx:
+        return self._ctxs[tid]
+
+    def begin(self, tid: int) -> "_Tx":
+        ctx = self._ctxs[tid]
+        ctx.reset()
+        ann = self.announce[tid]
+        # announce-then-verify: publish (counter, active) BEFORE trusting
+        # the counter, else the background thread can advance the mode in
+        # the window between our load and our announcement and a local-
+        # Mode-Q writer would run unversioned under global Mode U —
+        # breaking the invariant Mode-U readers rely on (paper SS3.4 fn.1).
+        while True:
+            cnt = self.mode_counter.load()
+            ctx.local_mode_counter = cnt
+            ann.local_mode_counter = cnt
+            ctx.active = True
+            if self.mode_counter.load() == cnt:
+                break
+            ctx.active = False
+        ctx.local_mode = M.get_mode(cnt)
+        ctx.r_clock = self.clock.load()
+        if ctx.versioned and ctx.initial_versioned_ts is None:
+            ctx.initial_versioned_ts = ctx.r_clock
+        ann.active_versioned = ctx.versioned
+        self.ebr.pin(tid)
+        return _Tx(self, ctx)
+
+    def _try_commit(self, ctx: _TxCtx) -> None:
+        ann = self.announce[ctx.tid]
+        if ctx.read_only:
+            if ctx.versioned:
+                delta = self.clock.load() - (ctx.initial_versioned_ts or 0)
+                ann.commit_ts_delta = delta
+                if ctx.local_mode == M.MODE_U:
+                    self.min_mode_u_reads.update(ctx.read_cnt)
+                ctx.stats["versioned_commits"] += 1
+            if ann.sticky_mode_u and heur.sticky_cleared(
+                    self.params, ann, ctx.read_cnt):
+                ann.sticky_mode_u = False
+            ctx.stats["ro_commits"] += 1
+            self._finish(ctx)
+            return
+        # update transaction: revalidate the read set
+        for idx, seen_version in ctx.read_set:
+            st = self.locks.read(idx)
+            if not self.locks.validate(st, ctx.r_clock, ctx.tid):
+                self._abort(ctx)
+                raise AbortTx()
+        commit_clock = self.clock.load()
+        # remove TBD marks (publish versions at the commit clock)
+        for addr, (vlist, node) in ctx.versioned_write_set.items():
+            node.timestamp = commit_clock
+            node.tbd = False
+        # release write locks at the commit clock
+        for addr in ctx.write_set:
+            self.locks.unlock(self.locks.index(addr), commit_clock)
+        self._retire_bufs[ctx.tid].commit()
+        ctx.stats["commits"] += 1
+        self._finish(ctx)
+
+    def _finish(self, ctx: _TxCtx) -> None:
+        ctx.active = False
+        ctx.attempts = 0
+        ctx.versioned = False
+        ctx.initial_versioned_ts = None
+        self.ebr.unpin(ctx.tid)
+
+    def _abort(self, ctx: _TxCtx) -> None:
+        # roll back in-place writes
+        for addr, old in ctx.write_set.items():
+            self._heap[addr] = old
+        # roll back versioned writes: deleted timestamp, UNLINK, retire.
+        # We hold the address lock, and our node is necessarily still the
+        # head (no one else can prepend), so unlinking is safe; without it
+        # a reader pinned AFTER the grace period could still walk through
+        # the freed node — a real use-after-free caught by the poison-bit
+        # assertions (EXPERIMENTS.md SSDeviations).
+        buf = self._retire_bufs[ctx.tid]
+        for addr, (vlist, node) in ctx.versioned_write_set.items():
+            node.timestamp = DELETED_TS
+            node.tbd = False
+            if vlist.head is node:
+                vlist.head = node.older
+            buf.retire_on_abort(node)
+        buf.abort()
+        # free txn-local allocations
+        for base, n in ctx.alloc_log:
+            for i in range(n):
+                self._heap[base + i] = None
+        nxt = self.clock.increment()
+        for addr in ctx.write_set:
+            self.locks.unlock(self.locks.index(addr), nxt)
+        ctx.stats["aborts"] += 1
+        ann = self.announce[ctx.tid]
+        if ctx.read_only:
+            if heur.should_attempt_mode_cas(
+                    self.params, versioned=ctx.versioned,
+                    attempts=ctx.attempts, read_cnt=ctx.read_cnt,
+                    min_mode_u_reads=self.min_mode_u_reads.get()):
+                self._attempt_mode_cas(ctx)
+            if not ctx.versioned and not ctx.no_versioning and \
+                    heur.should_go_versioned(self.params, ctx.attempts):
+                ctx.versioned = True
+        ctx.attempts += 1
+        ctx.active = False
+        self.ebr.unpin(ctx.tid)
+
+    def _attempt_mode_cas(self, ctx: _TxCtx) -> None:
+        """Any local-Mode-Q txn may CAS Q -> QtoU (SS3.3.1)."""
+        cnt = self.mode_counter.load()
+        if M.get_mode(cnt) == M.MODE_Q:
+            self.announce[ctx.tid].sticky_mode_u = True
+            self.announce[ctx.tid].small_txn_read_cnt = None
+            if self.mode_counter.cas(cnt, cnt + 1):
+                ctx.stats["mode_cas"] += 1
+                self.stats_mode_transitions += 1
+
+    # ------------------------------------------------------------------
+    # TM accesses (Alg. 3 / Alg. 4)
+    # ------------------------------------------------------------------
+    def tm_write(self, ctx: _TxCtx, addr: int, value: Any) -> None:
+        if ctx.versioned:
+            # Only read-only transactions can be versioned (paper SS3.2.2).
+            # A versioned txn that turns out to write must restart on the
+            # unversioned path: its versioned reads were of the PAST and
+            # cannot anchor writes to the present (mixing them is the
+            # SI-writer path of SS3.5, which must be explicitly requested).
+            # no_versioning is STICKY for this operation — otherwise the K1
+            # heuristic re-promotes on the next abort and the write aborts
+            # it again, forever (livelock).
+            ctx.versioned = False
+            ctx.no_versioning = True
+            ctx.initial_versioned_ts = None
+            self._abort(ctx)
+            raise AbortTx()
+        ctx.read_only = False
+        idx = self.locks.index(addr)
+        st = self.locks.read_wait_unflagged(idx)
+        if not self.locks.validate(st, ctx.r_clock, ctx.tid):
+            self._abort(ctx)
+            raise AbortTx()
+        if not self.locks.try_lock(idx, st, ctx.tid):
+            self._abort(ctx)
+            raise AbortTx()
+        if addr not in ctx.write_set:
+            ctx.write_set[addr] = self._heap[addr]
+        # ORDER MATTERS (paper SS4.1 TEXT, not Alg. 3's line order): the
+        # versioned write must complete BEFORE the in-place write.  Mode-U
+        # readers of an unversioned address use the lock-freeze protocol,
+        # whose safety argument is "a writer holding the lock would have
+        # versioned the address [before changing the data]" — with the
+        # pseudocode's in-place-first order there is a window where the
+        # lock is held, the bloom filter still misses, and the heap already
+        # holds the uncommitted value: a reader returns a torn read.  We
+        # hit this as a real ~1-in-20s tear (EXPERIMENTS.md SSDeviations).
+        if ctx.local_mode == M.MODE_Q:
+            self._try_write_to_vlist(ctx, addr, idx, value)
+        else:
+            # Modes QtoU / U / UtoQ: writers must version (Table 1)
+            vlist = self._get_vlist(idx, addr)
+            if vlist is None:
+                ts = self.first_obs_mode_u_ts.load()
+                if ts < 0:
+                    ts = st.version
+                node = VListNode(None, ts, ctx.write_set[addr], False)
+                vlist = VersionList(node)
+                self.vlt.insert(idx, addr, vlist)
+                self.bloom.add(idx, addr)
+            self._append_version(ctx, addr, vlist, value)
+        self._heap[addr] = value                  # in-place (encounter-time)
+
+    def _get_vlist(self, idx: int, addr: int) -> Optional[VersionList]:
+        if not self.bloom.contains(idx, addr):
+            return None
+        return self.vlt.get(idx, addr)
+
+    def _try_write_to_vlist(self, ctx, addr, idx, value) -> None:
+        """Mode Q: add a version iff the address is already versioned."""
+        vlist = self._get_vlist(idx, addr)
+        if vlist is None:
+            return
+        self._append_version(ctx, addr, vlist, value)
+
+    def _append_version(self, ctx, addr, vlist, value) -> None:
+        head = vlist.head
+        if head is not None and head.tbd and addr in ctx.versioned_write_set:
+            head.data = value                     # our own TBD: update it
+            return
+        node = VListNode(head, ctx.r_clock, value, True)
+        vlist.head = node
+        ctx.versioned_write_set[addr] = (vlist, node)
+        if head is not None:
+            # previous version retired iff we commit (eventualFree)
+            self._retire_bufs[ctx.tid].retire_on_commit(head)
+
+    def tm_read(self, ctx: _TxCtx, addr: int) -> Any:
+        ctx.read_cnt += 1
+        if ctx.versioned and ctx.local_mode in (M.MODE_Q, M.MODE_QTOU,
+                                                M.MODE_UTOQ):
+            return self._mode_q_versioned_read(ctx, addr)
+        if ctx.versioned and ctx.local_mode == M.MODE_U:
+            return self._mode_u_versioned_read(ctx, addr)
+        # unversioned read
+        idx = self.locks.index(addr)
+        if addr in ctx.write_set:
+            return self._heap[addr]
+        data = self._heap[addr]
+        st = self.locks.read_wait_unflagged(idx)
+        if not self.locks.validate(st, ctx.r_clock, ctx.tid):
+            self._abort(ctx)
+            raise AbortTx()
+        ctx.read_set.append((idx, st.version))
+        return data
+
+    # -- versioned reads ---------------------------------------------------
+    def _traverse(self, ctx, vlist: VersionList) -> Any:
+        """Alg. 2 traverse: block on suitable TBD heads, skip deleted.
+
+        Acceptance is STRICTLY ts < rClock (the paper writes <=; with the
+        deferred clock several commits share one timestamp, so a reader at
+        rclock c could otherwise see half of an in-flight commit whose
+        commitClock also lands on c — mirroring validateLock's strict <
+        restores opacity; DESIGN.md SS6)."""
+        node = vlist.head
+        while node is not None and node.tbd and node.timestamp < ctx.r_clock:
+            node = vlist.head                     # reread head (spin)
+        while node is not None and (node.timestamp >= ctx.r_clock
+                                    or node.timestamp == DELETED_TS
+                                    or node.tbd):
+            assert not node.freed, "use-after-free: version node"
+            node = node.older
+        if node is None:
+            self._abort(ctx)
+            raise AbortTx()
+        assert not node.freed, "use-after-free: version node"
+        return node.data
+
+    def _mode_q_versioned_read(self, ctx, addr: int) -> Any:
+        idx = self.locks.index(addr)
+        if not self.bloom.try_add(idx, addr):
+            vlist = self.vlt.get(idx, addr)       # bloom hit (may be false+)
+            if vlist is not None:
+                return self._traverse(ctx, vlist)
+        return self._version_then_read(ctx, addr, idx)
+
+    def _version_then_read(self, ctx, addr: int, idx: int) -> Any:
+        """Mode-Q reader versions an unversioned address (SS4.1)."""
+        st = self.locks.lock_and_flag(idx, ctx.tid)
+        try:
+            # recheck: someone may have versioned it while we waited
+            vlist = self.vlt.get(idx, addr)
+            if vlist is None:
+                data = self._heap[addr]
+                ts = self.first_obs_mode_u_ts.load()
+                if ts < 0:
+                    ts = st.version
+                self.vlt.insert(idx, addr,
+                                VersionList(VListNode(None, ts, data,
+                                                      False)))
+                self.bloom.add(idx, addr)
+            else:
+                data = None
+        finally:
+            self.locks.unlock(idx)
+        if st.version >= ctx.r_clock:
+            # the value we versioned was written at/after our snapshot
+            self._abort(ctx)
+            raise AbortTx()
+        vlist = self.vlt.get(idx, addr)
+        if vlist is not None:
+            return self._traverse(ctx, vlist)
+        return self._heap[addr]
+
+    def _mode_u_versioned_read(self, ctx, addr: int) -> Any:
+        """SS4.2: unversioned addresses cannot have been written since the
+        TM entered Mode U — read them with the lock-freeze protocol."""
+        idx = self.locks.index(addr)
+        if self.bloom.contains(idx, addr):
+            vlist = self.vlt.get(idx, addr)
+            if vlist is not None:
+                return self._traverse(ctx, vlist)
+        last_ver, last_val = -1, None
+        while True:
+            st = self.locks.read(idx)
+            if st.locked:
+                if st.version == last_ver and self._heap[addr] is last_val:
+                    return last_val
+                last_ver, last_val = st.version, self._heap[addr]
+                # recheck versioned-ness: a writer holding the lock would
+                # have versioned the address before changing it
+                if self.bloom.contains(idx, addr):
+                    vlist = self.vlt.get(idx, addr)
+                    if vlist is not None:
+                        return self._traverse(ctx, vlist)
+                continue
+            data = self._heap[addr]
+            st2 = self.locks.read(idx)
+            if st2.version != st.version or st2.locked:
+                if self.bloom.contains(idx, addr):
+                    vlist = self.vlt.get(idx, addr)
+                    if vlist is not None:
+                        return self._traverse(ctx, vlist)
+                self._abort(ctx)
+                raise AbortTx()
+            return data
+
+    # ------------------------------------------------------------------
+    # allocation inside transactions
+    # ------------------------------------------------------------------
+    def tx_alloc(self, ctx, n: int, init: Any = None) -> int:
+        base = self.alloc(n, init)
+        ctx.alloc_log.append((base, n))
+        return base
+
+    # ------------------------------------------------------------------
+    # background thread (Alg. 5)
+    # ------------------------------------------------------------------
+    def _wait_for_workers(self, mode_counter: int) -> None:
+        while not self._stop.is_set():
+            found = False
+            for ann in self.announce:
+                if ann.local_mode_counter < mode_counter and \
+                        self._ctxs[self.announce.index(ann)].active:
+                    found = True
+                    break
+            if not found:
+                return
+            time.sleep(0.0005)
+
+    def _any_sticky(self) -> bool:
+        return any(a.sticky_mode_u for a in self.announce)
+
+    def _transition(self, cur: int) -> int:
+        new = cur + 1
+        self.mode_counter.store(new)
+        self.stats_mode_transitions += 1
+        return new
+
+    def _bg_thread(self) -> None:
+        poll = self.params.unversion_poll_ms / 1000.0
+        while not self._stop.is_set():
+            cnt = self.mode_counter.load()
+            mode = M.get_mode(cnt)
+            if mode == M.MODE_QTOU:
+                self._wait_for_workers(cnt)
+                cnt = self._transition(cnt)          # -> U
+                self.first_obs_mode_u_ts.store(self.clock.load())
+                # remain in U while sticky readers want it
+                while self._any_sticky() and not self._stop.is_set():
+                    time.sleep(poll)
+                cnt = self._transition(cnt)          # -> UtoQ
+                self._wait_for_workers(cnt)
+                self.first_obs_mode_u_ts.store(-1)
+                cnt = self._transition(cnt)          # -> Q
+            elif mode == M.MODE_Q:
+                self._unversion_pass()
+                self.ebr.advance_and_reclaim()
+                time.sleep(poll)
+            else:  # recover if constructed mid-cycle
+                time.sleep(poll)
+
+    def _unversion_pass(self) -> None:
+        """SS4.4: unversion buckets whose newest version is older than the
+        L/P-averaged commit-delta threshold."""
+        deltas = [a.commit_ts_delta for a in self.announce
+                  if a.commit_ts_delta is not None]
+        self.unversion_heur.observe_round(deltas)
+        thresh = self.unversion_heur.threshold()
+        if thresh is None:
+            return
+        now = self.clock.load()
+        for bucket in self.vlt.nonempty_buckets():
+            newest = self.vlt.bucket_newest_ts(bucket)
+            if newest is None or now - newest < thresh:
+                continue
+            # claim the bucket's lock, detach, retire everything, reset bloom
+            st = self.locks.lock_and_flag(bucket, tid=-2)
+            try:
+                head = self.vlt.take_bucket(bucket)
+                node = head
+                while node is not None:
+                    v = node.vlist.head
+                    while v is not None:
+                        self.ebr.retire(v)
+                        v = v.older
+                    self.ebr.retire(node)
+                    node = node.next
+                self.bloom.reset(bucket)
+                self.stats_unversioned_buckets += 1
+            finally:
+                self.locks.unlock(bucket)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._bg is not None:
+            self._bg.join(timeout=2.0)
+
+    # aggregate stats ----------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        out: Dict[str, int] = {"commits": 0, "aborts": 0,
+                               "versioned_commits": 0, "ro_commits": 0,
+                               "mode_cas": 0}
+        for c in self._ctxs:
+            for k in out:
+                out[k] += c.stats[k]
+        out["mode_transitions"] = self.stats_mode_transitions
+        out["unversioned_buckets"] = self.stats_unversioned_buckets
+        out["ebr_freed"] = self.ebr.freed_count
+        out["mode"] = M.mode_name(self.mode_counter.load())
+        return out
+
+
+class _Tx:
+    """Handle passed to user transaction bodies."""
+
+    __slots__ = ("_tm", "_ctx")
+
+    def __init__(self, tm: Multiverse, ctx: _TxCtx):
+        self._tm = tm
+        self._ctx = ctx
+
+    def read(self, addr: int) -> Any:
+        return self._tm.tm_read(self._ctx, addr)
+
+    def write(self, addr: int, value: Any) -> None:
+        self._tm.tm_write(self._ctx, addr, value)
+
+    def alloc(self, n: int, init: Any = None) -> int:
+        return self._tm.tx_alloc(self._ctx, n, init)
+
+    @property
+    def read_count(self) -> int:
+        return self._ctx.read_cnt
+
+
+def run(tm, fn: Callable, tid: int = 0, max_retries: int = 0) -> Any:
+    """Retry loop (setjmp/longjmp analogue).  max_retries=0 -> unbounded.
+
+    Each call is a NEW transaction: per-transaction state (versioned flag,
+    attempt count) resets here and persists only across RETRIES of this
+    same operation — the paper's thread-locals are reset at line 10 of
+    Alg. 1 for a new transaction.  Any non-abort exception escaping the
+    body aborts the in-flight attempt (rollback + lock release) before
+    propagating, so user errors can never poison the TM.
+    """
+    c = tm.ctx(tid)
+    if hasattr(c, "versioned"):
+        c.versioned = False
+        c.no_versioning = False
+        c.initial_versioned_ts = None
+    c.attempts = 0
+    tries = 0
+    while True:
+        tx = tm.begin(tid)
+        try:
+            result = fn(tx)
+            tm._try_commit(tx._ctx if hasattr(tx, "_ctx") else tx.ctx)
+            return result
+        except AbortTx:
+            tries += 1
+            if max_retries and tries >= max_retries:
+                raise MaxRetriesExceeded(
+                    f"{tm.name}: txn exceeded {max_retries} retries")
+        except BaseException:
+            # user-code exception mid-attempt: roll back so the TM is not
+            # poisoned (locks held / writes unrolled), then propagate
+            try:
+                if getattr(c, "active", False):
+                    tm._abort(c)
+                elif hasattr(tm, "_rollback_abort") and (c.undo
+                                                         or c.write_map):
+                    tm._rollback_abort(c)
+            except AbortTx:
+                pass
+            except AttributeError:
+                pass
+            raise

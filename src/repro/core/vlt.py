@@ -1,0 +1,88 @@
+"""Version List Table (paper SS3.1, Fig. 2).
+
+Each bucket is a linked list of VLT nodes; a node holds (1) the head of a
+version list, (2) the address it tracks, (3) the next bucket node.  Version
+lists are linked lists of VListNode(older, timestamp, data, tbd), newest
+first.  The address's lock (same index) protects all VLT mutations.
+
+DELETED_TS marks versions rolled back by an aborted writer so concurrent
+traversals are never permanently blocked on a TBD mark (paper SS4.1).
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+DELETED_TS = -2
+
+
+class VListNode:
+    __slots__ = ("older", "timestamp", "data", "tbd", "freed")
+
+    def __init__(self, older, timestamp, data, tbd):
+        self.older = older
+        self.timestamp = timestamp
+        self.data = data
+        self.tbd = tbd
+        self.freed = False          # EBR poison bit (use-after-free checks)
+
+
+class VersionList:
+    __slots__ = ("head",)
+
+    def __init__(self, head: Optional[VListNode] = None):
+        self.head = head
+
+
+class VLTNode:
+    __slots__ = ("vlist", "addr", "next", "freed")
+
+    def __init__(self, vlist: VersionList, addr: int,
+                 nxt: Optional["VLTNode"]):
+        self.vlist = vlist
+        self.addr = addr
+        self.next = nxt
+        self.freed = False
+
+
+class VLT:
+    def __init__(self, buckets_bits: int):
+        self.size = 1 << buckets_bits
+        self._buckets: List[Optional[VLTNode]] = [None] * self.size
+
+    def get(self, bucket: int, addr: int) -> Optional[VersionList]:
+        """tryGetVList: walk the bucket list (caller saw a bloom hit)."""
+        node = self._buckets[bucket]
+        while node is not None:
+            assert not node.freed, "use-after-free: VLT node"
+            if node.addr == addr:
+                return node.vlist
+            node = node.next
+        return None
+
+    def insert(self, bucket: int, addr: int, vlist: VersionList) -> None:
+        """Prepend (caller holds the address lock)."""
+        self._buckets[bucket] = VLTNode(vlist, addr, self._buckets[bucket])
+
+    def take_bucket(self, bucket: int) -> Optional[VLTNode]:
+        """Detach the whole bucket (unversioning; caller holds the lock)."""
+        head = self._buckets[bucket]
+        self._buckets[bucket] = None
+        return head
+
+    def bucket_newest_ts(self, bucket: int) -> Optional[int]:
+        """Most recent (non-TBD) timestamp in the bucket, for the
+        unversioning heuristic (paper SS4.4)."""
+        newest = None
+        node = self._buckets[bucket]
+        while node is not None:
+            v = node.vlist.head
+            while v is not None and (v.tbd or v.timestamp == DELETED_TS):
+                v = v.older
+            if v is not None and (newest is None or v.timestamp > newest):
+                newest = v.timestamp
+            node = node.next
+        return newest
+
+    def nonempty_buckets(self):
+        return [i for i in range(self.size) if self._buckets[i] is not None]

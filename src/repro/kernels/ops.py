@@ -1,0 +1,91 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+These adapt model-layer shapes (GQA heads, parameter pytrees, ring dicts)
+to the flat kernel interfaces.  ``interpret`` defaults to True so the whole
+suite runs on CPU; TPU deployments flip it via KERNEL_INTERPRET=0.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_adamw as _fa
+from repro.kernels import flash_attention as _fl
+from repro.kernels import snapshot_select as _ss
+from repro.kernels import ssd_scan as _ssd
+
+INTERPRET = os.environ.get("KERNEL_INTERPRET", "1") != "0"
+
+
+def flash_attention(q, k, v, *, causal: bool, block_q: int = 128,
+                    block_k: int = 128):
+    """q: [B, S, H, D]; k, v: [B, Sk, KV, D] -> [B, S, H, D] (GQA)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * H, Sk, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * H, Sk, D)
+    o = _fl.flash_attention_nhd(qf, kf, vf, causal=causal,
+                                block_q=block_q, block_k=block_k,
+                                interpret=INTERPRET)
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(xh, dt, A, B_, C_, *, chunk: int = 256, init_state=None):
+    """Kernel chunk-scan; final state recomputed via the jnp path when a
+    carry is required (see ssd_scan.py)."""
+    assert init_state is None, "kernel path serves the no-carry hot loop"
+    y = _ssd.ssd_scan_pallas(xh, dt, A, B_, C_, chunk=chunk,
+                             interpret=INTERPRET)
+    return y, None
+
+
+def snapshot_select(ring, ts, read_clock):
+    """ring: [R, *shape] -> (value [*shape], ok)."""
+    R = ring.shape[0]
+    shape = ring.shape[1:]
+    n = 1
+    for s in shape:
+        n *= s
+    flat = ring.reshape(R, n)
+    tile = n
+    for cand in (2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0:
+            tile = cand
+            break
+    val, ok = _ss.snapshot_select_flat(flat, ts, read_clock, tile=tile,
+                                       interpret=INTERPRET)
+    return val.reshape(shape), ok
+
+
+def fused_adamw(p, g, m, v, ring, slot, *, lr, scale, count, b1, b2, eps,
+                wd):
+    """Pytree-leaf fused update.  p: any shape; ring: [R, *p.shape]|None."""
+    shape = p.shape
+    n = p.size
+    cnt = count.astype(jnp.float32)
+    b1c = 1 - b1 ** cnt
+    b2c = 1 - b2 ** cnt
+    tile = n
+    for cand in (2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0:
+            tile = cand
+            break
+    rf = ring.reshape(ring.shape[0], n) if ring is not None else None
+    p2, m2, v2, r2 = _fa.fused_adamw_flat(
+        p.reshape(n), g.reshape(n), m.reshape(n), v.reshape(n), rf,
+        jnp.asarray(slot, jnp.int32), lr=jnp.asarray(lr),
+        scale=jnp.asarray(scale), b1c=b1c, b2c=b2c, b1=b1, b2=b2, eps=eps,
+        wd=wd, tile=tile, interpret=INTERPRET)
+    p2 = p2.reshape(shape)
+    m2 = m2.reshape(shape)
+    v2 = v2.reshape(shape)
+    if ring is not None:
+        r2 = r2.reshape(ring.shape)
+    return p2, m2, v2, r2

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every kernel (the allclose targets of the tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NO_TS = -1
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, scale=None):
+    """q, k, v: [N, S, D] (kv pre-repeated for GQA)."""
+    N, Sq, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("nqd,nkd->nqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("nqk,nkd->nqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_scan_ref(xh, dt, A, B_, C_):
+    """Sequential (timestep-by-timestep) SSD recurrence — the ground truth
+    the chunked forms must match.  xh: [B, S, H, P]; dt: [B, S, H];
+    A: [H]; B_, C_: [B, S, N].  Returns (y, final_state [B, H, N, P])."""
+    Bsz, S, H, Pd = xh.shape
+    N = B_.shape[-1]
+
+    def step(state, t):
+        x_t, dt_t, b_t, c_t = t
+        dA = jnp.exp(dt_t * A[None, :])                        # [B, H]
+        upd = jnp.einsum("bn,bhp->bhnp", b_t.astype(jnp.float32),
+                         x_t.astype(jnp.float32) * dt_t[..., None])
+        state = state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhnp,bn->bhp", state, c_t.astype(jnp.float32))
+        return state, y
+
+    state0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    xs = (xh.swapaxes(0, 1), dt.swapaxes(0, 1), B_.swapaxes(0, 1),
+          C_.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(xh.dtype), state
+
+
+def snapshot_select_ref(ring, ts, read_clock):
+    """ring: [R, n]; ts: [R].  Newest slot with NO_TS < ts <= clock."""
+    valid = jnp.logical_and(ts != NO_TS, ts <= read_clock)
+    masked = jnp.where(valid, ts, NO_TS)
+    idx = jnp.argmax(masked)
+    ok = jnp.any(valid)
+    return ring[idx], ok
+
+
+def fused_adamw_ref(p, g, m, v, ring, slot, *, lr, scale, b1c, b2c, b1, b2,
+                    eps, wd):
+    g = g.astype(jnp.float32) * scale
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    step = m2 / b1c / (jnp.sqrt(v2 / b2c) + eps) + wd * p.astype(
+        jnp.float32)
+    p2 = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+    ring2 = None
+    if ring is not None:
+        ring2 = ring.at[slot].set(p2.astype(ring.dtype))
+    return p2, m2, v2, ring2

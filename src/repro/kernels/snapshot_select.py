@@ -1,0 +1,61 @@
+"""snapshot_select — the MVStore versioned read, as a Pallas TPU kernel.
+
+The paper's hot read path is the version-list traversal ("newest version
+with ts <= read_clock").  TPU adaptation: the ring timestamps are SCALAR-
+PREFETCHED (SMEM) and the slot selection happens inside the BlockSpec
+index map, so the kernel fetches ONLY the selected version's tiles from
+HBM — the traversal costs zero extra HBM traffic, unlike a naive gather
+that would read all R slots.  This is the Pallas analogue of following
+exactly one list pointer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NO_TS = -1
+
+
+def _select_slot(ts, clock):
+    """Newest slot with NO_TS < ts <= clock (0 if none: caller checks ok)."""
+    valid = jnp.logical_and(ts != NO_TS, ts <= clock)
+    masked = jnp.where(valid, ts, NO_TS)
+    return jnp.argmax(masked).astype(jnp.int32)
+
+
+def _copy_kernel(ts_ref, clock_ref, ring_ref, o_ref):
+    del ts_ref, clock_ref
+    o_ref[...] = ring_ref[0]
+
+
+def snapshot_select_flat(ring, ts, read_clock, *, tile: int = 2048,
+                         interpret: bool = True):
+    """ring: [R, n]; ts: [R] int32; read_clock: scalar int32.
+
+    Returns (value [n], ok bool).  Only the selected slot's row is read.
+    """
+    R, n = ring.shape
+    t = min(tile, n)
+    assert n % t == 0, (n, t)
+    grid = (n // t,)
+
+    def ring_index(i, ts_ref, clock_ref):
+        return (_select_slot(ts_ref[...], clock_ref[0]), i)
+
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, t), ring_index)],
+            out_specs=pl.BlockSpec((t,), lambda i, ts_ref, clock_ref: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n,), ring.dtype),
+        interpret=interpret,
+    )(ts, jnp.asarray(read_clock, jnp.int32).reshape(1), ring)
+    ok = jnp.any(jnp.logical_and(ts != NO_TS, ts <= read_clock))
+    return out, ok

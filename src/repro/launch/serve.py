@@ -1,0 +1,156 @@
+"""Serving driver: batched prefill+decode against MVStore snapshots.
+
+The server is the paper's *versioned reader*: every request batch resolves
+model parameters at a read clock via `mv_snapshot`, so serving can share
+the store with a live trainer (serve-from-trainer) without ever reading a
+torn update.  When the store is unversioned (Mode Q) and the trainer
+commits mid-request, the read returns ok=False and the batch retries with
+a fresh clock — the reader abort path; sustained aborts flip the store to
+Mode U through the controller heuristics.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --requests 8 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import queue
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCH_IDS, MVStoreConfig, ParallelConfig,
+                           ShapeConfig, get_config, smoke_config)
+from repro.core import mvcontroller, mvstore
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import default_rules, use_rules
+from repro.models import model_zoo as zoo
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int
+    out: Optional[np.ndarray] = None
+
+
+class Server:
+    """Slot-batched server: fixed decode batch, per-batch snapshot read."""
+
+    def __init__(self, cfg, *, batch: int, prompt_len: int, max_len: int,
+                 mvcfg=None, mesh=None, controller=None, seed: int = 0,
+                 params=None, mv_state=None):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.pcfg = ParallelConfig(
+            remat="none", attn_block_q=min(512, prompt_len),
+            attn_block_k=min(512, prompt_len))
+        self.mvcfg = mvcfg or MVStoreConfig(mode="Q")
+        self.rules = default_rules(self.mesh)
+        if batch % self.mesh.devices.size != 0:
+            self.rules = self.rules.with_(batch=None)
+        self.controller = controller
+        self.reader = controller.reader() if controller else None
+        if mv_state is None:
+            with use_rules(self.rules, self.mesh):
+                params = params if params is not None else zoo.init_params(
+                    cfg, jax.random.PRNGKey(seed))
+            versioned = "all" if self.mvcfg.mode in ("U",) else "none"
+            mv_state = mvstore.mv_init(params, self.mvcfg,
+                                       versioned=versioned)
+        self.mv_state = mv_state
+        self._prefill = jax.jit(steps_mod.make_prefill_step(
+            cfg, self.pcfg, self.mvcfg, self.rules, self.mesh))
+        self._decode = jax.jit(steps_mod.make_decode_step(
+            cfg, self.pcfg, self.mvcfg, self.rules, self.mesh),
+            donate_argnums=(1,))
+        self.aborts = 0
+
+    def _snapshot_clock(self) -> jnp.ndarray:
+        return self.mv_state.clock
+
+    def serve_batch(self, prompts: np.ndarray, max_new: int
+                    ) -> np.ndarray:
+        """prompts: [B, S] int32 -> generated [B, max_new] int32."""
+        B, S = prompts.shape
+        while True:
+            rc = self._snapshot_clock()
+            if self.reader is not None:
+                self.reader.begin(int(rc))
+            logits, cache, cache_len, ok = self._prefill(
+                self.mv_state, {"tokens": jnp.asarray(prompts)}, rc)
+            if bool(ok):
+                break
+            self.aborts += 1
+            if self.reader is not None:
+                self.reader.on_abort(S * B)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [toks]
+        # pad the cache to max_len for decode appends
+        cache = jax.tree.map(
+            lambda x: _pad_seq(x, self.max_len) if x.ndim >= 3 else x,
+            cache)
+        for _ in range(max_new - 1):
+            logits, cache, cache_len, ok = self._decode(
+                self.mv_state, cache, cache_len, toks, rc)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(toks)
+        if self.reader is not None:
+            self.reader.on_commit(B * (S + max_new), int(rc))
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+def _pad_seq(x, max_len):
+    """Pad a [.., B, S, d] or [B, S, d] cache leaf's S dim to max_len."""
+    seq_axis = x.ndim - 2
+    cur = x.shape[seq_axis]
+    if cur >= max_len:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[seq_axis] = (0, max_len - cur)
+    return jnp.pad(x, pad)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.frontend != "none" or cfg.is_encdec:
+        print(f"note: {args.arch} needs frontend embeds; serving the "
+              "text path only")
+    server = Server(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                    max_len=args.prompt_len + args.gen)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    done = 0
+    while done < args.requests:
+        prompts = rng.integers(
+            0, cfg.vocab_size, size=(args.batch, args.prompt_len),
+            dtype=np.int32)
+        out = server.serve_batch(prompts, args.gen)
+        done += args.batch
+        print(f"served {done}/{args.requests} "
+              f"(batch out shape {out.shape})", flush=True)
+    dt = time.time() - t0
+    print(f"done: {done} requests x {args.gen} tokens in {dt:.1f}s "
+          f"({done * args.gen / dt:.1f} tok/s), aborts={server.aborts}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

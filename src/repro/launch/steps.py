@@ -1,0 +1,244 @@
+"""Step functions: train / prefill / decode, with MVStore commit semantics.
+
+These are the functions the dry-run lowers and the drivers execute.  The
+MVStore mode is baked in at trace time (the compiled step's *local mode*,
+DESIGN.md SS2); the controller swaps variants at step boundaries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, MVStoreConfig, ParallelConfig,
+                                RunConfig, ShapeConfig)
+from repro.core import mvstore
+from repro.core.mvstore import MVStoreState
+from repro.launch.sharding import (Rules, abstract_params, param_specs,
+                                   shard_act, use_rules)
+from repro.models import model_zoo as zoo
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    mv: MVStoreState
+    opt: adamw.AdamWState
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                    mvcfg: MVStoreConfig, opt_cfg: adamw.AdamWConfig,
+                    rules: Optional[Rules] = None, mesh=None):
+    """Returns train_step(state, batch) -> (state', metrics)."""
+
+    def loss_of(params, mb):
+        return zoo.loss_fn(params, mb, cfg, pcfg)
+
+    specs = (param_specs(zoo.model_meta(cfg), rules)
+             if rules is not None and mesh is not None else None)
+
+    def constrain(tree):
+        """Pin gradient/accumulator sharding to the parameter sharding —
+        GSPMD otherwise leaves the scan-carried accumulator unconstrained
+        and can replicate multi-GB gradient buffers."""
+        if specs is None:
+            return tree
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)), tree, specs)
+
+    def train_step(state: TrainState, batch):
+        with use_rules(rules, mesh):
+            params = state.mv.live
+            M = pcfg.microbatches
+            if M == 1:
+                loss, grads = jax.value_and_grad(loss_of)(params, batch)
+                grads = constrain(jax.tree.map(
+                    lambda g: g.astype(jnp.float32), grads))
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                    batch)
+
+                def mb_body(acc, mb):
+                    loss, g = jax.value_and_grad(loss_of)(params, mb)
+                    acc = constrain(jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), acc, g))
+                    return acc, loss
+
+                acc0 = constrain(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                if pcfg.probe_unroll:
+                    losses = []
+                    grads = acc0
+                    for i in range(M):
+                        grads, li = mb_body(
+                            grads, jax.tree.map(lambda x: x[i], mbs))
+                        losses.append(li)
+                    losses = jnp.stack(losses)
+                else:
+                    grads, losses = jax.lax.scan(mb_body, acc0, mbs)
+                grads = jax.tree.map(lambda g: g / M, grads)
+                loss = jnp.mean(losses)
+
+            new_params, new_opt = adamw.apply(grads, state.opt, params,
+                                              opt_cfg)
+            if mvcfg.enabled and mvcfg.fused_commit and state.mv.ring:
+                new_mv = _fused_commit(state.mv, grads, state.opt, params,
+                                       opt_cfg, mvcfg)
+                new_opt = new_mv.pop("opt")
+                new_mv = new_mv["mv"]
+            elif mvcfg.enabled:
+                new_mv = mvstore.mv_commit(state.mv, new_params,
+                                           local_mode=mvcfg.mode, cfg=mvcfg)
+            else:
+                new_mv = state.mv._replace(live=new_params,
+                                           clock=state.mv.clock + 1)
+            metrics = {"loss": loss, "clock": new_mv.clock}
+            return TrainState(new_mv, new_opt), metrics
+
+    return train_step
+
+
+def _fused_commit(mv, grads, opt, params, opt_cfg, mvcfg):
+    """Fused AdamW + versioned ring write via the Pallas kernel path
+    (beyond-paper SSPerf optimization; ref semantics = adamw.apply +
+    mv_commit)."""
+    from repro.kernels import ops as kops
+    new_clock = mv.clock + 1
+    slot = (new_clock % mvcfg.ring_slots).astype(jnp.int32)
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    gflat = jax.tree.leaves(grads)
+    mflat = jax.tree.leaves(opt.mu)
+    vflat = jax.tree.leaves(opt.nu)
+    count = opt.count + 1
+    gnorm = adamw.global_norm(grads)
+    scale = jnp.minimum(1.0, opt_cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = adamw.schedule(count.astype(jnp.float32), opt_cfg)
+    new_p, new_m, new_v, new_ring, new_ts = [], [], [], {}, {}
+    for (pth, p), g, m, v in zip(flat, gflat, mflat, vflat):
+        path = jax.tree_util.keystr(pth)
+        ring = mv.ring.get(path)
+        p2, m2, v2, r2 = kops.fused_adamw(
+            p, g, m, v, ring, slot, lr=lr, scale=scale, count=count,
+            b1=opt_cfg.b1, b2=opt_cfg.b2, eps=opt_cfg.eps,
+            wd=opt_cfg.weight_decay if p.ndim >= 2 else 0.0)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+        if ring is not None:
+            new_ring[path] = r2
+            new_ts[path] = jax.lax.dynamic_update_index_in_dim(
+                mv.ring_ts[path], new_clock.astype(jnp.int32), slot, 0)
+    params2 = jax.tree.unflatten(tdef, new_p)
+    mu2 = jax.tree.unflatten(tdef, new_m)
+    nu2 = jax.tree.unflatten(tdef, new_v)
+    return {"mv": MVStoreState(params2, new_ring, new_ts, new_clock),
+            "opt": adamw.AdamWState(mu2, nu2, count)}
+
+
+# ---------------------------------------------------------------------------
+# serve (prefill / decode) — versioned reads
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                      mvcfg: MVStoreConfig, rules: Optional[Rules] = None,
+                      mesh=None):
+    def prefill_step(mv_state: MVStoreState, batch, read_clock):
+        with use_rules(rules, mesh):
+            params, ok = _read_params(mv_state, read_clock, mvcfg)
+            logits, cache, cache_len = zoo.prefill_fn(params, batch, cfg,
+                                                      pcfg)
+            return logits, cache, cache_len, ok
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                     mvcfg: MVStoreConfig, rules: Optional[Rules] = None,
+                     mesh=None):
+    def decode_step(mv_state: MVStoreState, cache, cache_len, token,
+                    read_clock):
+        with use_rules(rules, mesh):
+            params, ok = _read_params(mv_state, read_clock, mvcfg)
+            logits, cache, cache_len = zoo.decode_fn(
+                params, cache, cache_len, token, cfg, pcfg)
+            return logits, cache, cache_len, ok
+
+    return decode_step
+
+
+def _read_params(mv_state: MVStoreState, read_clock, mvcfg: MVStoreConfig):
+    if not mvcfg.enabled:
+        return mv_state.live, jnp.asarray(True)
+    return mvstore.mv_snapshot(
+        mv_state, read_clock,
+        assume_versioned=mvcfg.mode in ("U", "UtoQ"),
+        impl="pallas" if mvcfg.fused_commit else "xla")
+
+
+# ---------------------------------------------------------------------------
+# abstract state builders (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def train_state_specs(cfg: ModelConfig, mvcfg: MVStoreConfig, rules: Rules,
+                      mesh, opt_cfg: adamw.AdamWConfig):
+    """ShapeDtypeStructs for TrainState under the given sharding rules."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    meta = zoo.model_meta(cfg)
+    live = abstract_params(meta, rules, mesh)
+    moments_meta = jax.tree.map(
+        lambda m: m.__class__(m.shape, m.axes, init="zeros",
+                              dtype=opt_cfg.moment_dtype),
+        meta, is_leaf=lambda x: hasattr(x, "axes"))
+    mu = abstract_params(moments_meta, rules, mesh)
+    nu = abstract_params(moments_meta, rules, mesh)
+    scal = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    ring, ring_ts = {}, {}
+    if mvcfg.enabled and mvcfg.mode in ("U", "QtoU", "UtoQ"):
+        flat, _ = jax.tree_util.tree_flatten_with_path(live)
+        for p, leaf in flat:
+            path = jax.tree_util.keystr(p)
+            rspec = P(*((None,) + tuple(leaf.sharding.spec)))
+            ring[path] = jax.ShapeDtypeStruct(
+                (mvcfg.ring_slots,) + leaf.shape, leaf.dtype,
+                sharding=NamedSharding(mesh, rspec))
+            ring_ts[path] = jax.ShapeDtypeStruct(
+                (mvcfg.ring_slots,), jnp.int32,
+                sharding=NamedSharding(mesh, P(None)))
+    mv = MVStoreState(live=live, ring=ring, ring_ts=ring_ts, clock=scal)
+    opt = adamw.AdamWState(mu=mu, nu=nu, count=scal)
+    return TrainState(mv=mv, opt=opt)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules, mesh):
+    from jax.sharding import NamedSharding
+
+    axes = zoo.cache_axes(cfg)
+    # shapes from a zero-cost eval_shape of init_cache
+    struct = jax.eval_shape(
+        lambda: zoo.init_cache(cfg, shape.global_batch, shape.seq_len,
+                               jnp.bfloat16))
+
+    def one(leaf_struct, ax):
+        return jax.ShapeDtypeStruct(
+            leaf_struct.shape, leaf_struct.dtype,
+            sharding=NamedSharding(mesh, rules.spec(ax)))
+
+    def walk(s, a):
+        if isinstance(s, dict):
+            return {k: walk(s[k], a[k]) for k in s}
+        return one(s, a)
+
+    return walk(struct, axes)

@@ -1,0 +1,15 @@
+"""Model zoo: unified decoder/enc-dec stacks for the 10 assigned archs."""
+from repro.models.model_zoo import (  # noqa: F401
+    batch_shapes,
+    cache_axes,
+    concrete_batch,
+    decode_fn,
+    init_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    model_flops,
+    model_meta,
+    param_counts,
+    prefill_fn,
+)

@@ -1,0 +1,234 @@
+"""Attention: GQA with a blockwise (flash-style) XLA lowering.
+
+The training/prefill path never materializes the full [S, S] score matrix:
+it scans over (q-block, kv-block) pairs — only the causally-reachable lower
+triangle of block pairs — maintaining online-softmax statistics.  This is
+FlashAttention expressed in XLA ops, so the multi-pod dry-run's
+cost_analysis reports the true S^2/2 causal FLOPs and a VMEM-sized working
+set (honest roofline inputs).  The Pallas kernel in kernels/flash_attention
+is the TPU-target implementation of the same schedule; ``impl='pallas'``
+switches to it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _pairs(nq: int, nk: int, causal: bool) -> np.ndarray:
+    """(qi, ki) schedule; causal keeps only the reachable lower triangle."""
+    out = []
+    for qi in range(nq):
+        for ki in range(nk):
+            if causal and ki > qi:
+                continue
+            out.append((qi, ki))
+    return np.asarray(out, dtype=np.int32)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, block_q: int = 1024,
+                        block_k: int = 1024, scale: Optional[float] = None,
+                        unroll: bool = False):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, KV, D] -> [B, Sq, H, D].
+
+    H must be a multiple of KV (GQA).  Block sizes are clamped to the
+    sequence lengths; causal requires Sq == Sk and equal blocks.
+    ``unroll`` replaces the pair scan with a python loop (roofline probes).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if causal:
+        assert Sq == Sk, "causal blockwise attention needs Sq == Sk"
+        bq = bk = min(bq, bk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    # [n, B, KV, G|1, T, D] block-major layouts
+    qb = q.reshape(B, nq, bq, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nk, bk, KV, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, KV, D).transpose(1, 0, 3, 2, 4)
+
+    tri = jnp.tril(jnp.ones((bq, bk), bool)) if causal else None
+
+    if unroll:
+        rows = []
+        for qi in range(nq):
+            m = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+            l = jnp.zeros((B, KV, G, bq), jnp.float32)
+            acc = jnp.zeros((B, KV, G, bq, D), jnp.float32)
+            for ki in range(qi + 1 if causal else nk):
+                s = jnp.einsum("bkgtd,bkud->bkgtu", qb[qi], kb[ki],
+                               preferred_element_type=jnp.float32) * scale
+                if causal and ki == qi:
+                    s = jnp.where(tri, s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l = l * corr + jnp.sum(p, axis=-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bkgtu,bkud->bkgtd", p.astype(v.dtype), vb[ki],
+                    preferred_element_type=jnp.float32)
+                m = m_new
+            rows.append(acc / jnp.maximum(l[..., None], 1e-30))
+        out = jnp.stack(rows)                     # [nq, B, KV, G, bq, D]
+        out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, D)
+        return out.astype(q.dtype)
+
+    acc0 = jnp.zeros((nq, B, KV, G, bq, D), jnp.float32)
+    m0 = jnp.full((nq, B, KV, G, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, B, KV, G, bq), jnp.float32)
+
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, 0, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, ki, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, ki, 0, keepdims=False)
+        s = jnp.einsum("bkgtd,bkud->bkgtu", qblk, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = jnp.where(jnp.logical_or(qi != ki, tri), s, NEG_INF)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_old * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgtu,bkud->bkgtd", p.astype(v.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        a_new = a_old * corr[..., None] + pv
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        return (acc, m, l), None
+
+    pairs = jnp.asarray(_pairs(nq, nk, causal))
+    # checkpoint the pair body: its backward otherwise saves the f32
+    # [B,KV,G,Tq,Tk] score/softmax tensors for EVERY pair (n^2/2 blocks of
+    # S^2 memory — exactly what blockwise attention exists to avoid)
+    (acc, _, l), _ = jax.lax.scan(jax.checkpoint(step), (acc0, m0, l0),
+                                  pairs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # back to [B, Sq, H, D]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, causal: bool, scale: Optional[float] = None):
+    """Reference: full score matrix (small shapes / oracles only)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("btkgd,bukd->bkgtu", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgtu,bukd->btkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool, impl: str = "blockwise",
+              block_q: int = 1024, block_k: int = 1024,
+              scale: Optional[float] = None, unroll: bool = False):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, scale=scale)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal,
+                                    block_q=block_q, block_k=block_k)
+    return blockwise_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, scale=scale, unroll=unroll)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     scale: Optional[float] = None, chunk: int = 0,
+                     unroll: bool = False):
+    """Single-token decode vs a KV cache.
+
+    q: [B, H, D]; k_cache/v_cache: [B, S, KV, D]; cache_len: [B] int32
+    (number of valid positions).  ``chunk`` > 0 scans the KV in chunks
+    (long-context; keeps the score row tiled).
+    """
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, KV, G, D)
+
+    if chunk and S % chunk == 0 and S > chunk:
+        nc = S // chunk
+        kb = k_cache.reshape(B, nc, chunk, KV, D).transpose(1, 0, 3, 2, 4)
+        vb = v_cache.reshape(B, nc, chunk, KV, D).transpose(1, 0, 3, 2, 4)
+
+        if unroll:
+            m = jnp.full((B, KV, G), NEG_INF, jnp.float32)
+            l = jnp.zeros((B, KV, G), jnp.float32)
+            acc = jnp.zeros((B, KV, G, D), jnp.float32)
+            for ci in range(nc):
+                s = jnp.einsum("bkgd,bkud->bkgu", qg, kb[ci],
+                               preferred_element_type=jnp.float32) * scale
+                pos = ci * chunk + jnp.arange(chunk)
+                s = jnp.where(pos[None, None, None, :]
+                              < cache_len[:, None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l = l * corr + jnp.sum(p, axis=-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bkgu,bkud->bkgd", p.astype(vb.dtype), vb[ci],
+                    preferred_element_type=jnp.float32)
+                m = m_new
+            out = acc / jnp.maximum(l[..., None], 1e-30)
+            return out.reshape(B, H, D).astype(q.dtype)
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kblk, vblk, ci = xs
+            s = jnp.einsum("bkgd,bkud->bkgu", qg, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            pos = ci * chunk + jnp.arange(chunk)
+            s = jnp.where(pos[None, None, None, :] < cache_len[:, None, None,
+                                                              None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgu,bkud->bkgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), (kb, vb, jnp.arange(nc)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(B, H, D).astype(q.dtype)
+
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    s = jnp.where(pos[None, None, None, :] < cache_len[:, None, None, None],
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,198 @@
+"""Decoder sub-layers: attention / mamba mixers + dense/MoE FFN, pre-norm."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.launch.sharding import ParamMeta, shard_act
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.common import apply_rope, rmsnorm, rmsnorm_meta
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-layer
+# ---------------------------------------------------------------------------
+
+
+def attn_meta(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    m = {
+        "w_q": ParamMeta((d, h * dh), ("fsdp", "tp"), dtype=cfg.dtype),
+        "w_k": ParamMeta((d, kv * dh), ("fsdp", "kv_flat"), dtype=cfg.dtype),
+        "w_v": ParamMeta((d, kv * dh), ("fsdp", "kv_flat"), dtype=cfg.dtype),
+        "w_o": ParamMeta((h * dh, d), ("tp", "fsdp"), dtype=cfg.dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        m["b_q"] = ParamMeta((h * dh,), ("tp",), init="zeros",
+                             dtype=cfg.dtype)
+        m["b_k"] = ParamMeta((kv * dh,), ("kv_flat",), init="zeros",
+                             dtype=cfg.dtype)
+        m["b_v"] = ParamMeta((kv * dh,), ("kv_flat",), init="zeros",
+                             dtype=cfg.dtype)
+    return m
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, pcfg: ParallelConfig, *,
+               positions, causal: bool = True,
+               kv_source: Optional[jnp.ndarray] = None,
+               use_rope: bool = True, want_cache: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    x: [B, S, d].  ``kv_source`` switches to cross-attention.
+    Returns y or (y, (k_flat, v_flat)) when ``want_cache``.
+    """
+    B, S, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    src = x if kv_source is None else kv_source
+    q = x @ p["w_q"]
+    k = src @ p["w_k"]
+    v = src @ p["w_v"]
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = shard_act(q, ("batch", None, "tp"))
+    k = shard_act(k, ("batch", None, "kv_flat"))
+    v = shard_act(v, ("batch", None, "kv_flat"))
+    qh = q.reshape(B, S, h, dh)
+    kh = k.reshape(B, src.shape[1], kv, dh)
+    vh = v.reshape(B, src.shape[1], kv, dh)
+    if use_rope:
+        qh = apply_rope(qh, positions, cfg.rope_theta)
+        kh = apply_rope(kh, positions if kv_source is None
+                        else jnp.arange(src.shape[1])[None], cfg.rope_theta)
+    o = attn_mod.attention(qh, kh, vh, causal=causal, impl=pcfg.attn_impl,
+                           block_q=pcfg.attn_block_q,
+                           block_k=pcfg.attn_block_k,
+                           unroll=pcfg.probe_unroll)
+    y = o.reshape(B, S, h * dh) @ p["w_o"]
+    y = shard_act(y, ("batch", None, None))
+    if want_cache:
+        return y, (kh.reshape(B, -1, kv * dh), vh.reshape(B, -1, kv * dh))
+    return y
+
+
+def attn_decode(p, x, cfg: ModelConfig, pcfg: ParallelConfig, *,
+                cache_k, cache_v, cache_len,
+                cross: bool = False, cross_len=None):
+    """One-token decode.  x: [B, 1, d]; cache_*: [B, Smax, kv*dh];
+    cache_len: [B] valid positions.  Self-attention appends to the cache;
+    cross-attention reads it.  Returns (y, cache_k, cache_v)."""
+    B = x.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg)
+    qh = q.reshape(B, 1, h, dh)
+    if not cross:
+        qh = apply_rope(qh, cache_len[:, None], cfg.rope_theta)
+        kh = apply_rope(k.reshape(B, 1, kv, dh), cache_len[:, None],
+                        cfg.rope_theta)
+        bidx = jnp.arange(B)
+        cache_k = cache_k.at[bidx, cache_len].set(
+            kh.reshape(B, kv * dh).astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, cache_len].set(
+            v.reshape(B, kv * dh).astype(cache_v.dtype))
+        valid = cache_len + 1
+    else:
+        valid = cross_len
+    S = cache_k.shape[1]
+    kc = cache_k.reshape(B, S, kv, dh)
+    vc = cache_v.reshape(B, S, kv, dh)
+    o = attn_mod.decode_attention(qh[:, 0], kc, vc, valid,
+                                  chunk=pcfg.decode_attn_chunk,
+                                  unroll=pcfg.probe_unroll)
+    y = o.reshape(B, 1, h * dh) @ p["w_o"]
+    return shard_act(y, ("batch", None, None)), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Unified sub-layer (mixer + optional FFN), used by the scanned stacks
+# ---------------------------------------------------------------------------
+
+
+def sublayer_meta(cfg: ModelConfig, kind: Tuple[str, str]) -> dict:
+    mixer, ffn = kind
+    d = cfg.d_model
+    m = {"norm_mixer": rmsnorm_meta(d)}
+    if mixer == "attn":
+        m["attn"] = attn_meta(cfg)
+    else:
+        m["mamba"] = mamba_mod.mamba_meta(d, cfg.mamba, cfg.dtype)
+    if ffn == "dense":
+        m["ffn"] = ffn_mod.ffn_meta(d, cfg.d_ff, cfg.dtype)
+        m["norm_ffn"] = rmsnorm_meta(d)
+    elif ffn == "moe":
+        m["moe"] = moe_mod.moe_meta(d, cfg.moe, cfg.dtype)
+        m["norm_ffn"] = rmsnorm_meta(d)
+    return m
+
+
+def sublayer_apply(p, x, kind, cfg: ModelConfig, pcfg: ParallelConfig, *,
+                   positions, cache=None, cache_len=None,
+                   want_cache: bool = False, moe_groups=None):
+    """Apply one (mixer, ffn) sub-layer.
+
+    Sequence mode: cache is None (train) or absent-but-wanted (prefill).
+    Decode mode: cache is this sub-layer's state dict; returns new cache.
+    Returns (y, new_cache_or_None, aux_loss).
+    """
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = rmsnorm(x, p["norm_mixer"], cfg.rms_eps)
+    decode = cache is not None and x.shape[1] == 1
+
+    if mixer == "attn":
+        if decode:
+            y, ck, cv = attn_decode(p["attn"], h, cfg, pcfg,
+                                    cache_k=cache["k"], cache_v=cache["v"],
+                                    cache_len=cache_len)
+            new_cache = {"k": ck, "v": cv}
+        elif want_cache:
+            y, (ck, cv) = attn_apply(p["attn"], h, cfg, pcfg,
+                                     positions=positions, want_cache=True)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            y = attn_apply(p["attn"], h, cfg, pcfg, positions=positions)
+    else:
+        if decode or want_cache:
+            mstate = mamba_mod.MambaState(**cache) if cache is not None \
+                else None
+            if mstate is None and want_cache:
+                mstate = mamba_mod.mamba_init_state(
+                    x.shape[0], cfg.d_model, cfg.mamba, x.dtype)
+            y, mnew = mamba_mod.mamba_apply(
+                p["mamba"], h, cfg.mamba, rms_eps=cfg.rms_eps, state=mstate,
+                remat_chunk=pcfg.remat != "none",
+                unroll=pcfg.probe_unroll)
+            new_cache = dict(mnew._asdict())
+        else:
+            y = mamba_mod.mamba_apply(p["mamba"], h, cfg.mamba,
+                                      rms_eps=cfg.rms_eps,
+                                      remat_chunk=pcfg.remat != "none",
+                                      unroll=pcfg.probe_unroll)
+    x = x + y
+
+    if ffn == "dense":
+        h = rmsnorm(x, p["norm_ffn"], cfg.rms_eps)
+        x = x + ffn_mod.ffn_apply(p["ffn"], h)
+    elif ffn == "moe":
+        h = rmsnorm(x, p["norm_ffn"], cfg.rms_eps)
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg.moe,
+                                   capacity_factor=pcfg.moe_capacity_factor,
+                                   groups=moe_groups)
+        x = x + y
+    return x, new_cache, aux

@@ -1,0 +1,84 @@
+"""Shared model components: norms, RoPE, losses, dtype helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import ParamMeta
+
+
+def rmsnorm_meta(d: int) -> ParamMeta:
+    return ParamMeta((d,), (None,), init="ones", dtype="float32")
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, vocab_size: int, z_loss: float = 1e-4):
+    """Cross entropy in f32 over a (possibly vocab-sharded) logits tensor.
+
+    ``vocab_size`` masks out padded vocab rows (Megatron-style vocab pad).
+    Returns mean loss over tokens.
+    """
+    lf = logits.astype(jnp.float32)
+    pad = lf.shape[-1] - vocab_size
+    if pad > 0:
+        mask = jnp.arange(lf.shape[-1]) < vocab_size
+        lf = jnp.where(mask, lf, -1e30)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    shifted = lf - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) \
+        + jax.lax.stop_gradient(m)[..., 0]
+    # one-hot contraction (not take_along_axis): stays elementwise + a
+    # reduction over the (possibly model-sharded) vocab dim, so GSPMD only
+    # needs an all-reduce — never an all-gather of the logits.
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+    label_logit = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - label_logit
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse * lse)
+    return loss
+
+
+def count_params(tree) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(tree)))
+
+
+def model_flops_per_token(n_params_active: int) -> int:
+    """The 6*N rule (fwd+bwd) per token; callers scale by tokens/step."""
+    return 6 * n_params_active

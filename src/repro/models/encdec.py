@@ -1,0 +1,176 @@
+"""Encoder-decoder (seamless-m4t): bidirectional encoder over stub frame
+embeddings, causal decoder with cross-attention.  Both stacks are scanned."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.launch.sharding import ParamMeta, shard_act, stack_meta
+from repro.models import blocks
+from repro.models import ffn as ffn_mod
+from repro.models.common import rmsnorm, rmsnorm_meta, softmax_xent
+from repro.models.transformer import (VOCAB_PAD_MULTIPLE, embed_lookup,
+                                      lm_logits)
+
+
+def encdec_meta(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    vpad = cfg.padded_vocab(VOCAB_PAD_MULTIPLE)
+    enc_layer = {
+        "norm_attn": rmsnorm_meta(d),
+        "attn": blocks.attn_meta(cfg),
+        "norm_ffn": rmsnorm_meta(d),
+        "ffn": ffn_mod.ffn_meta(d, cfg.d_ff, cfg.dtype),
+    }
+    dec_layer = {
+        "norm_self": rmsnorm_meta(d),
+        "self_attn": blocks.attn_meta(cfg),
+        "norm_cross": rmsnorm_meta(d),
+        "cross_attn": blocks.attn_meta(cfg, cross=True),
+        "norm_ffn": rmsnorm_meta(d),
+        "ffn": ffn_mod.ffn_meta(d, cfg.d_ff, cfg.dtype),
+    }
+    return {
+        "embed": ParamMeta((vpad, d), ("fsdp", "tp"), init="embed",
+                           dtype=cfg.dtype),
+        "encoder": stack_meta(enc_layer, cfg.n_encoder_layers),
+        "enc_norm": rmsnorm_meta(d),
+        "decoder": stack_meta(dec_layer, cfg.n_layers),
+        "final_norm": rmsnorm_meta(d),
+        "lm_head": ParamMeta((d, vpad), ("fsdp", "vocab"), dtype=cfg.dtype),
+    }
+
+
+def encode(params, frame_embeds, cfg: ModelConfig, pcfg: ParallelConfig):
+    """frame_embeds: [B, F, d] (stub audio frontend output)."""
+    h = shard_act(frame_embeds, ("batch", None, None))
+    F = h.shape[1]
+    positions = jnp.arange(F)[None, :]
+
+    def body(x, lp):
+        y = blocks.attn_apply(lp["attn"],
+                              rmsnorm(x, lp["norm_attn"], cfg.rms_eps),
+                              cfg, pcfg, positions=positions, causal=False)
+        x = x + y
+        x = x + ffn_mod.ffn_apply(
+            lp["ffn"], rmsnorm(x, lp["norm_ffn"], cfg.rms_eps))
+        return x, None
+
+    if pcfg.remat == "block":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return rmsnorm(h, params["enc_norm"], cfg.rms_eps)
+
+
+def decode_seq(params, tokens, enc_out, cfg: ModelConfig,
+               pcfg: ParallelConfig, *, want_cache: bool = False):
+    """Full-sequence decoder pass (train / prefill)."""
+    h = embed_lookup(params["embed"], tokens, pcfg)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        y = blocks.attn_apply(
+            lp["self_attn"], rmsnorm(x, lp["norm_self"], cfg.rms_eps),
+            cfg, pcfg, positions=positions, causal=True,
+            want_cache=want_cache)
+        if want_cache:
+            y, (sk, sv) = y
+        x = x + y
+        hc = rmsnorm(x, lp["norm_cross"], cfg.rms_eps)
+        yc = blocks.attn_apply(lp["cross_attn"], hc, cfg, pcfg,
+                               positions=positions, causal=False,
+                               kv_source=enc_out, use_rope=False,
+                               want_cache=want_cache)
+        if want_cache:
+            yc, (ck, cv) = yc
+        x = x + yc
+        x = x + ffn_mod.ffn_apply(
+            lp["ffn"], rmsnorm(x, lp["norm_ffn"], cfg.rms_eps))
+        cache = ({"k": sk, "v": sv, "cross_k": ck, "cross_v": cv}
+                 if want_cache else None)
+        return x, cache
+
+    if pcfg.remat == "block" and not want_cache:
+        body = jax.checkpoint(body)
+    h, caches = jax.lax.scan(body, h, params["decoder"])
+    return rmsnorm(h, params["final_norm"], cfg.rms_eps), caches
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    enc_out = encode(params, batch["frame_embeds"], cfg, pcfg)
+    h, _ = decode_seq(params, batch["tokens"], enc_out, cfg, pcfg)
+    logits = lm_logits(params, h, cfg)
+    return softmax_xent(logits, batch["labels"], cfg.vocab_size)
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int, dtype):
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    layer = {
+        "k": jnp.zeros((batch, max_len, kv * dh), dtype),
+        "v": jnp.zeros((batch, max_len, kv * dh), dtype),
+        "cross_k": jnp.zeros((batch, enc_len, kv * dh), dtype),
+        "cross_v": jnp.zeros((batch, enc_len, kv * dh), dtype),
+    }
+    L = cfg.n_layers
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), layer)
+
+
+def encdec_cache_axes():
+    ax = (None, "batch", "seq_shard", "kv_flat")
+    return {"k": ax, "v": ax, "cross_k": ax, "cross_v": ax}
+
+
+def encdec_prefill(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    enc_out = encode(params, batch["frame_embeds"], cfg, pcfg)
+    h, caches = decode_seq(params, batch["tokens"], enc_out, cfg, pcfg,
+                           want_cache=True)
+    logits = lm_logits(params, h[:, -1:], cfg)[:, 0]
+    B, S = batch["tokens"].shape
+    return logits, caches, jnp.full((B,), S, jnp.int32)
+
+
+def encdec_decode_step(params, cache, cache_len, token, cfg: ModelConfig,
+                       pcfg: ParallelConfig):
+    h = embed_lookup(params["embed"], token[:, None], pcfg)
+    B = token.shape[0]
+    enc_len = cache["cross_k"].shape[2]
+    cross_len = jnp.full((B,), enc_len, jnp.int32)
+
+    def body(carry, xs):
+        x, full_cache = carry
+        lp, li = xs
+        lc = jax.tree.map(
+            lambda buf: jax.lax.dynamic_index_in_dim(
+                buf, li, 0, keepdims=False), full_cache)
+        y, ck, cv = blocks.attn_decode(
+            lp["self_attn"], rmsnorm(x, lp["norm_self"], cfg.rms_eps),
+            cfg, pcfg, cache_k=lc["k"], cache_v=lc["v"],
+            cache_len=cache_len)
+        x = x + y
+        yc, _, _ = blocks.attn_decode(
+            lp["cross_attn"], rmsnorm(x, lp["norm_cross"], cfg.rms_eps),
+            cfg, pcfg, cache_k=lc["cross_k"], cache_v=lc["cross_v"],
+            cache_len=cache_len, cross=True, cross_len=cross_len)
+        x = x + yc
+        x = x + ffn_mod.ffn_apply(
+            lp["ffn"], rmsnorm(x, lp["norm_ffn"], cfg.rms_eps))
+        # self-attn cache rides in the carry -> in-place while-loop alias
+        full_cache = jax.tree.map(
+            lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                buf, new.astype(buf.dtype), li, 0),
+            full_cache, {"k": ck, "v": cv, "cross_k": lc["cross_k"],
+                         "cross_v": lc["cross_v"]})
+        return (x, full_cache), None
+
+    (h, new_cache), _ = jax.lax.scan(
+        body, (h, cache),
+        (params["decoder"], jnp.arange(cfg.n_layers)))
+    h = rmsnorm(h, params["final_norm"], cfg.rms_eps)
+    logits = lm_logits(params, h, cfg)[:, 0]
+    return logits, new_cache, cache_len + 1

@@ -1,0 +1,24 @@
+"""Dense feed-forward (SwiGLU) with Megatron column/row parallel sharding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import ParamMeta, shard_act
+
+
+def ffn_meta(d_model: int, d_ff: int, dtype: str) -> dict:
+    # column-parallel in (tp on d_ff), row-parallel out (fsdp on d_ff)
+    return {
+        "w_gate": ParamMeta((d_model, d_ff), ("fsdp", "tp"), dtype=dtype),
+        "w_up": ParamMeta((d_model, d_ff), ("fsdp", "tp"), dtype=dtype),
+        "w_down": ParamMeta((d_ff, d_model), ("tp", "fsdp"), dtype=dtype),
+    }
+
+
+def ffn_apply(params, x):
+    """x: [B, S, d] -> [B, S, d]."""
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard_act(h, ("batch", None, "tp"))
+    y = h @ params["w_down"]
+    return shard_act(y, ("batch", None, None))

@@ -1,0 +1,239 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked-scan formulation.
+
+Training/prefill use the chunked SSD algorithm: quadratic attention-like
+compute *within* a chunk (MXU-friendly Q x Q matmuls) and a linear state
+recurrence *across* chunks (lax.scan).  Decode is the O(1) recurrent update.
+The per-chunk body is the compute hot spot that kernels/ssd_scan.py
+implements as a Pallas kernel; this module is the pure-XLA lowering used by
+the dry-run and the ref oracle.
+
+Projections are kept separate (w_z/w_x/w_B/w_C/w_dt) rather than fused so
+each output dim shards cleanly over the 'model' axis (DESIGN.md SS6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig
+from repro.launch.sharding import ParamMeta, shard_act
+from repro.models.common import rmsnorm, rmsnorm_meta
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+
+
+def ssm_dims(d_model: int, cfg: MambaConfig) -> SSMDims:
+    d_inner = cfg.expand * d_model
+    assert d_inner % cfg.head_dim == 0
+    return SSMDims(d_inner, d_inner // cfg.head_dim, cfg.head_dim,
+                   cfg.d_state)
+
+
+def mamba_meta(d_model: int, cfg: MambaConfig, dtype: str) -> dict:
+    dims = ssm_dims(d_model, cfg)
+    di, h, n = dims.d_inner, dims.n_heads, dims.d_state
+    return {
+        "w_z": ParamMeta((d_model, di), ("fsdp", "tp"), dtype=dtype),
+        "w_x": ParamMeta((d_model, di), ("fsdp", "tp"), dtype=dtype),
+        "w_B": ParamMeta((d_model, n), ("fsdp", None), dtype=dtype),
+        "w_C": ParamMeta((d_model, n), ("fsdp", None), dtype=dtype),
+        "w_dt": ParamMeta((d_model, h), ("fsdp", "tp"), dtype=dtype),
+        "conv_x": ParamMeta((cfg.d_conv, di), (None, "tp"), init="normal",
+                            scale=0.5, dtype="float32"),
+        "conv_B": ParamMeta((cfg.d_conv, n), (None, None), init="normal",
+                            scale=0.5, dtype="float32"),
+        "conv_C": ParamMeta((cfg.d_conv, n), (None, None), init="normal",
+                            scale=0.5, dtype="float32"),
+        "A_log": ParamMeta((h,), ("tp",), init="zeros", dtype="float32"),
+        "D": ParamMeta((h,), ("tp",), init="ones", dtype="float32"),
+        "dt_bias": ParamMeta((h,), ("tp",), init="zeros", dtype="float32"),
+        "norm": rmsnorm_meta(di),
+        "w_out": ParamMeta((di, d_model), ("tp", "fsdp"), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: [B, S, C]; w: [K, C].
+
+    With ``state`` ([B, K-1, C], previous raw inputs) performs the decode
+    step (S == 1) and returns (y, new_state); otherwise returns y.
+    """
+    k = w.shape[0]
+    if state is not None:
+        buf = jnp.concatenate([state, x], axis=1)        # [B, K, C]
+        y = jnp.einsum("bkc,kc->bc", buf.astype(jnp.float32),
+                       w.astype(jnp.float32))[:, None, :]
+        return y.astype(x.dtype), buf[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1]].astype(jnp.float32)
+            * w[i].astype(jnp.float32) for i in range(k))
+    return y.astype(x.dtype)
+
+
+def ssd_chunk_scan(xh, dt, A, B_, C_, *, chunk: int, init_state=None,
+                   remat_chunk: bool = True, impl: str = "xla",
+                   unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P]; dt: [B, S, H] (post-softplus); A: [H] (negative);
+    B_, C_: [B, S, N].  Returns (y [B, S, H, P], final_state [B, H, N, P]).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(xh, dt, A, B_, C_, chunk=chunk,
+                             init_state=init_state)
+    Bsz, S, H, Pd = xh.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xc = xh.reshape(Bsz, nc, Q, H, Pd).swapaxes(0, 1)    # [nc, B, Q, H, P]
+    dtc = dt.reshape(Bsz, nc, Q, H).swapaxes(0, 1)
+    Bc = B_.reshape(Bsz, nc, Q, N).swapaxes(0, 1)
+    Cc = C_.reshape(Bsz, nc, Q, N).swapaxes(0, 1)
+
+    def chunk_body(state, xs):
+        x_q, dt_q, b_q, c_q = xs                          # per-chunk slices
+        dA = dt_q * A[None, None, :]                      # [B, Q, H] (<= 0)
+        cum = jnp.cumsum(dA, axis=1)                      # inclusive
+        # intra-chunk (attention-like, causal with decay weights)
+        cb = jnp.einsum("bin,bjn->bij", c_q.astype(jnp.float32),
+                        b_q.astype(jnp.float32))          # [B, Q, Q]
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        m = jnp.where(tri[None, :, :, None],
+                      cb[..., None] * decay * dt_q[:, None, :, :], 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m,
+                             x_q.astype(jnp.float32))
+        # contribution of the carried state
+        y_inter = jnp.einsum("bin,bhnp->bihp", c_q.astype(jnp.float32),
+                             state) * jnp.exp(cum)[..., None]
+        # state update for the next chunk
+        sdecay = jnp.exp(cum[:, -1:, :] - cum) * dt_q     # [B, Q, H]
+        s_new = jnp.einsum("bjn,bjhp->bhnp", b_q.astype(jnp.float32),
+                           x_q.astype(jnp.float32) * sdecay[..., None])
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + s_new
+        return state, (y_intra + y_inter).astype(xh.dtype)
+
+    if remat_chunk:
+        chunk_body = jax.checkpoint(chunk_body)
+    state0 = (init_state if init_state is not None
+              else jnp.zeros((Bsz, H, N, Pd), jnp.float32))
+    if unroll:
+        state, ys = state0, []
+        for c in range(nc):
+            state, yq = chunk_body(state, (xc[c], dtc[c], Bc[c], Cc[c]))
+            ys.append(yq)
+        yc = jnp.stack(ys)
+    else:
+        state, yc = jax.lax.scan(chunk_body, state0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bsz, S, H, Pd)
+    return y, state
+
+
+def ssd_decode_step(state, x, dt, A, B_, C_):
+    """O(1) recurrent step.  state: [B, H, N, P]; x: [B, H, P];
+    dt: [B, H]; B_, C_: [B, N].  Returns (y [B, H, P], new_state)."""
+    dA = jnp.exp(dt * A[None, :])                         # [B, H]
+    upd = jnp.einsum("bn,bhp->bhnp", B_.astype(jnp.float32),
+                     x.astype(jnp.float32) * dt[..., None])
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhnp,bn->bhp", state, C_.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray      # [B, H, N, P] f32
+    conv_x: jnp.ndarray   # [B, K-1, d_inner]
+    conv_B: jnp.ndarray   # [B, K-1, N]
+    conv_C: jnp.ndarray   # [B, K-1, N]
+
+
+def mamba_init_state(batch: int, d_model: int, cfg: MambaConfig,
+                     dtype) -> MambaState:
+    dims = ssm_dims(d_model, cfg)
+    k = cfg.d_conv - 1
+    return MambaState(
+        ssm=jnp.zeros((batch, dims.n_heads, dims.d_state, dims.head_dim),
+                      jnp.float32),
+        conv_x=jnp.zeros((batch, k, dims.d_inner), dtype),
+        conv_B=jnp.zeros((batch, k, dims.d_state), dtype),
+        conv_C=jnp.zeros((batch, k, dims.d_state), dtype),
+    )
+
+
+def mamba_apply(params, x, cfg: MambaConfig, *, rms_eps: float = 1e-5,
+                state: Optional[MambaState] = None, impl: str = "xla",
+                remat_chunk: bool = True, unroll: bool = False):
+    """Mamba-2 block.  x: [B, S, d].
+
+    Sequence mode (state=None): returns y [B, S, d].
+    Decode mode (state given, S==1): returns (y, new_state).
+    """
+    Bsz, S, d = x.shape
+    dims = ssm_dims(d, cfg)
+    H, Pd, N = dims.n_heads, dims.head_dim, dims.d_state
+
+    z = x @ params["w_z"]                                  # [B, S, di]
+    xr = x @ params["w_x"]
+    br = x @ params["w_B"]
+    cr = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]                            # [B, S, H]
+    z = shard_act(z, ("batch", None, "tp"))
+    xr = shard_act(xr, ("batch", None, "tp"))
+
+    decode = state is not None and S == 1
+    if decode:
+        xc, conv_x = _causal_conv(xr, params["conv_x"], state.conv_x)
+        bc, conv_B = _causal_conv(br, params["conv_B"], state.conv_B)
+        cc, conv_C = _causal_conv(cr, params["conv_C"], state.conv_C)
+    else:
+        xc = _causal_conv(xr, params["conv_x"])
+        bc = _causal_conv(br, params["conv_B"])
+        cc = _causal_conv(cr, params["conv_C"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    cc = jax.nn.silu(cc.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # [H], negative
+    xh = xc.reshape(Bsz, S, H, Pd)
+
+    if decode:
+        y1, ssm = ssd_decode_step(state.ssm, xh[:, 0], dt[:, 0], A,
+                                  bc[:, 0], cc[:, 0])
+        y = y1[:, None]                                    # [B, 1, H, P]
+        new_state = MambaState(ssm, conv_x, conv_B, conv_C)
+    else:
+        y, final = ssd_chunk_scan(
+            xh, dt, A, bc, cc, chunk=cfg.chunk,
+            init_state=state.ssm if state is not None else None,
+            remat_chunk=remat_chunk, impl=impl, unroll=unroll)
+        new_state = (MambaState(final, *_tail_conv(xr, br, cr, cfg))
+                     if state is not None else None)
+
+    y = y + xh.astype(jnp.float32).astype(y.dtype) \
+        * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, S, dims.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, params["norm"], rms_eps)
+    out = y @ params["w_out"]
+    out = shard_act(out, ("batch", None, None))
+    if state is not None:
+        return out, new_state
+    return out
+
+
+def _tail_conv(xr, br, cr, cfg: MambaConfig):
+    k = cfg.d_conv - 1
+    return xr[:, -k:], br[:, -k:], cr[:, -k:]

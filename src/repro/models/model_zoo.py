@@ -1,0 +1,176 @@
+"""Unified model interface: meta/init/loss/prefill/decode + input specs.
+
+Everything the launcher, dry-run, trainer and server need, dispatched on the
+architecture family.  ``input_specs`` follows the assignment contract:
+modality frontends are stubs — the specs hand the model precomputed
+patch/frame embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.launch.sharding import (ParamMeta, Rules, abstract_params,
+                                   materialize, param_specs)
+from repro.models import encdec, transformer
+from repro.models.transformer import VOCAB_PAD_MULTIPLE
+
+
+def model_meta(cfg: ModelConfig) -> dict:
+    if cfg.is_encdec:
+        return encdec.encdec_meta(cfg)
+    return transformer.lm_meta(cfg)
+
+
+def init_params(cfg: ModelConfig, key):
+    return materialize(model_meta(cfg), key)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    if cfg.is_encdec:
+        return encdec.encdec_loss(params, batch, cfg, pcfg)
+    return transformer.lm_loss(params, batch, cfg, pcfg)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    if cfg.is_encdec:
+        return encdec.encdec_prefill(params, batch, cfg, pcfg)
+    return transformer.lm_prefill(params, batch["tokens"], cfg, pcfg,
+                                  prefix_embeds=batch.get("patch_embeds"))
+
+
+def decode_fn(params, cache, cache_len, token, cfg: ModelConfig,
+              pcfg: ParallelConfig):
+    if cfg.is_encdec:
+        return encdec.encdec_decode_step(params, cache, cache_len, token,
+                                         cfg, pcfg)
+    return transformer.lm_decode_step(params, cache, cache_len, token, cfg,
+                                      pcfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.is_encdec:
+        return encdec.encdec_init_cache(cfg, batch, max_len,
+                                        cfg.frontend_len, dtype)
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def cache_axes(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return encdec.encdec_cache_axes()
+    return transformer.cache_logical_axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs / concrete batches
+# ---------------------------------------------------------------------------
+
+
+def _text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.frontend == "vision":
+        return shape.seq_len - cfg.frontend_len
+    return shape.seq_len
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """(shape, dtype, logical-axes) for every model input of a cell."""
+    B = shape.global_batch
+    st = _text_len(cfg, shape)
+    tok_ax = ("batch", None)
+    emb_ax = ("batch", None, None)
+    if shape.kind == "decode":
+        out = {"token": ((B,), jnp.int32, ("batch",)),
+               "cache_len": ((B,), jnp.int32, ("batch",))}
+        return out
+    out = {"tokens": ((B, st), jnp.int32, tok_ax)}
+    if shape.kind == "train":
+        out["labels"] = ((B, st), jnp.int32, tok_ax)
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = ((B, cfg.frontend_len, cfg.d_model),
+                               jnp.bfloat16, emb_ax)
+    if cfg.frontend == "audio":
+        out["frame_embeds"] = ((B, cfg.frontend_len, cfg.d_model),
+                               jnp.bfloat16, emb_ax)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules,
+                mesh) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins (sharded, no allocation) for the dry-run."""
+    from jax.sharding import NamedSharding
+    out = {}
+    for name, (shp, dt, ax) in batch_shapes(cfg, shape).items():
+        out[name] = jax.ShapeDtypeStruct(
+            shp, dt, sharding=NamedSharding(mesh, rules.spec(ax)))
+    return out
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, key):
+    """Small concrete batch for smoke tests / the e2e trainer."""
+    out = {}
+    for name, (shp, dt, _) in batch_shapes(cfg, shape).items():
+        k, key = jax.random.split(key)
+        if dt == jnp.int32:
+            hi = cfg.vocab_size if name in ("tokens", "labels", "token") \
+                else shp[-1] if name == "cache_len" else cfg.vocab_size
+            if name == "cache_len":
+                out[name] = jnp.full(shp, max(shape.seq_len - 1, 1),
+                                     jnp.int32)
+            else:
+                out[name] = jax.random.randint(k, shp, 0, hi, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, shp, jnp.float32).astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (MODEL_FLOPS = 6 * N_active * D)
+# ---------------------------------------------------------------------------
+
+
+def _meta_leaves_with_path(meta):
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        meta, is_leaf=lambda x: isinstance(x, ParamMeta))
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path), leaf
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """total / active / embed-only parameter counts from the meta tree.
+
+    'active' is the 6*N*D numerator: embedding gathers contribute no FLOPs
+    (tied embeddings count once — they matmul as the LM head) and routed
+    expert weights participate at k/E density.
+    """
+    total = active = embed = 0
+    k, e = cfg.moe.experts_per_token, cfg.moe.num_experts
+    for path, m in _meta_leaves_with_path(model_meta(cfg)):
+        n = 1
+        for s in m.shape:
+            n *= s
+        total += n
+        if "embed" in path:
+            embed += n
+            if cfg.tie_embeddings:
+                active += n  # used as the LM-head matmul
+            continue
+        if "moe" in path and "shared" not in path and "router" not in path:
+            n = int(n * (k / max(e, 1)))
+        active += n
+    return {"total": total, "active": active, "embed": embed}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D for train cells, 2*N per generated token for decode/prefill."""
+    n_active = param_counts(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * _text_len(cfg, shape)
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * _text_len(cfg, shape)
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token each

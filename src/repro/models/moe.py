@@ -1,0 +1,148 @@
+"""Top-k mixture-of-experts with expert parallelism over the 'model' axis.
+
+Dispatch is sort-based (MegaBlocks-style), not GShard one-hot-einsum:
+the [tokens, experts, capacity] dense dispatch tensor of the einsum
+formulation is O(N*E*C) and cannot fit HBM at assigned sizes, so routing is
+computed with integer sort/scatter/gather ops (O(N*k)) and the only large
+tensors are the dispatched token buffers themselves.
+
+Tokens are routed within *groups* (default: one group per sequence, as in
+GShard).  The group dim stays batch-sharded through routing — every gather
+/scatter is group-local, so GSPMD emits no routing collectives — and the
+single reshard of the dispatch buffer from batch-sharded to expert-sharded
+is the all-to-all (visible as such in the dry-run HLO, SSRoofline).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.launch.sharding import ParamMeta, shard_act
+
+
+def moe_meta(d_model: int, cfg: MoEConfig, dtype: str) -> dict:
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "w_router": ParamMeta((d_model, e), (None, None), dtype="float32"),
+        "w_gate": ParamMeta((e, d_model, f), ("experts", "fsdp", None),
+                            dtype=dtype),
+        "w_up": ParamMeta((e, d_model, f), ("experts", "fsdp", None),
+                          dtype=dtype),
+        "w_down": ParamMeta((e, f, d_model), ("experts", None, "fsdp"),
+                            dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": ParamMeta((d_model, fs), ("fsdp", "tp"), dtype=dtype),
+            "w_up": ParamMeta((d_model, fs), ("fsdp", "tp"), dtype=dtype),
+            "w_down": ParamMeta((fs, d_model), ("tp", "fsdp"), dtype=dtype),
+        }
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig,
+              capacity_factor: float) -> int:
+    cap = int(tokens_per_group * cfg.experts_per_token * capacity_factor
+              / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def route(x_groups, w_router, cfg: MoEConfig, capacity_factor: float):
+    """Compute dispatch/combine indices.
+
+    x_groups: [G, N, d] -> (slot_token [G, E*C] int32 with sentinel N,
+    slot_of  [G, N, k] int32 with sentinel E*C, weights [G, N, k] f32,
+    aux_loss scalar).
+    """
+    G, N, _ = x_groups.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(N, cfg, capacity_factor)
+
+    logits = (x_groups.astype(jnp.float32) @ w_router)        # [G, N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, sel = jax.lax.top_k(probs, K)                    # [G, N, K]
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): mean prob * mean assignment per expert.
+    me = jnp.mean(probs, axis=1)                              # [G, E]
+    ce = jnp.zeros((G, E), jnp.float32).at[
+        jnp.arange(G)[:, None, None], sel].add(1.0) / (N * K)
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    flat_e = sel.reshape(G, N * K)                            # [G, NK]
+    order = jnp.argsort(flat_e, axis=-1, stable=True)         # [G, NK]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    counts = jnp.zeros((G, E), jnp.int32).at[
+        jnp.arange(G)[:, None], flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts             # [G, E]
+    pos = (jnp.arange(N * K)[None, :]
+           - jnp.take_along_axis(starts, sorted_e, axis=-1))  # [G, NK]
+    keep = pos < C
+    slot_sorted = jnp.where(keep, sorted_e * C + pos, E * C)  # [G, NK]
+    token_sorted = order // K                                 # token index
+
+    gi = jnp.arange(G)[:, None]
+    # slot -> token map (sentinel token id N reads the zero pad row)
+    slot_token = jnp.full((G, E * C + 1), N, jnp.int32).at[
+        gi, slot_sorted].set(jnp.where(keep, token_sorted, N))[:, :E * C]
+    # token -> its K slots, in original (token, k) order
+    slot_of = jnp.full((G, N * K), E * C, jnp.int32).at[
+        gi, order].set(slot_sorted).reshape(G, N, K)
+    return slot_token, slot_of, weights, aux
+
+
+def moe_apply(params, x, cfg: MoEConfig, *, capacity_factor: float = 1.25,
+              groups: Optional[int] = None):
+    """x: [B, S, d] -> ([B, S, d], aux_loss).
+
+    ``groups``: routing group count; default one group per sequence (B).
+    Decode callers (S == 1) pass groups=1 so the whole batch is one group.
+    """
+    B, S, d = x.shape
+    G = groups if groups else B
+    x_groups = x.reshape(G, (B * S) // G, d)
+    N = x_groups.shape[1]
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(N, cfg, capacity_factor)
+
+    slot_token, slot_of, weights, aux = route(
+        x_groups, params["w_router"], cfg, capacity_factor)
+
+    # dispatch: gather token rows into [G, E, C, d]; pad row N reads zeros.
+    # take_along_axis (NOT advanced int-array indexing): GSPMD recognizes
+    # it as a batched gather over the group dim — int-array indexing makes
+    # the partitioner replicate the GLOBAL dispatch buffer on every chip
+    # (measured 12 GB/chip/layer on moonshot; EXPERIMENTS.md SSPerf A1).
+    xp = jnp.concatenate(
+        [x_groups, jnp.zeros((G, 1, d), x.dtype)], axis=1)    # [G, N+1, d]
+    xd = jnp.take_along_axis(xp, slot_token[:, :, None], axis=1)
+    xd = xd.reshape(G, E, C, d)
+    # reshard: batch-sharded groups -> expert-sharded buffers (all-to-all)
+    xd = shard_act(xd, ("batch", "experts", None, None))
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xd, params["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xd, params["w_up"])
+    yd = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    # reshard back to batch-sharded groups (all-to-all)
+    yd = shard_act(yd, ("batch", None, None, None))
+
+    yflat = jnp.concatenate(
+        [yd.reshape(G, E * C, d),
+         jnp.zeros((G, 1, d), yd.dtype)], axis=1)             # [G, EC+1, d]
+    y_tok = jnp.take_along_axis(
+        yflat, slot_of.reshape(G, N * K)[:, :, None], axis=1)
+    y_tok = y_tok.reshape(G, N, K, d)                         # [G, N, K, d]
+    # combine in bf16: an f32 upcast here makes every backward cotangent
+    # through the dispatch buffers f32 (2x collective bytes)
+    y = jnp.sum(y_tok * weights[..., None].astype(y_tok.dtype), axis=2)
+    y = y.astype(x.dtype).reshape(B, S, d)
+
+    if "shared" in params:
+        from repro.models.ffn import ffn_apply
+        y = y + ffn_apply(params["shared"], x)
+    return shard_act(y, ("batch", None, None)), aux * cfg.router_aux_weight

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    apply,
+    global_norm,
+    init,
+    schedule,
+)

@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import TrainSupervisor  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import rescale_plan, reshard_state  # noqa: F401

@@ -1,0 +1,78 @@
+"""Elastic scaling: re-mesh a running job when the healthy chip count
+changes (slice loss / addition).
+
+The policy keeps the 'model' (TP/EP) axis fixed — it is baked into layout
+decisions — and rescales the data(+pod) axes, so the global batch stays
+constant while per-chip microbatching adapts.  `rescale_plan` computes the
+new mesh + microbatching; `reshard_state` moves an existing TrainState
+onto the new mesh with jax.device_put (GSPMD emits the minimal resharding
+collectives).  The counter-based data pipeline repartitions exactly
+(data/pipeline.py), so no sample is lost or duplicated across a rescale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.launch.sharding import Rules, default_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    microbatches: int
+    note: str = ""
+
+
+def rescale_plan(*, n_devices: int, model_parallel: int,
+                 global_batch: int, old_microbatches: int) -> RescalePlan:
+    """Largest data axis that divides the fleet while keeping TP fixed."""
+    if n_devices % model_parallel != 0:
+        raise ValueError(
+            f"{n_devices} devices not divisible by TP={model_parallel}")
+    data = n_devices // model_parallel
+    while data > 1 and global_batch % data != 0:
+        data -= 1            # drop stragglers below a divisible count
+    used = data * model_parallel
+    micro = max(1, min(global_batch // data, old_microbatches))
+    note = "" if used == n_devices else (
+        f"parking {n_devices - used} chips (batch divisibility)")
+    return RescalePlan((data, model_parallel), ("data", "model"), micro,
+                       note)
+
+
+def make_rescaled_mesh(plan: RescalePlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = 1
+    for s in plan.mesh_shape:
+        n *= s
+    import numpy as np
+    arr = np.asarray(devices[:n]).reshape(plan.mesh_shape)
+    return Mesh(arr, plan.axis_names)
+
+
+def reshard_state(state, new_mesh: Mesh, rules: Optional[Rules] = None,
+                  spec_tree=None):
+    """device_put the whole state onto the new mesh.
+
+    ``spec_tree`` (PartitionSpec tree matching state) can be given
+    directly; otherwise everything lands replicated-on-data per leaf spec
+    derived from the old shardings' PartitionSpecs.
+    """
+    if spec_tree is not None:
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(new_mesh, s), spec_tree)
+    else:
+        def move(x):
+            try:
+                spec = x.sharding.spec
+            except AttributeError:
+                from jax.sharding import PartitionSpec as P
+                spec = P()
+            return NamedSharding(new_mesh, spec)
+        shardings = jax.tree.map(move, state)
+    return jax.device_put(state, shardings)

@@ -1,0 +1,114 @@
+"""Fault tolerance: checkpoint/restart supervision for the train loop.
+
+`TrainSupervisor.run` drives step functions produced by launch/steps.py,
+checkpoints through the MVStore snapshot reader (never pausing the step
+pipeline), and on failure — a raised exception from the step, an injected
+fault, or a straggler escalation — restores the latest checkpoint and
+replays.  Because the data pipeline is counter-based, replay is exact.
+
+At 1000+ nodes the same structure holds per-slice: each slice runs a
+supervisor; a slice loss is recovered by restoring the shared manifest and
+re-admitting the slice at the recorded step (see runtime/elastic.py for
+the re-mesh path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.snapshotter import (CheckpointManager,
+                                          restore_checkpoint)
+from repro.runtime.straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault injection for tests/demos."""
+
+    fail_at_steps: tuple = ()
+    exception: type = RuntimeError
+
+
+class TrainSupervisor:
+    def __init__(self, *, ckpt_dir: str, ckpt_every: int = 20,
+                 max_restarts: int = 5, reader=None,
+                 straggler: Optional[StragglerMonitor] = None):
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.manager = CheckpointManager(ckpt_dir, reader=reader)
+        self.straggler = straggler or StragglerMonitor()
+        self.restarts = 0
+        self.events = []
+
+    def run(self, *, state, train_step: Callable, batch_at: Callable,
+            n_steps: int, start_step: int = 0,
+            fault_plan: Optional[FaultPlan] = None,
+            on_step: Optional[Callable] = None):
+        """Run to n_steps with checkpoint/restart.  ``batch_at(step)``
+        must be deterministic; ``train_step(state, batch) -> (state,
+        metrics)``."""
+        step = start_step
+        fault_plan = fault_plan or FaultPlan()
+        fired = set()
+        while step < n_steps:
+            try:
+                t0 = time.time()
+                if step in fault_plan.fail_at_steps and step not in fired:
+                    fired.add(step)
+                    raise fault_plan.exception(
+                        f"injected node failure at step {step}")
+                state, metrics = train_step(state, batch_at(step))
+                jax.block_until_ready(metrics["loss"])
+                self.straggler.observe(step, time.time() - t0)
+                step += 1
+                if on_step is not None:
+                    on_step(step, state, metrics)
+                if step % self.ckpt_every == 0:
+                    self._checkpoint(step, state)
+            except Exception as e:  # noqa: BLE001 — node failure path
+                self.events.append(("failure", step, repr(e)))
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                step, state = self._restore(state)
+                self.events.append(("restored", step, ""))
+        self.manager.wait_idle()
+        return step, state
+
+    def _checkpoint(self, step, state):
+        ok = self.manager.submit(step, state.mv, state.opt,
+                                 extra={"restarts": self.restarts})
+        self.events.append(("checkpoint", step, "ok" if ok else "aborted"))
+
+    def _restore(self, template_state):
+        tmpl = {"params": template_state.mv.live, "opt": template_state.opt}
+        self.manager.wait_idle()          # in-flight async save may be ours
+        try:
+            step, restored, extra = restore_checkpoint(self.ckpt_dir, tmpl)
+        except FileNotFoundError:
+            # cold restart: no checkpoint landed yet -> replay from step 0
+            self.events.append(("cold_restart", 0, ""))
+            return 0, template_state
+        mv = template_state.mv._replace(
+            live=restored["params"],
+            clock=jax.numpy.asarray(step, jax.numpy.int32))
+        # re-seed rings from the restored live values at the restored clock
+        if mv.ring:
+            from repro.core import mvstore as mvs
+            paths = set(mv.ring)
+            mv = mv._replace(ring={}, ring_ts={})
+            mv = mvs.version_blocks(mv, paths, _RingCfg(
+                next(iter(template_state.mv.ring.values())).shape[0]))
+        state = template_state._replace(mv=mv, opt=restored["opt"])
+        return step, state
+
+
+class _RingCfg:
+    def __init__(self, r):
+        self.ring_slots = r

@@ -1,0 +1,5 @@
+from repro.structs.abtree import ABTree  # noqa: F401
+from repro.structs.extbst import ExternalBST  # noqa: F401
+from repro.structs.hashmap import HashMap  # noqa: F401
+
+STRUCTS = {"abtree": ABTree, "hashmap": HashMap, "extbst": ExternalBST}

@@ -1,0 +1,74 @@
+"""Hashmap with chained buckets on the STM word heap (paper Appendix A).
+
+Node layout: [0]=key, [1]=value, [2]=next.  Size queries (SQ) — atomic
+count over every bucket — replace range queries for this structure, as in
+the paper (no order-preserving hash).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+NULL = 0
+
+
+class HashMap:
+    def __init__(self, tm, n_buckets: int = 1 << 16):
+        self.tm = tm
+        self.n_buckets = n_buckets
+        tm.alloc(1)                      # burn address 0 (NULL)
+        self.table = tm.alloc(n_buckets, NULL)
+
+    def _bucket(self, key: int) -> int:
+        return self.table + ((key * 0x9E3779B1) % self.n_buckets)
+
+    def search(self, tx, key: int) -> Optional[object]:
+        node = tx.read(self._bucket(key))
+        while node != NULL:
+            if tx.read(node) == key:
+                return tx.read(node + 1)
+            node = tx.read(node + 2)
+        return None
+
+    def insert(self, tx, key: int, value) -> bool:
+        head_addr = self._bucket(key)
+        node = tx.read(head_addr)
+        while node != NULL:
+            if tx.read(node) == key:
+                tx.write(node + 1, value)
+                return False
+            node = tx.read(node + 2)
+        new = tx.alloc(3)
+        tx.write(new, key)
+        tx.write(new + 1, value)
+        tx.write(new + 2, tx.read(head_addr))
+        tx.write(head_addr, new)
+        return True
+
+    def delete(self, tx, key: int) -> bool:
+        head_addr = self._bucket(key)
+        prev = NULL
+        node = tx.read(head_addr)
+        while node != NULL:
+            if tx.read(node) == key:
+                nxt = tx.read(node + 2)
+                if prev == NULL:
+                    tx.write(head_addr, nxt)
+                else:
+                    tx.write(prev + 2, nxt)
+                return True
+            prev, node = node, tx.read(node + 2)
+        return False
+
+    def upsert_touch(self, tx, key: int, value) -> None:
+        """Dedicated-updater op: always writes."""
+        self.insert(tx, key, value)
+
+    def size_query(self, tx) -> int:
+        """Atomic size: the long-running read-only transaction (SQ)."""
+        total = 0
+        for b in range(self.n_buckets):
+            node = tx.read(self.table + b)
+            while node != NULL:
+                total += 1
+                node = tx.read(node + 2)
+        return total

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benches must see the real (single) device; only
+# launch/dryrun.py forces 512 (see the assignment's dry-run contract).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,152 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 128, 2, 2, 32),      # MHA
+    (2, 256, 4, 2, 64),      # GQA 2:1
+    (1, 512, 8, 1, 64),      # MQA
+    (2, 128, 4, 4, 128),     # MXU-aligned head dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, D, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32).astype(dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    G = H // KV
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), G, 1).reshape(B * H, S, D)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), G, 1).reshape(B * H, S, D)
+    r = ref.flash_attention_ref(qr, kr, vr, causal=causal)
+    r = r.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_blockwise_xla():
+    """The XLA blockwise lowering (dry-run path) and the Pallas kernel
+    implement the same schedule: they must agree."""
+    from repro.models.attention import blockwise_attention
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, KV, D = 2, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    o2 = blockwise_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    # and the unrolled probe variant is numerically identical in structure
+    o3 = blockwise_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                             unroll=True)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o3),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 8, 4, 16),
+    (2, 128, 4, 16, 8, 32),
+    (1, 256, 2, 32, 16, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    xh = (jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.5
+          ).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B_ = (jax.random.normal(ks[3], (B, S, N), jnp.float32) * 0.5
+          ).astype(dtype)
+    C_ = (jax.random.normal(ks[4], (B, S, N), jnp.float32) * 0.5
+          ).astype(dtype)
+    y, _ = ops.ssd_scan(xh, dt, A, B_, C_, chunk=chunk)
+    yr, _ = ref.ssd_scan_ref(xh, dt, A, B_, C_)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_xla_chunked_matches_sequential_ref():
+    from repro.models.mamba import ssd_chunk_scan
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, H, P, N = 2, 128, 4, 16, 8
+    xh = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    C_ = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    for unroll in (False, True):
+        y, st = ssd_chunk_scan(xh, dt, A, B_, C_, chunk=32, unroll=unroll)
+        yr, str_ = ref.ssd_scan_ref(xh, dt, A, B_, C_)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("R,shape", [(2, (64,)), (4, (8, 16)),
+                                     (8, (4, 4, 8)), (3, (100,))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_snapshot_select_sweep(R, shape, dtype):
+    key = jax.random.PRNGKey(4)
+    if dtype == jnp.int32:
+        ring = jax.random.randint(key, (R,) + shape, 0, 100, jnp.int32)
+    else:
+        ring = jax.random.normal(key, (R,) + shape, jnp.float32
+                                 ).astype(dtype)
+    ts = jnp.asarray(np.random.RandomState(0).permutation(R) * 3 - 1,
+                     jnp.int32)
+    for clock in (-1, 0, 2, 5, 100):
+        val, ok = ops.snapshot_select(ring, ts, jnp.int32(clock))
+        vr, okr = ref.snapshot_select_ref(
+            ring.reshape(R, -1), ts, clock)
+        assert bool(ok) == bool(okr)
+        if bool(okr):
+            np.testing.assert_array_equal(
+                np.asarray(val).ravel(), np.asarray(vr))
+
+
+@pytest.mark.parametrize("shape", [(64,), (24, 16), (3, 5, 8)])
+@pytest.mark.parametrize("with_ring", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adamw_sweep(shape, with_ring, dtype):
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    p = jax.random.normal(ks[0], shape, jnp.float32).astype(dtype)
+    g = jax.random.normal(ks[1], shape, jnp.float32)
+    m = jax.random.normal(ks[2], shape, jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], shape, jnp.float32)) * 0.01
+    ring = jnp.zeros((3,) + shape, dtype) if with_ring else None
+    kw = dict(lr=jnp.float32(3e-3), scale=jnp.float32(0.7), b1=0.9,
+              b2=0.95, eps=1e-8, wd=0.1)
+    p2, m2, v2, r2 = ops.fused_adamw(p, g, m, v, ring, 2,
+                                     count=jnp.int32(3), **kw)
+    cnt = jnp.float32(3)
+    pr, mr, vr2, rr = ref.fused_adamw_ref(
+        p.reshape(-1), g.reshape(-1), m.reshape(-1), v.reshape(-1),
+        ring.reshape(3, -1) if with_ring else None, 2,
+        b1c=1 - 0.9 ** cnt, b2c=1 - 0.95 ** cnt, **kw)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(p2.reshape(-1), np.float32),
+                               np.asarray(pr, np.float32), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(m2.reshape(-1)), np.asarray(mr),
+                               rtol=1e-5, atol=1e-5)
+    if with_ring:
+        np.testing.assert_allclose(
+            np.asarray(r2.reshape(3, -1), np.float32),
+            np.asarray(rr, np.float32), rtol=tol, atol=tol)
+        # untouched slots stay zero
+        assert float(jnp.abs(r2[0]).sum()) == 0.0

@@ -1,0 +1,174 @@
+"""Unit tests: clock, locks, bloom, VLT, modes, heuristics, EBR."""
+import threading
+
+import pytest
+
+from repro.configs.paper_stm import MultiverseParams
+from repro.core import heuristics as heur
+from repro.core import modes as M
+from repro.core.bloom import BloomTable
+from repro.core.clock import AtomicInt, GlobalClock
+from repro.core.ebr import EBR, TxRetireBuffer
+from repro.core.locks import LockState, LockTable, UNLOCKED
+from repro.core.vlt import DELETED_TS, VLT, VersionList, VListNode
+
+
+def test_atomic_int_cas_and_increment():
+    a = AtomicInt(5)
+    assert a.cas(5, 7) and a.load() == 7
+    assert not a.cas(5, 9)
+    assert a.increment() == 8
+
+
+def test_clock_concurrent_increments():
+    c = GlobalClock(0)
+    n, t = 200, 8
+
+    def bump():
+        for _ in range(n):
+            c.increment()
+
+    ths = [threading.Thread(target=bump) for _ in range(t)]
+    [x.start() for x in ths]
+    [x.join() for x in ths]
+    assert c.load() == n * t
+
+
+def test_lock_table_validate_semantics():
+    lt = LockTable(8)
+    idx = lt.index(1234)
+    st = lt.read(idx)
+    assert lt.validate(st, r_clock=1, tid=0)
+    assert lt.try_lock(idx, st, tid=3)
+    held = lt.read(idx)
+    assert held.locked and held.tid == 3
+    # another thread: conflict
+    assert not lt.validate(held, r_clock=10, tid=0)
+    # owner revalidates fine
+    assert lt.validate(held, r_clock=10, tid=3)
+    lt.unlock(idx, version=9)
+    st = lt.read(idx)
+    assert not st.locked and st.version == 9
+    assert not lt.validate(st, r_clock=9, tid=0)   # version >= rclock
+    assert lt.validate(st, r_clock=10, tid=0)
+
+
+def test_lock_and_flag_blocks_validate():
+    lt = LockTable(8)
+    idx = lt.index(7)
+    st = lt.lock_and_flag(idx, tid=1)
+    assert lt.read(idx).flag
+    assert not lt.validate(lt.read(idx), r_clock=100, tid=0)
+    lt.unlock(idx)
+    assert not lt.read(idx).flag
+
+
+def test_same_index_for_all_tables():
+    lt = LockTable(10)
+    for addr in (0, 1, 99, 12345, 1 << 40):
+        assert 0 <= lt.index(addr) < (1 << 10)
+
+
+def test_bloom_membership_and_reset():
+    b = BloomTable(4, 64)
+    assert not b.contains(2, 42)
+    assert b.try_add(2, 42)
+    assert b.contains(2, 42)
+    assert not b.try_add(2, 42)          # already present
+    b.reset(2)
+    assert not b.contains(2, 42)
+
+
+def test_vlt_insert_get_and_newest_ts():
+    v = VLT(4)
+    vl = VersionList(VListNode(None, 5, "x", False))
+    v.insert(1, 100, vl)
+    assert v.get(1, 100) is vl
+    assert v.get(1, 101) is None
+    vl.head = VListNode(vl.head, 9, "y", False)
+    assert v.bucket_newest_ts(1) == 9
+    # TBD and deleted versions are ignored for the heuristic
+    vl.head = VListNode(vl.head, 50, "z", True)
+    assert v.bucket_newest_ts(1) == 9
+    head = v.take_bucket(1)
+    assert head is not None and v.get(1, 100) is None
+
+
+def test_mode_cycle():
+    assert M.get_mode(0) == M.MODE_Q
+    assert M.get_mode(1) == M.MODE_QTOU
+    assert M.get_mode(2) == M.MODE_U
+    assert M.get_mode(3) == M.MODE_UTOQ
+    assert M.get_mode(4) == M.MODE_Q
+    assert M.writers_must_version(M.MODE_U)
+    assert not M.writers_must_version(M.MODE_Q)
+    assert M.readers_assume_versioned(M.MODE_U)
+    assert M.unversioning_enabled(M.MODE_Q)
+
+
+def test_heuristics_k1_k2_k3():
+    p = MultiverseParams(k1=5, k2=2, k3=4)
+    assert not heur.should_go_versioned(p, 4)
+    assert heur.should_go_versioned(p, 5)
+    # K3: versioned txns always CAS after k3 attempts
+    assert heur.should_attempt_mode_cas(p, versioned=True, attempts=4,
+                                        read_cnt=0, min_mode_u_reads=None)
+    # K2 requires min-mode-U-read-count evidence for unversioned txns
+    assert not heur.should_attempt_mode_cas(p, versioned=False, attempts=3,
+                                            read_cnt=10,
+                                            min_mode_u_reads=None)
+    assert heur.should_attempt_mode_cas(p, versioned=False, attempts=3,
+                                        read_cnt=10, min_mode_u_reads=8)
+    assert not heur.should_attempt_mode_cas(p, versioned=False, attempts=3,
+                                            read_cnt=5, min_mode_u_reads=8)
+
+
+def test_sticky_clearing_after_s_small_txns():
+    p = MultiverseParams(s=3)
+    ann = heur.ThreadAnnouncement()
+    ann.sticky_mode_u = True
+    # first commit after CAS sets the small-txn threshold (size/S)
+    assert not heur.sticky_cleared(p, ann, 300)   # threshold = 100
+    cleared = False
+    for _ in range(3):
+        cleared = heur.sticky_cleared(p, ann, 50)
+    assert cleared
+
+
+def test_unversion_threshold_l_p():
+    p = MultiverseParams(l=4, p=0.5)
+    u = heur.UnversionThreshold(p)
+    for d in ([10], [20], [30], [40]):
+        assert u.threshold() is None or True
+        u.observe_round(d)
+    # sorted desc [40,30,20,10], prefix half = [40,30] -> 35
+    assert u.threshold() == pytest.approx(35.0)
+
+
+def test_ebr_revocable_retires():
+    ebr = EBR(2)
+    buf = TxRetireBuffer(ebr)
+    node = VListNode(None, 1, "a", False)
+    buf.retire_on_commit(node)
+    buf.abort()                      # revoked
+    assert ebr.limbo_size == 0 and not node.freed
+    buf.retire_on_commit(node)
+    buf.commit()
+    assert ebr.limbo_size == 1
+    for _ in range(4):
+        ebr.advance_and_reclaim()
+    assert node.freed and ebr.freed_count == 1
+
+
+def test_ebr_pinned_reader_blocks_reclaim():
+    ebr = EBR(2)
+    ebr.pin(0)
+    node = VListNode(None, 1, "a", False)
+    ebr.retire(node)
+    for _ in range(4):
+        ebr.advance_and_reclaim()
+    assert not node.freed             # reader still pinned
+    ebr.unpin(0)
+    for _ in range(4):
+        ebr.advance_and_reclaim()
+    assert node.freed

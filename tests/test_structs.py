@@ -1,0 +1,98 @@
+"""Data-structure correctness on every TM + concurrent mixed workloads."""
+import random
+import threading
+
+import pytest
+
+from repro.core.baselines import DCTL, NOrec, TL2, TinySTM
+from repro.core.stm import Multiverse, run
+from repro.structs import ABTree, ExternalBST, HashMap
+
+TMS = [("multiverse", lambda n: Multiverse(n)), ("tl2", TL2),
+       ("dctl", DCTL), ("norec", NOrec), ("tinystm", TinySTM)]
+STRUCTS = [("abtree", ABTree), ("hashmap", lambda tm: HashMap(tm, 64)),
+           ("extbst", ExternalBST)]
+
+
+@pytest.mark.parametrize("tm_name,tm_cls", TMS, ids=[n for n, _ in TMS])
+@pytest.mark.parametrize("s_name,s_cls", STRUCTS,
+                         ids=[n for n, _ in STRUCTS])
+def test_struct_matches_dict(tm_name, tm_cls, s_name, s_cls):
+    tm = tm_cls(2)
+    s = s_cls(tm)
+    ref = {}
+    rnd = random.Random(7)
+    for _ in range(600):
+        op = rnd.random()
+        k = rnd.randrange(200)
+        if op < 0.5:
+            run(tm, lambda tx, k=k: s.insert(tx, k, k * 3), tid=0)
+            ref[k] = k * 3
+        elif op < 0.75:
+            run(tm, lambda tx, k=k: s.delete(tx, k), tid=0)
+            ref.pop(k, None)
+        else:
+            got = run(tm, lambda tx, k=k: s.search(tx, k), tid=0)
+            assert got == ref.get(k), (k, got, ref.get(k))
+    # final sweep
+    for k in range(200):
+        got = run(tm, lambda tx, k=k: s.search(tx, k), tid=0)
+        assert got == ref.get(k)
+    tm.stop()
+
+
+@pytest.mark.parametrize("s_name,s_cls",
+                         [("abtree", ABTree), ("extbst", ExternalBST)],
+                         ids=["abtree", "extbst"])
+def test_range_query_ordered_and_complete(s_name, s_cls):
+    tm = Multiverse(1)
+    s = s_cls(tm)
+    keys = random.Random(3).sample(range(10000), 500)
+    for k in keys:
+        run(tm, lambda tx, k=k: s.insert(tx, k, k), tid=0)
+    lo = 2500
+    out = run(tm, lambda tx: s.range_query(tx, lo, 100), tid=0)
+    expect = sorted(k for k in keys if k >= lo)[:100]
+    assert [k for k, _ in out] == expect
+    tm.stop()
+
+
+def test_hashmap_size_query_atomicity():
+    tm = Multiverse(2)
+    h = HashMap(tm, 64)
+    for k in range(100):
+        run(tm, lambda tx, k=k: h.insert(tx, k, k), tid=0)
+    stop = threading.Event()
+
+    def churn():
+        i = 0
+        while not stop.is_set():
+            # insert+delete one key in ONE txn: size must stay 100
+            def txn(tx):
+                h.insert(tx, 1000 + (i % 7), 1)
+                h.delete(tx, 1000 + (i % 7))
+            run(tm, txn, tid=1)
+            i += 1
+
+    th = threading.Thread(target=churn)
+    th.start()
+    try:
+        sizes = [run(tm, h.size_query, tid=0) for _ in range(5)]
+    finally:
+        stop.set()
+        th.join()
+        tm.stop()
+    assert all(sz == 100 for sz in sizes), sizes
+
+
+def test_abtree_splits_deep_tree():
+    tm = Multiverse(1)
+    t = ABTree(tm, a=2, b=4)          # tiny fanout -> deep tree
+    n = 500
+    for k in range(n):
+        run(tm, lambda tx, k=k: t.insert(tx, k, -k), tid=0)
+    for k in range(0, n, 17):
+        assert run(tm, lambda tx, k=k: t.search(tx, k), tid=0) == -k
+    out = run(tm, lambda tx: t.range_query(tx, 0, n), tid=0)
+    assert [k for k, _ in out] == list(range(n))
+    tm.stop()
