@@ -67,9 +67,11 @@ def bench_fig6_throughput(structs=("abtree",), quick: bool = False):
                 # K1/K2/K3 count ATTEMPTS; one RQ attempt here costs ~10ms
                 # (vs ~0.1ms on the paper's EPYC), so the thresholds scale
                 # down by the same ~100x to keep the same wall-clock
-                # engagement point (paper SS5 tunables)
+                # engagement point (paper SS5 tunables).  One params object
+                # for every backend: baselines take the lock-table sizing
+                # from it and ignore the Multiverse-only knobs.
                 params = MultiverseParams(k1=4, k2=6, k3=6,
-                                          lock_table_bits=12)                     if tm == "multiverse" else None
+                                          lock_table_bits=12)
                 r = run_workload(tm, wl, params=params)
                 rows.append(r)
                 _emit(f"fig6/{structure}/{wl.name}/{tm}",
@@ -93,7 +95,7 @@ def bench_appendix_structs():
 
 def bench_fig8_timevarying():
     from benchmarks.workload import run_workload
-    from repro.configs.paper_stm import WorkloadConfig
+    from repro.configs.paper_stm import MultiverseParams, WorkloadConfig
 
     base = dict(structure="abtree", prefill=2000, key_range=4000,
                 rq_size=2000, n_threads=2, duration_s=4.0)
@@ -118,13 +120,14 @@ def bench_fig8_timevarying():
     for variant, forced in [("adaptive", None), ("forcedQ", "Q"),
                             ("forcedU", "U")]:
         r = run_workload("multiverse", spawn, forced_mode=forced,
+                         params=MultiverseParams(lock_table_bits=12),
                          time_series=True,
                          interval_cb_factory=interval_factory)
         r["variant"] = variant
         rows.append(r)
         _emit(f"fig8/{variant}", 1e6 / max(r["ops_per_sec"], 1e-9),
               f"ops/s={r['ops_per_sec']:.0f};"
-              f"transitions={r['stm_stats'].get('mode_transitions', 0)}")
+              f"transitions={r['stm_stats']['mode_transitions']}")
     _save("fig8", rows)
     return rows
 

@@ -16,31 +16,14 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from repro.api import MaxRetriesExceeded, make_tm, run  # noqa: F401
 from repro.configs.paper_stm import MultiverseParams, WorkloadConfig
-from repro.core.baselines import BASELINES
-from repro.core.stm import (AbortTx, MaxRetriesExceeded, Multiverse, run)
 from repro.structs import ABTree, ExternalBST, HashMap
 
 MAX_RETRIES = 2000          # 'maximum allowed aborts' before an op quits
 
-
-def make_tm(name: str, n_threads: int,
-            params: Optional[MultiverseParams] = None,
-            forced_mode: Optional[str] = None):
-    if name == "multiverse":
-        tm = Multiverse(n_threads, params or MultiverseParams(
-            lock_table_bits=12))
-        if forced_mode == "U":
-            # forced-U variant (Fig. 8): jump the counter to Mode U and
-            # pin a synthetic sticky bit so the bg thread stays there
-            tm.mode_counter.store(2)
-            tm.first_obs_mode_u_ts.store(tm.clock.load())
-            tm.announce[0].sticky_mode_u = True
-        elif forced_mode == "Q":
-            tm.params = dataclasses.replace(tm.params, k2=1 << 30,
-                                            k3=1 << 30)
-        return tm
-    return BASELINES[name](n_threads)
+# Backend construction (incl. the Fig. 8 forced-mode variants) now lives in
+# the repro.api registry; `make_tm` is re-exported above for the benches.
 
 
 def make_struct(kind: str, tm):
@@ -119,7 +102,8 @@ def run_workload(tm_name: str, cfg: WorkloadConfig, *,
     """One trial.  Returns throughput of regular threads only."""
     import sys
     total_threads = cfg.n_threads + cfg.n_dedicated_updaters
-    tm = make_tm(tm_name, total_threads, params, forced_mode)
+    tm = make_tm(tm_name, total_threads, params=params,
+                 forced_mode=forced_mode)
     s = make_struct(cfg.structure, tm)
     prefill(tm, s, cfg)
     # fine-grained GIL switching: without this, an entire RQ often runs
@@ -151,7 +135,7 @@ def run_workload(tm_name: str, cfg: WorkloadConfig, *,
     sys.setswitchinterval(old_interval)
     dt = time.time() - t0
     regular = results[:cfg.n_threads]
-    stats = tm.stats() if hasattr(tm, "stats") else {}
+    stats = tm.stats()               # normalized schema on every backend
     tm.stop()
     out = {
         "tm": tm_name + (f"-{forced_mode}" if forced_mode else ""),

@@ -1,0 +1,80 @@
+"""Multi-backend bake-off: ONE workload, every substrate, one API.
+
+The same transfer/audit workload (quickstart's) runs via `make_tm` on all
+five word-level TMs and the Layer-B MVStore; because `stats()` is one
+schema everywhere, the comparison table needs zero per-backend glue.
+
+    PYTHONPATH=src python examples/bakeoff.py [--seconds 1.0]
+"""
+import argparse
+import threading
+import time
+
+from repro.api import MaxRetriesExceeded, atomic, backend_names, make_tm, run
+from repro.configs.paper_stm import MultiverseParams
+
+N_ACCOUNTS = 100
+INITIAL = 100
+
+
+def bake(backend: str, seconds: float):
+    tm = make_tm(backend, n_threads=3,
+                 params=MultiverseParams(k1=4, lock_table_bits=10))
+    base = tm.alloc(N_ACCOUNTS, INITIAL)
+    stop = threading.Event()
+    done = [0, 0]
+
+    @atomic(tm)
+    def transfer(tx, src, dst, amt):
+        a = tx.read(base + src)
+        b = tx.read(base + dst)
+        tx.write(base + src, a - amt)
+        tx.write(base + dst, b + amt)
+
+    def worker(tid):
+        i = 0
+        while not stop.is_set():
+            src, dst = i % N_ACCOUNTS, (i * 13 + 7) % N_ACCOUNTS
+            if src != dst:
+                transfer(src, dst, 5, tid=tid)
+                done[tid] += 1
+            i += 1
+
+    ths = [threading.Thread(target=worker, args=(t,)) for t in (0, 1)]
+    [t.start() for t in ths]
+    audits = failed = 0
+    t0 = time.time()
+    while time.time() - t0 < seconds:
+        try:
+            total = run(tm, lambda tx: sum(tx.read(base + i)
+                                           for i in range(N_ACCOUNTS)),
+                        tid=2, max_retries=500)
+            assert total == N_ACCOUNTS * INITIAL, "torn read!"
+            audits += 1
+        except MaxRetriesExceeded:
+            failed += 1                   # the starvation the paper fixes
+    stop.set()
+    [t.join() for t in ths]
+    st = tm.stats()
+    tm.stop()
+    return {"backend": backend, "transfers": sum(done), "audits": audits,
+            "failed_audits": failed, **{k: st[k] for k in
+            ("aborts", "versioned_commits", "mode")}}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=1.0)
+    ap.add_argument("--backends", nargs="*", default=list(backend_names()))
+    args = ap.parse_args()
+    print(f"{'backend':10s} {'transfers':>9s} {'audits':>6s} "
+          f"{'failed':>6s} {'aborts':>7s} {'versioned':>9s} mode")
+    for b in args.backends:
+        r = bake(b, args.seconds)
+        print(f"{r['backend']:10s} {r['transfers']:9d} {r['audits']:6d} "
+              f"{r['failed_audits']:6d} {r['aborts']:7d} "
+              f"{r['versioned_commits']:9d} {r['mode']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,37 +1,47 @@
-"""Quickstart: the Multiverse STM in 60 lines.
+"""Quickstart: the unified transactional API in 60 lines.
 
 Two threads move money between accounts while a third takes consistent
-snapshots of all balances — the paper's long-running read.  Run:
+snapshots of all balances — the paper's long-running read.  The SAME code
+runs on any backend: pass `--backend tl2` (or dctl/norec/tinystm) to watch
+an unversioned TM handle the audit, or `--backend mvstore` to run it on
+the Layer-B parameter store.  Run:
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend multiverse]
 """
+import argparse
 import threading
 import time
 
+from repro.api import atomic, make_tm, run
 from repro.configs.paper_stm import MultiverseParams
-from repro.core.stm import Multiverse, run
 
 N_ACCOUNTS = 200
 INITIAL = 100
 
 
 def main():
-    tm = Multiverse(n_threads=3,
-                    params=MultiverseParams(k1=4, lock_table_bits=10))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="multiverse")
+    args = ap.parse_args()
+
+    tm = make_tm(args.backend, n_threads=3,
+                 params=MultiverseParams(k1=4, lock_table_bits=10))
     base = tm.alloc(N_ACCOUNTS, INITIAL)
     stop = threading.Event()
+
+    @atomic(tm)
+    def transfer(tx, src, dst, amt):
+        a = tx.read(base + src)
+        b = tx.read(base + dst)
+        tx.write(base + src, a - amt)
+        tx.write(base + dst, b + amt)
 
     def transfer_worker(tid):
         i = 0
         while not stop.is_set():
-            src, dst, amt = i % N_ACCOUNTS, (i * 13 + 7) % N_ACCOUNTS, 5
+            src, dst = i % N_ACCOUNTS, (i * 13 + 7) % N_ACCOUNTS
             if src != dst:
-                def txn(tx):
-                    a = tx.read(base + src)
-                    b = tx.read(base + dst)
-                    tx.write(base + src, a - amt)
-                    tx.write(base + dst, b + amt)
-                run(tm, txn, tid=tid)
+                transfer(src, dst, 5, tid=tid)
             i += 1
 
     workers = [threading.Thread(target=transfer_worker, args=(t,))
@@ -39,9 +49,10 @@ def main():
     [w.start() for w in workers]
 
     # long-running reads: sum every balance, atomically, while transfers fly
+    def audit(tx):
+        return sum(tx.read(base + i) for i in range(N_ACCOUNTS))
+
     for trial in range(5):
-        def audit(tx):
-            return sum(tx.read(base + i) for i in range(N_ACCOUNTS))
         total = run(tm, audit, tid=2)
         assert total == N_ACCOUNTS * INITIAL, "torn read!"
         print(f"audit {trial}: total={total} (consistent) "
@@ -51,8 +62,8 @@ def main():
     stop.set()
     [w.join() for w in workers]
     s = tm.stats()
-    print(f"commits={s['commits']} aborts={s['aborts']} "
-          f"versioned_commits={s['versioned_commits']} "
+    print(f"backend={s['backend']} commits={s['commits']} "
+          f"aborts={s['aborts']} versioned_commits={s['versioned_commits']} "
           f"mode_transitions={s['mode_transitions']}")
     tm.stop()
 

@@ -8,6 +8,11 @@ request is served from the newest committed snapshot without ever pausing
 training — the long-running-read guarantee of Multiverse.
 
     PYTHONPATH=src python examples/serve_snapshots.py --steps 30
+
+(For the word-granularity spelling of the same begin/commit vocabulary —
+and a store-level handle that speaks it too — see `repro.api` and
+examples/quickstart.py; `make_tm("mvstore", ...)` runs this pattern as
+literal read-only transactions.)
 """
 import argparse
 import threading

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Smoke test: run the quickstart (transfer workers + consistent audits)
+# under a timeout.  Exercises the repro.api surface end to end; the
+# quickstart asserts on torn reads, so a non-zero exit means real breakage.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TIMEOUT="${SMOKE_TIMEOUT:-120}"
+BACKEND="${SMOKE_BACKEND:-multiverse}"
+
+PYTHONPATH=src timeout "$TIMEOUT" \
+    python examples/quickstart.py --backend "$BACKEND"
+echo "smoke ok (backend=$BACKEND)"

@@ -1,0 +1,59 @@
+"""repro.api — the sole public transactional surface of this repo.
+
+The paper's single programming model over both layers:
+
+    from repro.api import make_tm, atomic, run
+
+    tm = make_tm("multiverse", n_threads=4)     # or tl2/dctl/norec/
+    base = tm.alloc(100, 0)                     #    tinystm/mvstore
+
+    @atomic(tm)
+    def incr(tx, i):
+        tx.write(base + i, tx.read(base + i) + 1)
+
+    with tm.txn(tid=1) as tx:                   # single attempt
+        total = sum(tx.read(base + i) for i in range(100))
+
+    tm.stats()                                  # normalized schema
+    tm.stop()
+
+See API.md for the full contract.  `repro.core.stm.run()` remains as a
+deprecation shim over `run` here.
+"""
+from repro.api.adapters import WordSubstrate  # noqa: F401
+from repro.api.registry import (  # noqa: F401
+    backend_names,
+    make_tm,
+    register_backend,
+)
+from repro.api.substrate import (  # noqa: F401
+    AbortTx,
+    MaxRetriesExceeded,
+    Substrate,
+    SubstrateBase,
+    Txn,
+    as_substrate,
+    atomic,
+    run,
+)
+from repro.core.stats_schema import (  # noqa: F401
+    STATS_KEYS,
+    base_stats,
+    normalize_stats,
+)
+
+__all__ = [
+    "AbortTx", "MaxRetriesExceeded", "MVStoreHandle", "STATS_KEYS",
+    "Substrate", "SubstrateBase", "Txn", "WordSubstrate", "as_substrate",
+    "atomic", "backend_names", "base_stats", "make_tm", "normalize_stats",
+    "register_backend", "run",
+]
+
+
+def __getattr__(name):
+    # MVStoreHandle pulls in jax; load it lazily so word-level users
+    # (benchmarks, the STM tests) never pay the import
+    if name == "MVStoreHandle":
+        from repro.api.mvhandle import MVStoreHandle
+        return MVStoreHandle
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,102 @@
+"""Thin adapters that put the word-level TMs behind the Substrate protocol.
+
+`WordSubstrate` wraps any `TMBase` descendant (the Multiverse STM or a
+TL2/DCTL/NOrec/TinySTM baseline).  It owns none of the transactional logic
+— begin/read/write/commit stay in the backend — it only normalizes the
+lifecycle so the shared retry loop (`repro.api.run`), the `txn()` context
+manager and `@atomic` work identically on every TM:
+
+  * `abort` is idempotent and backend-aware: it unwinds in-place writes
+    via `_rollback_abort` where the backend has one (DCTL/TinySTM), via
+    `_abort` otherwise, and does nothing when the backend already rolled
+    back before raising `AbortTx`;
+  * `stats()` reports the shared schema with the registry backend name;
+  * unknown attributes fall through to the raw TM, so instrumentation
+    that pokes backend internals (`tm.vlt`, `tm.mode_counter`, ...)
+    keeps working on the wrapped object.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.api.substrate import SubstrateBase, Txn
+from repro.core.stats_schema import normalize_stats
+from repro.core.stm import AbortTx
+
+__all__ = ["WordSubstrate"]
+
+
+class WordSubstrate(SubstrateBase):
+    def __init__(self, raw: Any, name: Optional[str] = None):
+        self.raw = raw
+        self.name = name or type(raw).__name__.lower()
+
+    # -- lifecycle -------------------------------------------------------
+    def begin_operation(self, tid: int) -> None:
+        ctx = self.raw.ctx(tid)
+        if hasattr(ctx, "versioned"):
+            ctx.versioned = False
+            ctx.no_versioning = False
+            ctx.initial_versioned_ts = None
+        ctx.attempts = 0
+
+    def begin(self, tid: int = 0) -> Txn:
+        self.raw.begin(tid)
+        ctx = self.raw.ctx(tid)
+        ctx.active = True
+        return Txn(self, ctx, tid)
+
+    def commit(self, txn: Txn) -> None:
+        self.raw._try_commit(txn._ctx)
+        txn._ctx.active = False
+
+    def abort(self, txn: Txn) -> None:
+        ctx = txn._ctx
+        if not getattr(ctx, "active", False):
+            return                        # backend already rolled back
+        raw = self.raw
+        try:
+            if hasattr(raw, "_rollback_abort") and (
+                    getattr(ctx, "undo", None) or
+                    getattr(ctx, "write_map", None)):
+                raw._rollback_abort(ctx)  # encounter-time in-place writes
+            else:
+                raw._abort(ctx)
+        except AbortTx:
+            pass                          # baselines raise from _abort
+        ctx.active = False
+
+    # -- accesses --------------------------------------------------------
+    def read(self, ctx: Any, addr: int) -> Any:
+        return self.raw.tm_read(ctx, addr)
+
+    def write(self, ctx: Any, addr: int, value: Any) -> None:
+        self.raw.tm_write(ctx, addr, value)
+
+    def txn_alloc(self, ctx: Any, n: int, init: Any = None) -> int:
+        return self.raw.tx_alloc(ctx, n, init)
+
+    def read_count(self, ctx: Any) -> int:
+        if hasattr(ctx, "read_cnt"):
+            return ctx.read_cnt
+        return len(ctx.read_set) + len(ctx.read_vals)
+
+    # -- heap / lifecycle pass-through ------------------------------------
+    def alloc(self, n: int, init: Any = None) -> int:
+        return self.raw.alloc(n, init)
+
+    def peek(self, addr: int) -> Any:
+        return self.raw.peek(addr)
+
+    def stats(self) -> dict:
+        return normalize_stats(self.raw.stats(), backend=self.name)
+
+    def stop(self) -> None:
+        self.raw.stop()
+
+    def __getattr__(self, item: str) -> Any:
+        # instrumentation escape hatch: vlt, mode_counter, announce, ...
+        return getattr(self.raw, item)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"WordSubstrate({self.name})"

@@ -1,0 +1,289 @@
+"""MVStoreHandle — the Layer-B MVStore behind the same Substrate protocol.
+
+Wraps `mv_init/mv_commit/mv_snapshot` plus an `MVController` in the
+begin/read/write/commit vocabulary of `repro.api`, so a snapshot read is
+LITERALLY a read-only transaction — the same `@atomic` audit that runs on
+the word-level Multiverse STM runs unchanged here:
+
+  * the heap is ONE parameter block (an int32 vector); `alloc` grows it,
+    `Txn.read/write` index into it;
+  * an update transaction buffers writes (TL2-style) and publishes them as
+    one `mv_commit` under a single-writer lock — the optimizer-step
+    analogue — validating that the global clock has not advanced past its
+    begin snapshot;
+  * a read-only transaction validates the clock on the unversioned path
+    (the Mode-Q reader that aborts when the writer commits first) and
+    resolves ring versions at its read clock on the versioned path;
+  * aborts feed the SAME K1/K2/K3 heuristics as the word level, via
+    `MVController.ReaderHandle`: after K1 aborts a reader goes versioned
+    (requesting ring versioning of the block), K2/K3 CAS the global mode
+    Q -> QtoU, and the controller's background thread cycles the modes.
+
+Values are numeric (this layer models parameter blocks); word substrates
+additionally store arbitrary Python objects.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.api.substrate import SubstrateBase, Txn
+from repro.core import modes as M
+from repro.core.stats_schema import base_stats
+from repro.core.stm import AbortTx
+
+__all__ = ["MVStoreHandle"]
+
+_COUNTER_KEYS = ("commits", "aborts", "ro_commits", "versioned_commits")
+
+
+class _MVCtx:
+    """Per-transaction context at the store level."""
+
+    __slots__ = ("tid", "read_clock", "write_buf", "read_only", "read_cnt",
+                 "active", "versioned")
+
+    def __init__(self, tid: int):
+        self.tid = tid
+        self.read_clock = 0
+        self.write_buf: dict = {}
+        self.read_only = True
+        self.read_cnt = 0
+        self.active = False
+        self.versioned = False
+
+
+class MVStoreHandle(SubstrateBase):
+    name = "mvstore"
+
+    def __init__(self, n_threads: int = 1, *, cfg=None, params=None,
+                 controller=None, versioned: str = "none",
+                 start_bg: bool = True):
+        import jax.numpy as jnp
+        from repro.configs.base import MVStoreConfig
+        from repro.configs.paper_stm import MultiverseParams
+        from repro.core import mvstore
+        from repro.core.mvcontroller import MVController
+
+        self._jnp = jnp
+        self._mvstore = mvstore
+        self.n_threads = n_threads
+        self.cfg = cfg or MVStoreConfig(ring_slots=8)
+        self.params = params or MultiverseParams()
+        self.controller = controller or MVController(
+            params=self.params, mvcfg=self.cfg, start_bg=start_bg)
+        self._own_controller = controller is None
+        self._key = "heap"
+        live = {self._key: jnp.zeros((0,), jnp.int32)}
+        self._path = mvstore.block_paths(live)[0]
+        self._commit_lock = threading.Lock()
+        self._readers = [self.controller.reader() for _ in range(n_threads)]
+        self._counters = [{k: 0 for k in _COUNTER_KEYS}
+                         for _ in range(n_threads)]
+        self._no_version = [False] * n_threads
+        self._state = None
+        self._snap: Tuple = (0, np.zeros((0,), np.int32), None, None)
+        self._install(mvstore.mv_init(live, self.cfg, versioned=versioned))
+
+    # -- state installation ----------------------------------------------
+    def _install(self, state) -> None:
+        """Publish a new MVStoreState plus a host-side numpy snapshot.
+
+        Readers only ever dereference `self._snap` — one immutable tuple
+        replaced wholesale, so a read never sees half of a commit (the JAX
+        buffer-immutability analogue of the paper's EBR argument)."""
+        live = np.asarray(state.live[self._key])
+        ring = state.ring.get(self._path)
+        if ring is not None:
+            snap = (int(state.clock), live, np.asarray(ring),
+                    np.asarray(state.ring_ts[self._path]))
+        else:
+            snap = (int(state.clock), live, None, None)
+        self._state = state
+        self._snap = snap
+
+    # -- Substrate protocol ----------------------------------------------
+    def begin_operation(self, tid: int) -> None:
+        # no_versioning is per OPERATION: a versioned txn that writes must
+        # restart unversioned, and must not be re-promoted on the next
+        # abort of the same operation (the word-level livelock guard)
+        self._no_version[tid] = False
+
+    def begin(self, tid: int = 0) -> Txn:
+        h = self._readers[tid]
+        if self._no_version[tid]:
+            h.versioned = False
+        snap = self._snap
+        ctx = _MVCtx(tid)
+        ctx.read_clock = snap[0]
+        h.begin(ctx.read_clock)
+        ctx.versioned = h.versioned
+        ctx.active = True
+        return Txn(self, ctx, tid)
+
+    def read(self, ctx: _MVCtx, addr: int) -> Any:
+        ctx.read_cnt += 1
+        if addr in ctx.write_buf:
+            return ctx.write_buf[addr]
+        clock, live, ring, ring_ts = self._snap
+        if ctx.versioned and ctx.read_only:
+            if ring is None:
+                # Mode-Q reader versions the block itself (paper SS4.1's
+                # reader-triggered versioning, at block granularity)
+                clock, live, ring, ring_ts = self._version_block()
+            valid = (ring_ts != -1) & (ring_ts <= ctx.read_clock)
+            if not valid.any():
+                self._abort_ctx(ctx)       # fell out of the ring window
+            slot = int(np.argmax(np.where(valid, ring_ts, -1)))
+            return ring[slot, addr].item()
+        # unversioned (Mode-Q reader / writer encounter read): validate
+        # that no commit has advanced the clock past our begin snapshot
+        if clock > ctx.read_clock:
+            self._abort_ctx(ctx)
+        return live[addr].item()
+
+    def write(self, ctx: _MVCtx, addr: int, value: Any) -> None:
+        if ctx.versioned:
+            # versioned reads are of the PAST and cannot anchor writes to
+            # the present: restart on the unversioned path, sticky for
+            # this operation (mirrors Multiverse.tm_write)
+            self._no_version[ctx.tid] = True
+            self._abort_ctx(ctx)
+        ctx.read_only = False
+        ctx.write_buf[addr] = value
+
+    def txn_alloc(self, ctx: _MVCtx, n: int, init: Any = None) -> int:
+        # applied immediately, NOT rolled back on abort: block shapes are
+        # step-boundary state at this layer, and an orphaned tail of the
+        # heap block is harmless (unreachable until a committed write
+        # publishes its address)
+        return self.alloc(n, init)
+
+    def _version_block(self) -> Tuple:
+        """Seed a ring for the heap block with the live value.  Timestamp
+        is the earliest safe one — firstObsModeUTs when valid, else the
+        current clock (paper SS4.2); a reader whose snapshot is older than
+        the seed then aborts via the no-valid-slot check."""
+        with self._commit_lock:
+            state = self._state
+            if self._path not in state.ring:
+                state = self._mvstore.version_blocks(
+                    state, {self._path}, self.cfg,
+                    first_obs_mode_u_ts=self.controller.first_obs_mode_u_ts)
+                self._install(state)
+        return self._snap
+
+    def commit(self, txn: Txn) -> None:
+        ctx = txn._ctx
+        h = self._readers[ctx.tid]
+        c = self._counters[ctx.tid]
+        if ctx.read_only:
+            c["ro_commits"] += 1
+            if ctx.versioned:
+                c["versioned_commits"] += 1
+            h.on_commit(ctx.read_cnt, commit_clock=self._snap[0])
+            ctx.active = False
+            return
+        conflict = False
+        with self._commit_lock:
+            state = self._state
+            if int(state.clock) != ctx.read_clock:
+                conflict = True            # another step committed first
+            else:
+                state = self.controller.trainer_tick(state)
+                mode = self.controller.current_local_mode()
+                heap = state.live[self._key]
+                idx = np.array(sorted(ctx.write_buf), dtype=np.int32)
+                vals = np.array([ctx.write_buf[int(i)] for i in idx])
+                new_heap = heap.at[idx].set(
+                    self._jnp.asarray(vals, heap.dtype))
+                state = self._mvstore.mv_commit(
+                    state, {self._key: new_heap}, local_mode=mode,
+                    cfg=self.cfg)
+                self._install(state)
+        if conflict:
+            self._abort_ctx(ctx)
+        c["commits"] += 1
+        h.attempts = 0
+        ctx.active = False
+
+    def abort(self, txn: Txn) -> None:
+        ctx = txn._ctx
+        if not getattr(ctx, "active", False):
+            return
+        try:
+            self._abort_ctx(ctx)
+        except AbortTx:
+            pass
+
+    def _abort_ctx(self, ctx: _MVCtx) -> None:
+        self._counters[ctx.tid]["aborts"] += 1
+        h = self._readers[ctx.tid]
+        if ctx.read_only:
+            # read-only aborts drive the paper's heuristics (K1 go-
+            # versioned, K2/K3 mode CAS, block-versioning requests)
+            h.on_abort(ctx.read_cnt, wanted_blocks=(self._path,))
+        else:
+            h.attempts += 1
+        ctx.active = False
+        raise AbortTx()
+
+    # -- heap -------------------------------------------------------------
+    def alloc(self, n: int, init: Any = None) -> int:
+        jnp = self._jnp
+        fill = 0 if init is None else init
+        with self._commit_lock:
+            state = self._state
+            live = state.live[self._key]
+            base = int(live.shape[0])
+            was_versioned = self._path in state.ring
+            new_live = {self._key: jnp.concatenate(
+                [live, jnp.full((n,), fill, live.dtype)])}
+            state = self._mvstore.MVStoreState(
+                live=new_live, ring={}, ring_ts={}, clock=state.clock)
+            if was_versioned:   # reseed the ring at the new block shape
+                state = self._mvstore.version_blocks(
+                    state, {self._path}, self.cfg,
+                    first_obs_mode_u_ts=self.controller.first_obs_mode_u_ts)
+            self._install(state)
+        return base
+
+    def peek(self, addr: int) -> Any:
+        return self._snap[1][addr].item()
+
+    # -- Layer-B extras ----------------------------------------------------
+    def snapshot(self, read_clock: Optional[int] = None):
+        """(params_view, ok) via mv_snapshot — the functional spelling of a
+        read-only transaction at `read_clock` (default: now)."""
+        state = self._state
+        if read_clock is None:
+            read_clock = int(state.clock)
+        return self._mvstore.mv_snapshot(state, read_clock)
+
+    @property
+    def state(self):
+        """The underlying MVStoreState (trainer integration)."""
+        return self._state
+
+    @property
+    def clock(self) -> int:
+        return self._snap[0]
+
+    # -- stats / lifecycle -------------------------------------------------
+    def stats(self) -> dict:
+        out = base_stats(backend=self.name,
+                         mode=M.mode_name(self.controller.mode_counter))
+        for c in self._counters:
+            for k in _COUNTER_KEYS:
+                out[k] += c[k]
+        out["mode_cas"] = sum(h.stats["mode_cas"] for h in self._readers)
+        out["mode_transitions"] = self.controller.stats["mode_transitions"]
+        out["unversioned_buckets"] = self.controller.stats[
+            "blocks_unversioned"]
+        return out
+
+    def stop(self) -> None:
+        if self._own_controller:
+            self.controller.stop()

@@ -1,0 +1,132 @@
+"""Backend registry: `make_tm(name, n_threads=..., **kw)`.
+
+One constructor for every substrate, so benchmarks, examples and tests
+stop special-casing backends:
+
+    make_tm("multiverse", n_threads=8, params=MultiverseParams(k1=4))
+    make_tm("tl2", n_threads=8)
+    make_tm("dctl", n_threads=8, irrevocable_after=50)
+    make_tm("mvstore", n_threads=4, ring_slots=16)
+
+Every factory returns a `SubstrateBase` — the word-level TMs wrapped in
+`WordSubstrate`, the store-level MVStore as an `MVStoreHandle` — so the
+product always speaks `txn()/run()/atomic()/stats()/stop()` with the
+normalized stats schema.
+
+`forced_mode` pins the mode machinery for the Fig. 8 ablations on the
+backends that have one (multiverse, mvstore): "U" jumps the mode counter
+to Mode U and pins a sticky bit so the background thread stays there; "Q"
+disables the Q->QtoU CAS heuristics (K2/K3 -> inf).  The mode-less
+baselines ignore it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from repro.api.adapters import WordSubstrate
+from repro.api.substrate import SubstrateBase
+
+__all__ = ["make_tm", "register_backend", "backend_names"]
+
+_BACKENDS: Dict[str, Callable[..., SubstrateBase]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., SubstrateBase],
+                     overwrite: bool = False) -> None:
+    """Register `factory(n_threads, params, forced_mode, **kw)` under
+    `name` (case-insensitive).  Later scaling PRs (sharded stores, async
+    readers) plug in here instead of growing new entry points."""
+    key = name.lower()
+    if key in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _BACKENDS[key] = factory
+
+
+def backend_names() -> tuple:
+    return tuple(sorted(_BACKENDS))
+
+
+def make_tm(name: str, n_threads: int = 1, *,
+            params: Any = None, forced_mode: Optional[str] = None,
+            **kw) -> SubstrateBase:
+    try:
+        factory = _BACKENDS[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {backend_names()}"
+        ) from None
+    return factory(n_threads, params=params, forced_mode=forced_mode, **kw)
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _make_multiverse(n_threads: int, params=None, forced_mode=None,
+                     start_bg: bool = True, **kw) -> SubstrateBase:
+    from repro.configs.paper_stm import MultiverseParams
+    from repro.core.stm import Multiverse
+
+    if params is None:
+        params = MultiverseParams(**kw)
+    elif kw:
+        params = dataclasses.replace(params, **kw)
+    if forced_mode == "Q":
+        # disable the Q->QtoU CAS heuristics: the TM can never leave Q
+        params = dataclasses.replace(params, k2=1 << 30, k3=1 << 30)
+    tm = Multiverse(n_threads, params, start_bg=start_bg)
+    if forced_mode == "U":
+        # jump the counter to Mode U and pin a synthetic sticky bit so
+        # the background thread stays there (Fig. 8 forced-U variant)
+        tm.mode_counter.store(2)
+        tm.first_obs_mode_u_ts.store(tm.clock.load())
+        tm.announce[0].sticky_mode_u = True
+    return WordSubstrate(tm, name="multiverse")
+
+
+def _make_baseline(cls, name: str):
+    def factory(n_threads: int, params=None, forced_mode=None,
+                **kw) -> SubstrateBase:
+        # baselines share the Multiverse lock-table sizing for fairness
+        if params is not None and "lock_bits" not in kw:
+            kw["lock_bits"] = params.lock_table_bits
+        return WordSubstrate(cls(n_threads, **kw), name=name)
+    return factory
+
+
+def _make_mvstore(n_threads: int, params=None, forced_mode=None,
+                  **kw) -> SubstrateBase:
+    from repro.api.mvhandle import MVStoreHandle
+    from repro.configs.paper_stm import MultiverseParams
+
+    if "ring_slots" in kw:
+        from repro.configs.base import MVStoreConfig
+        kw.setdefault("cfg", MVStoreConfig(ring_slots=kw.pop("ring_slots")))
+    if forced_mode == "Q":
+        params = dataclasses.replace(params or MultiverseParams(),
+                                     k2=1 << 30, k3=1 << 30)
+    h = MVStoreHandle(n_threads, params=params, **kw)
+    if forced_mode == "U":
+        # pin the controller in Mode U via a dedicated sticky reader
+        # handle no worker tid ever commits through (so sticky_cleared
+        # can never clear it) — the store-level forced-U ablation
+        ctl = h.controller
+        ctl.mode_counter = 2                      # Q -> QtoU -> U
+        ctl.stats["mode_transitions"] += 2
+        ctl.first_obs_mode_u_ts = 0
+        ctl.reader().ann.sticky_mode_u = True
+    return h
+
+
+def _register_builtins() -> None:
+    from repro.core.baselines import BASELINES
+
+    register_backend("multiverse", _make_multiverse)
+    for name, cls in BASELINES.items():
+        register_backend(name, _make_baseline(cls, name))
+    register_backend("mvstore", _make_mvstore)
+
+
+_register_builtins()

@@ -19,18 +19,20 @@ from typing import Any, Dict, List, Optional
 
 from repro.core.clock import AtomicInt, GlobalClock
 from repro.core.locks import LockState, LockTable
+from repro.core.stats_schema import base_stats
 from repro.core.stm import AbortTx, TMBase
 
 
 class _Ctx:
     __slots__ = ("tid", "r_clock", "read_set", "write_map", "undo",
                  "attempts", "irrevocable", "stats", "read_vals",
-                 "read_only")
+                 "read_only", "active", "alloc_log")
 
     def __init__(self, tid: int):
         self.tid = tid
         self.attempts = 0
         self.irrevocable = False
+        self.active = False
         self.stats = {"commits": 0, "aborts": 0, "versioned_commits": 0,
                       "ro_commits": 0, "mode_cas": 0}
         self.reset()
@@ -42,6 +44,7 @@ class _Ctx:
         self.undo: Dict[int, Any] = {}
         self.read_vals: List[tuple] = []
         self.read_only = True
+        self.alloc_log: List[tuple] = []
 
 
 class _BaselineTM(TMBase):
@@ -57,22 +60,34 @@ class _BaselineTM(TMBase):
     def begin(self, tid: int):
         ctx = self._ctxs[tid]
         ctx.reset()
+        ctx.active = True
         ctx.r_clock = self.clock.load()
         return _BTx(self, ctx)
 
     def tx_alloc(self, ctx, n, init=None):
-        return self.alloc(n, init)
+        base = self.alloc(n, init)
+        ctx.alloc_log.append((base, n))
+        return base
 
-    def stats(self) -> Dict[str, int]:
-        out = {"commits": 0, "aborts": 0, "ro_commits": 0}
+    def stats(self) -> Dict[str, object]:
+        """Normalized schema: counters a baseline never touches stay 0
+        (no versioning, no modes), so every consumer sees one key set."""
+        out = base_stats(backend=self.name, mode="-")
         for c in self._ctxs:
-            for k in out:
+            for k in ("commits", "aborts", "ro_commits"):
                 out[k] += c.stats[k]
         return out
 
     def _abort(self, ctx):
+        # free txn-local allocations (nobody else can have seen them: the
+        # addresses were only reachable via this txn's unpublished writes)
+        for base, n in ctx.alloc_log:
+            for i in range(n):
+                self._heap[base + i] = None
+        ctx.alloc_log.clear()
         ctx.stats["aborts"] += 1
         ctx.attempts += 1
+        ctx.active = False
         raise AbortTx()
 
 
@@ -166,13 +181,14 @@ class DCTL(_BaselineTM):
 
     def __init__(self, n_threads, lock_bits: int = 16,
                  irrevocable_after: int = 100):
-        super().__init__(n_threads)
+        super().__init__(n_threads, lock_bits)
         self.irrevocable_after = irrevocable_after
         self._irrevocable_token = threading.Lock()
 
     def begin(self, tid):
         ctx = self._ctxs[tid]
         ctx.reset()
+        ctx.active = True
         if ctx.attempts >= self.irrevocable_after and not ctx.irrevocable:
             self._irrevocable_token.acquire()
             ctx.irrevocable = True
@@ -257,12 +273,13 @@ class NOrec(_BaselineTM):
     """No ownership records: one global seqlock + value validation."""
 
     def __init__(self, n_threads, lock_bits: int = 16):
-        super().__init__(n_threads)
+        super().__init__(n_threads, lock_bits)
         self.seq = AtomicInt(0)
 
     def begin(self, tid):
         ctx = self._ctxs[tid]
         ctx.reset()
+        ctx.active = True
         while True:
             s = self.seq.load()
             if s % 2 == 0:

@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.configs.paper_stm import MultiverseParams
 from repro.core import heuristics as heur
 from repro.core import modes as M
+from repro.core import stats_schema
 from repro.core.bloom import BloomTable
 from repro.core.clock import AtomicInt, GlobalClock
 from repro.core.ebr import EBR, TxRetireBuffer
@@ -526,17 +527,16 @@ class Multiverse(TMBase):
             self._bg.join(timeout=2.0)
 
     # aggregate stats ----------------------------------------------------
-    def stats(self) -> Dict[str, int]:
-        out: Dict[str, int] = {"commits": 0, "aborts": 0,
-                               "versioned_commits": 0, "ro_commits": 0,
-                               "mode_cas": 0}
+    def stats(self) -> Dict[str, object]:
+        out = stats_schema.base_stats(
+            backend=self.name, mode=M.mode_name(self.mode_counter.load()))
         for c in self._ctxs:
-            for k in out:
+            for k in ("commits", "aborts", "versioned_commits",
+                      "ro_commits", "mode_cas"):
                 out[k] += c.stats[k]
         out["mode_transitions"] = self.stats_mode_transitions
         out["unversioned_buckets"] = self.stats_unversioned_buckets
         out["ebr_freed"] = self.ebr.freed_count
-        out["mode"] = M.mode_name(self.mode_counter.load())
         return out
 
 
@@ -564,44 +564,21 @@ class _Tx:
 
 
 def run(tm, fn: Callable, tid: int = 0, max_retries: int = 0) -> Any:
-    """Retry loop (setjmp/longjmp analogue).  max_retries=0 -> unbounded.
+    """DEPRECATED shim — the retry loop now lives in `repro.api.run`.
 
-    Each call is a NEW transaction: per-transaction state (versioned flag,
-    attempt count) resets here and persists only across RETRIES of this
-    same operation — the paper's thread-locals are reset at line 10 of
-    Alg. 1 for a new transaction.  Any non-abort exception escaping the
-    body aborts the in-flight attempt (rollback + lock release) before
-    propagating, so user errors can never poison the TM.
+    Kept so existing call sites keep working; new code should use
+
+        from repro.api import run, atomic, make_tm
+
+    which accepts both raw TMs and `make_tm(...)` substrates and owns the
+    retry/backoff/max_retries policy for every backend.
     """
-    c = tm.ctx(tid)
-    if hasattr(c, "versioned"):
-        c.versioned = False
-        c.no_versioning = False
-        c.initial_versioned_ts = None
-    c.attempts = 0
-    tries = 0
-    while True:
-        tx = tm.begin(tid)
-        try:
-            result = fn(tx)
-            tm._try_commit(tx._ctx if hasattr(tx, "_ctx") else tx.ctx)
-            return result
-        except AbortTx:
-            tries += 1
-            if max_retries and tries >= max_retries:
-                raise MaxRetriesExceeded(
-                    f"{tm.name}: txn exceeded {max_retries} retries")
-        except BaseException:
-            # user-code exception mid-attempt: roll back so the TM is not
-            # poisoned (locks held / writes unrolled), then propagate
-            try:
-                if getattr(c, "active", False):
-                    tm._abort(c)
-                elif hasattr(tm, "_rollback_abort") and (c.undo
-                                                         or c.write_map):
-                    tm._rollback_abort(c)
-            except AbortTx:
-                pass
-            except AttributeError:
-                pass
-            raise
+    import warnings
+
+    warnings.warn(
+        "repro.core.stm.run() is deprecated; use repro.api.run() (or "
+        "@repro.api.atomic / tm.txn()) instead",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import run as api_run
+
+    return api_run(tm, fn, tid=tid, max_retries=max_retries)

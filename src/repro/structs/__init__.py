@@ -1,3 +1,9 @@
+"""Transactional data structures over the `repro.api` substrate surface.
+
+Each structure takes any `make_tm(...)` product (or raw TM) at
+construction and uniform `Txn` handles per operation, so one
+implementation serves every backend.
+"""
 from repro.structs.abtree import ABTree  # noqa: F401
 from repro.structs.extbst import ExternalBST  # noqa: F401
 from repro.structs.hashmap import HashMap  # noqa: F401

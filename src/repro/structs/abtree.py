@@ -13,13 +13,16 @@ paper studies.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.api.substrate import Substrate, Txn
 
 NULL = 0
 
 
 class ABTree:
-    def __init__(self, tm, a: int = 4, b: int = 16):
+    def __init__(self, tm: "Substrate", a: int = 4, b: int = 16):
         self.tm = tm
         self.a, self.b = a, b
         self.node_words = 2 + b + (b + 1)
@@ -27,7 +30,7 @@ class ABTree:
         self.root_ptr = tm.alloc(1, NULL)
 
     # -- node helpers (operate through a tx) -------------------------------
-    def _new_node(self, tx, is_leaf: bool) -> int:
+    def _new_node(self, tx: "Txn", is_leaf: bool) -> int:
         base = tx.alloc(self.node_words, None)
         tx.write(base, 1 if is_leaf else 0)
         tx.write(base + 1, 0)
@@ -42,12 +45,12 @@ class ABTree:
     def _child_off(self, i: int) -> int:
         return 2 + self.b + i
 
-    def _node_keys(self, tx, node: int) -> List[int]:
+    def _node_keys(self, tx: "Txn", node: int) -> List[int]:
         n = tx.read(node + 1)
         return [tx.read(node + self._keys_off(i)) for i in range(n)]
 
     # -- operations --------------------------------------------------------
-    def search(self, tx, key: int) -> Optional[object]:
+    def search(self, tx: "Txn", key: int) -> Optional[object]:
         node = tx.read(self.root_ptr)
         if node == NULL:
             return None
@@ -64,7 +67,7 @@ class ABTree:
                 ci += 1
             node = tx.read(node + self._child_off(ci))
 
-    def _split_child(self, tx, parent: int, ci: int, child: int) -> None:
+    def _split_child(self, tx: "Txn", parent: int, ci: int, child: int) -> None:
         """Split a full child; parent is guaranteed non-full."""
         b = self.b
         is_leaf = tx.read(child)
@@ -104,7 +107,7 @@ class ABTree:
         tx.write(parent + self._child_off(ci + 1), right)
         tx.write(parent + 1, pn + 1)
 
-    def insert(self, tx, key: int, value) -> bool:
+    def insert(self, tx: "Txn", key: int, value) -> bool:
         """Returns True if inserted, False if key existed (value updated)."""
         b = self.b
         root = tx.read(self.root_ptr)
@@ -150,7 +153,7 @@ class ABTree:
                     child = tx.read(node + self._child_off(ci + 1))
             node = child
 
-    def delete(self, tx, key: int) -> bool:
+    def delete(self, tx: "Txn", key: int) -> bool:
         """Relaxed delete: remove from leaf, no rebalancing."""
         node = tx.read(self.root_ptr)
         if node == NULL:
@@ -173,12 +176,12 @@ class ABTree:
                 ci += 1
             node = tx.read(node + self._child_off(ci))
 
-    def upsert_touch(self, tx, key: int, value) -> None:
+    def upsert_touch(self, tx: "Txn", key: int, value) -> None:
         """Dedicated-updater op: ALWAYS writes (never read-only, SS5)."""
         if not self.insert(tx, key, value):
             pass                                   # insert wrote the value
 
-    def range_query(self, tx, lo: int, count: int) -> List[Tuple[int,
+    def range_query(self, tx: "Txn", lo: int, count: int) -> List[Tuple[int,
                                                                  object]]:
         """Collect up to `count` pairs with key >= lo (in key order)."""
         out: List[Tuple[int, object]] = []

@@ -6,7 +6,10 @@ Delete unlinks the leaf and replaces its parent with the sibling.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.api.substrate import Substrate, Txn
 
 NULL = 0
 
@@ -14,12 +17,12 @@ NULL = 0
 class ExternalBST:
     NODE = 5
 
-    def __init__(self, tm):
+    def __init__(self, tm: "Substrate"):
         self.tm = tm
         tm.alloc(1)
         self.root_ptr = tm.alloc(1, NULL)
 
-    def _leaf(self, tx, key, value) -> int:
+    def _leaf(self, tx: "Txn", key, value) -> int:
         n = tx.alloc(self.NODE)
         tx.write(n, 1)
         tx.write(n + 1, key)
@@ -28,7 +31,7 @@ class ExternalBST:
         tx.write(n + 4, value)
         return n
 
-    def _internal(self, tx, key, left, right) -> int:
+    def _internal(self, tx: "Txn", key, left, right) -> int:
         n = tx.alloc(self.NODE)
         tx.write(n, 0)
         tx.write(n + 1, key)
@@ -37,7 +40,7 @@ class ExternalBST:
         tx.write(n + 4, None)
         return n
 
-    def search(self, tx, key: int) -> Optional[object]:
+    def search(self, tx: "Txn", key: int) -> Optional[object]:
         node = tx.read(self.root_ptr)
         if node == NULL:
             return None
@@ -48,7 +51,7 @@ class ExternalBST:
             return tx.read(node + 4)
         return None
 
-    def insert(self, tx, key: int, value) -> bool:
+    def insert(self, tx: "Txn", key: int, value) -> bool:
         node = tx.read(self.root_ptr)
         if node == NULL:
             tx.write(self.root_ptr, self._leaf(tx, key, value))
@@ -73,7 +76,7 @@ class ExternalBST:
             tx.write(parent + (2 if went_left else 3), inner)
         return True
 
-    def delete(self, tx, key: int) -> bool:
+    def delete(self, tx: "Txn", key: int) -> bool:
         node = tx.read(self.root_ptr)
         if node == NULL:
             return False
@@ -95,10 +98,10 @@ class ExternalBST:
             tx.write(grand + (2 if g_left else 3), sibling)
         return True
 
-    def upsert_touch(self, tx, key: int, value) -> None:
+    def upsert_touch(self, tx: "Txn", key: int, value) -> None:
         self.insert(tx, key, value)
 
-    def range_query(self, tx, lo: int, count: int) -> List[Tuple[int,
+    def range_query(self, tx: "Txn", lo: int, count: int) -> List[Tuple[int,
                                                                  object]]:
         out: List[Tuple[int, object]] = []
         root = tx.read(self.root_ptr)

@@ -3,16 +3,23 @@
 Node layout: [0]=key, [1]=value, [2]=next.  Size queries (SQ) — atomic
 count over every bucket — replace range queries for this structure, as in
 the paper (no order-preserving hash).
+
+Structures are substrate-agnostic: `tm` is anything with the
+`repro.api.Substrate` alloc surface and ops take the uniform `Txn` handle,
+so the same structure runs on Multiverse and on every baseline.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.api.substrate import Substrate, Txn
 
 NULL = 0
 
 
 class HashMap:
-    def __init__(self, tm, n_buckets: int = 1 << 16):
+    def __init__(self, tm: "Substrate", n_buckets: int = 1 << 16):
         self.tm = tm
         self.n_buckets = n_buckets
         tm.alloc(1)                      # burn address 0 (NULL)
@@ -21,7 +28,7 @@ class HashMap:
     def _bucket(self, key: int) -> int:
         return self.table + ((key * 0x9E3779B1) % self.n_buckets)
 
-    def search(self, tx, key: int) -> Optional[object]:
+    def search(self, tx: "Txn", key: int) -> Optional[object]:
         node = tx.read(self._bucket(key))
         while node != NULL:
             if tx.read(node) == key:
@@ -29,7 +36,7 @@ class HashMap:
             node = tx.read(node + 2)
         return None
 
-    def insert(self, tx, key: int, value) -> bool:
+    def insert(self, tx: "Txn", key: int, value) -> bool:
         head_addr = self._bucket(key)
         node = tx.read(head_addr)
         while node != NULL:
@@ -44,7 +51,7 @@ class HashMap:
         tx.write(head_addr, new)
         return True
 
-    def delete(self, tx, key: int) -> bool:
+    def delete(self, tx: "Txn", key: int) -> bool:
         head_addr = self._bucket(key)
         prev = NULL
         node = tx.read(head_addr)
@@ -59,11 +66,11 @@ class HashMap:
             prev, node = node, tx.read(node + 2)
         return False
 
-    def upsert_touch(self, tx, key: int, value) -> None:
+    def upsert_touch(self, tx: "Txn", key: int, value) -> None:
         """Dedicated-updater op: always writes."""
         self.insert(tx, key, value)
 
-    def size_query(self, tx) -> int:
+    def size_query(self, tx: "Txn") -> int:
         """Atomic size: the long-running read-only transaction (SQ)."""
         total = 0
         for b in range(self.n_buckets):

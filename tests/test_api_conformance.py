@@ -1,0 +1,258 @@
+"""Substrate-conformance suite: ONE workload, every backend, one contract.
+
+Runs the quickstart transfer + long-running audit through `make_tm(...)`
+for all five word-level backends plus the Layer-B `MVStoreHandle`,
+asserting (a) no torn reads, (b) the normalized stats schema everywhere,
+(c) the deprecation shim still works, and (d) the paper's separation —
+versioned substrates commit the mid-read-interleaved audit, unversioned
+ones starve — through the SAME API on BOTH layers.
+"""
+import threading
+import time
+import warnings
+
+import pytest
+
+from repro.api import (AbortTx, MaxRetriesExceeded, STATS_KEYS, Txn,
+                       atomic, backend_names, make_tm, run)
+from repro.configs.paper_stm import MultiverseParams
+
+WORD_BACKENDS = ["multiverse", "tl2", "dctl", "norec", "tinystm"]
+ALL_BACKENDS = WORD_BACKENDS + ["mvstore"]
+
+
+def _make(backend, n_threads=3, **kw):
+    params = MultiverseParams(k1=2, k2=50, k3=50, lock_table_bits=8)
+    if backend == "mvstore":
+        kw.setdefault("ring_slots", 16)
+        kw.setdefault("start_bg", False)
+    return make_tm(backend, n_threads, params=params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# transfer + audit (the quickstart workload) on every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_transfer_audit_no_torn_reads(backend):
+    n, initial = 32, 100
+    tm = _make(backend)
+    base = tm.alloc(n, initial)
+
+    @atomic(tm)
+    def transfer(tx, src, dst, amt):
+        a = tx.read(base + src)
+        b = tx.read(base + dst)
+        tx.write(base + src, a - amt)
+        tx.write(base + dst, b + amt)
+
+    for i in range(40):
+        src, dst = i % n, (i * 13 + 7) % n
+        if src != dst:
+            transfer(src, dst, 5, tid=i % 2)
+
+    total = run(tm, lambda tx: sum(tx.read(base + i) for i in range(n)),
+                tid=2)
+    st = tm.stats()
+    tm.stop()
+    assert total == n * initial
+    assert st["commits"] >= 35
+    assert st["ro_commits"] >= 1
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_concurrent_transfer_audit_invariant(backend):
+    """Threaded transfers + audits: the bank invariant must hold on every
+    substrate (baselines may retry, but a committed audit is consistent)."""
+    n, initial = 24, 50
+    tm = _make(backend)
+    base = tm.alloc(n, initial)
+    stop = threading.Event()
+    errors = []
+
+    @atomic(tm)
+    def transfer(tx, src, dst):
+        a = tx.read(base + src)
+        b = tx.read(base + dst)
+        tx.write(base + src, a - 1)
+        tx.write(base + dst, b + 1)
+
+    def worker(tid):
+        i = 0
+        try:
+            while not stop.is_set():
+                src, dst = i % n, (i * 7 + 3) % n
+                if src != dst:
+                    transfer(src, dst, tid=tid)
+                i += 1
+        except Exception as e:  # pragma: no cover - fails the test below
+            errors.append(repr(e))
+
+    ths = [threading.Thread(target=worker, args=(t,)) for t in (0, 1)]
+    [t.start() for t in ths]
+    sums = []
+    deadline = time.time() + 2.0
+    while time.time() < deadline and len(sums) < 10:
+        sums.append(run(tm, lambda tx: sum(tx.read(base + i)
+                                           for i in range(n)), tid=2))
+    stop.set()
+    [t.join() for t in ths]
+    tm.stop()
+    assert not errors, errors
+    assert sums and all(s == n * initial for s in sums), sums
+
+
+# ---------------------------------------------------------------------------
+# the paper's separation, deterministically, via one API on both layers
+# ---------------------------------------------------------------------------
+
+
+def _audit_with_mid_read_commit(tm, base, n, max_retries):
+    """Long read; a dedicated updater commits between its two halves,
+    touching both, so every unversioned TM must abort every attempt."""
+
+    @atomic(tm, tid=1)
+    def upd(tx):
+        tx.write(base, tx.read(base) + 1)
+        tx.write(base + n - 1, tx.read(base + n - 1) + 1)
+
+    def audit(tx):
+        first = [tx.read(base + i) for i in range(n // 2)]
+        upd()
+        rest = [tx.read(base + i) for i in range(n // 2, n)]
+        return sum(first) + sum(rest)
+
+    return run(tm, audit, tid=0, max_retries=max_retries)
+
+
+@pytest.mark.parametrize("backend", ["multiverse", "mvstore"])
+def test_versioned_substrates_commit_long_audit(backend):
+    n = 16
+    tm = _make(backend, n_threads=2)
+    base = tm.alloc(n, 1)
+    total = _audit_with_mid_read_commit(tm, base, n, max_retries=30)
+    st = tm.stats()
+    tm.stop()
+    # a consistent snapshot: n plus 2 per fully-included updater commit
+    assert total >= n and (total - n) % 2 == 0
+    assert st["versioned_commits"] > 0          # the versioned path did it
+
+
+@pytest.mark.parametrize("backend", ["tl2", "dctl", "norec", "tinystm"])
+def test_unversioned_substrates_starve_long_audit(backend):
+    n = 16
+    tm = _make(backend, n_threads=2)
+    base = tm.alloc(n, 1)
+    with pytest.raises(MaxRetriesExceeded):
+        _audit_with_mid_read_commit(tm, base, n, max_retries=10)
+    tm.stop()
+
+
+# ---------------------------------------------------------------------------
+# stats schema / registry / shim / handle plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_stats_schema_identical_across_backends():
+    key_sets = {}
+    for backend in ALL_BACKENDS:
+        tm = _make(backend, n_threads=1)
+        a = tm.alloc(1, 0)
+        run(tm, lambda tx: tx.write(a, 1), tid=0)
+        key_sets[backend] = frozenset(tm.stats())
+        tm.stop()
+    assert set(key_sets.values()) == {frozenset(STATS_KEYS)}, key_sets
+
+
+def test_registry_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_tm("no-such-tm", 1)
+    assert set(ALL_BACKENDS) <= set(backend_names())
+
+
+def test_stm_run_shim_still_works_and_warns():
+    from repro.core import stm
+    tm = stm.Multiverse(1, start_bg=False)
+    a = tm.alloc(1, 0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = stm.run(tm, lambda tx: (tx.write(a, 7), tx.read(a))[1], tid=0)
+    tm.stop()
+    assert out == 7 and tm.peek(a) == 7
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_user_errors_roll_back_and_do_not_poison(backend):
+    tm = _make(backend, n_threads=1)
+    a = tm.alloc(1, 0)
+
+    def bad(tx):
+        tx.write(a, 99)
+        raise RuntimeError("user bug")
+
+    with pytest.raises(RuntimeError):
+        run(tm, bad, tid=0)
+    assert tm.peek(a) == 0               # the write was rolled back
+    # TM not poisoned: the same thread can run transactions again, both
+    # through run() and through the single-attempt context manager
+    # (which may surface AbortTx once on deferred-clock backends)
+    for _ in range(10):
+        try:
+            with tm.txn(tid=0) as tx:
+                tx.write(a, 1)
+            break
+        except AbortTx:
+            continue
+    got = run(tm, lambda tx: tx.read(a), tid=0)
+    tm.stop()
+    assert got == 1
+
+
+def test_atomic_decorator_returns_value_and_overrides_tid():
+    tm = _make("multiverse", n_threads=2)
+    a = tm.alloc(2, 0)
+
+    @atomic(tm)
+    def put(tx, i, v):
+        tx.write(a + i, v)
+        return v * 10
+
+    assert put(0, 3) == 30
+    assert put(1, 4, tid=1) == 40
+    vals = run(tm, lambda tx: (tx.read(a), tx.read(a + 1)), tid=0)
+    tm.stop()
+    assert vals == (3, 4)
+
+
+def test_txn_handles_are_uniform_type():
+    for backend in ALL_BACKENDS:
+        tm = _make(backend, n_threads=1)
+        tm.alloc(1, 0)
+        with tm.txn(tid=0) as tx:
+            assert isinstance(tx, Txn)
+            assert tx.read_count == 0
+        tm.stop()
+
+
+def test_mvstore_snapshot_is_a_read_only_txn():
+    """Layer-B parity: the functional mv_snapshot view and a read-only
+    transaction through the API observe the same committed state."""
+    tm = _make("mvstore", n_threads=1)
+    base = tm.alloc(8, 5)
+
+    @atomic(tm)
+    def bump(tx, i):
+        tx.write(base + i, tx.read(base + i) + i)
+
+    for i in range(8):
+        bump(i)
+    via_txn = run(tm, lambda tx: [tx.read(base + i) for i in range(8)],
+                  tid=0)
+    view, ok = tm.snapshot()
+    import numpy as np
+    via_snapshot = np.asarray(view["heap"])[base:base + 8].tolist()
+    tm.stop()
+    assert bool(ok)
+    assert via_txn == via_snapshot == [5 + i for i in range(8)]

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
-from hypothesis import HealthCheck, given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp
