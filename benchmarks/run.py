@@ -5,28 +5,58 @@ results/).  Scaled to this 1-core container: prefill sizes, durations and
 thread counts shrink; ratios and starvation behavior are the claims
 (EXPERIMENTS.md SSClaims maps each figure to its validation).
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run                # everything
   PYTHONPATH=src python -m benchmarks.run fig6 mvstore   # a subset
+  PYTHONPATH=src python -m benchmarks.run fig6 --seed 3  # pinned RNG
+
+Every ``bench_*.json`` carries a ``meta`` block (git SHA, seed, backend
+set, mode-transition counts per row) so BENCH trajectories across PRs
+name exactly what they measured and can be re-run bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import subprocess
 import sys
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+SEED = 0                          # set by --seed; threaded into workloads
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(__file__), capture_output=True, text=True,
+            timeout=5).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 - sandboxed/bare checkouts
+        return "unknown"
 
 
 def _emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
 
-def _save(name: str, obj):
+def _save(name: str, rows):
+    """Results JSON = {meta, rows}: the meta block pins the trajectory."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    meta = {
+        "bench": name,
+        "git_sha": _git_sha(),
+        "seed": SEED,
+        "backends": sorted({r["backend"] for r in rows
+                            if isinstance(r, dict) and "backend" in r}),
+        "mode_transitions": {
+            r.get("tm", r.get("backend", "?")): r["mode_transitions"]
+            for r in rows
+            if isinstance(r, dict) and "mode_transitions" in r},
+    }
     with open(os.path.join(RESULTS_DIR, f"bench_{name}.json"), "w") as f:
-        json.dump(obj, f, indent=1)
+        json.dump({"meta": meta, "rows": rows}, f, indent=1)
 
 
 # ---------------------------------------------------------------------------
@@ -72,7 +102,7 @@ def bench_fig6_throughput(structs=("abtree",), quick: bool = False):
                 # from it and ignore the Multiverse-only knobs.
                 params = MultiverseParams(k1=4, k2=6, k3=6,
                                           lock_table_bits=12)
-                r = run_workload(tm, wl, params=params)
+                r = run_workload(tm, wl, params=params, seed=SEED)
                 rows.append(r)
                 _emit(f"fig6/{structure}/{wl.name}/{tm}",
                       1e6 / max(r["ops_per_sec"], 1e-9),
@@ -122,7 +152,7 @@ def bench_fig8_timevarying():
         r = run_workload("multiverse", spawn, forced_mode=forced,
                          params=MultiverseParams(lock_table_bits=12),
                          time_series=True,
-                         interval_cb_factory=interval_factory)
+                         interval_cb_factory=interval_factory, seed=SEED)
         r["variant"] = variant
         rows.append(r)
         _emit(f"fig8/{variant}", 1e6 / max(r["ops_per_sec"], 1e-9),
@@ -164,8 +194,9 @@ def bench_fig9_memory():
         prefill(tm, s, wl)
         stop = threading.Event()
         res = [ThreadResult() for _ in range(2)]
-        ths = [threading.Thread(target=worker_loop,
-                                args=(tm, s, wl, t, stop, res[t], t >= 1))
+        ths = [threading.Thread(
+            target=worker_loop,
+            args=(tm, s, wl, t, stop, res[t], t >= 1, None, SEED))
                for t in range(2)]
         [t.start() for t in ths]
         peak_nodes = 0
@@ -314,7 +345,16 @@ BENCHES = {
 
 
 def main() -> None:
-    which = [a for a in sys.argv[1:] if a in BENCHES] or list(BENCHES)
+    global SEED
+    argv = sys.argv[1:]
+    if "--seed" in argv:
+        i = argv.index("--seed")
+        try:
+            SEED = int(argv[i + 1])
+        except (IndexError, ValueError):
+            sys.exit("usage: benchmarks.run [bench ...] [--seed INT]")
+        del argv[i:i + 2]
+    which = [a for a in argv if a in BENCHES] or list(BENCHES)
     print("name,us_per_call,derived")
     for name in which:
         t0 = time.time()

@@ -34,8 +34,8 @@ def make_struct(kind: str, tm):
     return ExternalBST(tm)
 
 
-def prefill(tm, s, cfg: WorkloadConfig):
-    rnd = random.Random(42)
+def prefill(tm, s, cfg: WorkloadConfig, seed: int = 0):
+    rnd = random.Random(42 + seed)
     n = 0
     while n < cfg.prefill:
         k = rnd.randrange(cfg.key_range)
@@ -53,8 +53,8 @@ class ThreadResult:
 
 def worker_loop(tm, s, cfg: WorkloadConfig, tid: int, stop: threading.Event,
                 res: ThreadResult, dedicated_updater: bool,
-                interval_cb=None):
-    rnd = random.Random(1000 + tid)
+                interval_cb=None, seed: int = 0):
+    rnd = random.Random(1000 + tid + seed * 10007)
     is_hash = isinstance(s, HashMap)
     while not stop.is_set():
         if interval_cb is not None:
@@ -98,14 +98,19 @@ def run_workload(tm_name: str, cfg: WorkloadConfig, *,
                  params: Optional[MultiverseParams] = None,
                  forced_mode: Optional[str] = None,
                  time_series: bool = False,
-                 interval_cb_factory=None) -> Dict:
-    """One trial.  Returns throughput of regular threads only."""
+                 interval_cb_factory=None, seed: int = 0) -> Dict:
+    """One trial.  Returns throughput of regular threads only.
+
+    ``seed`` offsets every RNG (prefill + per-worker op streams) so a
+    BENCH_*.json trajectory names the exact op sequence it measured —
+    thread interleaving stays OS-scheduled, but the work is pinned.
+    """
     import sys
     total_threads = cfg.n_threads + cfg.n_dedicated_updaters
     tm = make_tm(tm_name, total_threads, params=params,
                  forced_mode=forced_mode)
     s = make_struct(cfg.structure, tm)
-    prefill(tm, s, cfg)
+    prefill(tm, s, cfg, seed=seed)
     # fine-grained GIL switching: without this, an entire RQ often runs
     # between two thread switches and dedicated updaters can never
     # interleave (the paper's contention disappears into GIL artifacts)
@@ -119,7 +124,7 @@ def run_workload(tm_name: str, cfg: WorkloadConfig, *,
         cb = interval_cb_factory(t) if interval_cb_factory else None
         threads.append(threading.Thread(
             target=worker_loop,
-            args=(tm, s, cfg, t, stop, results[t], dedicated, cb)))
+            args=(tm, s, cfg, t, stop, results[t], dedicated, cb, seed)))
     series = []
     t0 = time.time()
     [th.start() for th in threads]
@@ -139,13 +144,16 @@ def run_workload(tm_name: str, cfg: WorkloadConfig, *,
     tm.stop()
     out = {
         "tm": tm_name + (f"-{forced_mode}" if forced_mode else ""),
+        "backend": tm_name,
         "workload": cfg.name,
         "structure": cfg.structure,
         "threads": cfg.n_threads,
         "updaters": cfg.n_dedicated_updaters,
+        "seed": seed,
         "ops_per_sec": sum(r.ops for r in regular) / dt,
         "rqs": sum(r.rqs for r in regular),
         "failed_ops": sum(r.failed_ops for r in regular),
+        "mode_transitions": stats.get("mode_transitions", 0),
         "stm_stats": {k: v for k, v in stats.items()},
     }
     if time_series:

@@ -1,27 +1,34 @@
-"""Thin adapters that put the word-level TMs behind the Substrate protocol.
+"""Thin adapter that puts the word-level engine behind the Substrate protocol.
 
-`WordSubstrate` wraps any `TMBase` descendant (the Multiverse STM or a
-TL2/DCTL/NOrec/TinySTM baseline).  It owns none of the transactional logic
-— begin/read/write/commit stay in the backend — it only normalizes the
-lifecycle so the shared retry loop (`repro.api.run`), the `txn()` context
-manager and `@atomic` work identically on every TM:
+`WordSubstrate` wraps any `TransactionEngine` (the Multiverse STM or a
+TL2/DCTL/NOrec/TinySTM baseline — all policies over `repro.core.engine`).
+It owns none of the transactional logic — begin/read/write/commit stay in
+the engine — it only normalizes the lifecycle so the shared retry loop
+(`repro.api.run`), the `txn()` context manager and `@atomic` work
+identically on every TM:
 
-  * `abort` is idempotent and backend-aware: it unwinds in-place writes
-    via `_rollback_abort` where the backend has one (DCTL/TinySTM), via
-    `_abort` otherwise, and does nothing when the backend already rolled
-    back before raising `AbortTx`;
+  * `abort` delegates to the engine's idempotent `_abort` (policy-specific
+    rollback included), so a voluntary or user-error unwind can never
+    leave locks held or writes unrolled;
+  * `validate` routes `Txn.validate_bulk` to the engine's batched
+    read-set validator (scalar below `BULK_MIN`, vectorized above);
+  * `on_retries_exhausted` lets the retry loop force-release anything a
+    capped transaction still holds (locks, retire buffers);
   * `stats()` reports the shared schema with the registry backend name;
   * unknown attributes fall through to the raw TM, so instrumentation
     that pokes backend internals (`tm.vlt`, `tm.mode_counter`, ...)
     keeps working on the wrapped object.
+
+Pre-engine TMs (third-party `TMBase` descendants) still work: every
+engine-specific call falls back to the old attribute-poking behavior.
 """
 from __future__ import annotations
 
 from typing import Any, Optional
 
 from repro.api.substrate import SubstrateBase, Txn
+from repro.core.engine import AbortTx
 from repro.core.stats_schema import normalize_stats
-from repro.core.stm import AbortTx
 
 __all__ = ["WordSubstrate"]
 
@@ -33,7 +40,11 @@ class WordSubstrate(SubstrateBase):
 
     # -- lifecycle -------------------------------------------------------
     def begin_operation(self, tid: int) -> None:
-        ctx = self.raw.ctx(tid)
+        op = getattr(self.raw, "begin_operation", None)
+        if op is not None:                # engine path
+            op(tid)
+            return
+        ctx = self.raw.ctx(tid)           # legacy raw-TM fallback
         if hasattr(ctx, "versioned"):
             ctx.versioned = False
             ctx.no_versioning = False
@@ -54,16 +65,10 @@ class WordSubstrate(SubstrateBase):
         ctx = txn._ctx
         if not getattr(ctx, "active", False):
             return                        # backend already rolled back
-        raw = self.raw
         try:
-            if hasattr(raw, "_rollback_abort") and (
-                    getattr(ctx, "undo", None) or
-                    getattr(ctx, "write_map", None)):
-                raw._rollback_abort(ctx)  # encounter-time in-place writes
-            else:
-                raw._abort(ctx)
+            self.raw._abort(ctx)          # engine: idempotent, no raise
         except AbortTx:
-            pass                          # baselines raise from _abort
+            pass                          # legacy TMs raise from _abort
         ctx.active = False
 
     # -- accesses --------------------------------------------------------
@@ -77,9 +82,21 @@ class WordSubstrate(SubstrateBase):
         return self.raw.tx_alloc(ctx, n, init)
 
     def read_count(self, ctx: Any) -> int:
-        if hasattr(ctx, "read_cnt"):
+        if getattr(ctx, "read_cnt", 0):
             return ctx.read_cnt
-        return len(ctx.read_set) + len(ctx.read_vals)
+        return len(getattr(ctx, "read_set", ())) + \
+            len(getattr(ctx, "read_vals", ()))
+
+    # -- validation / exhaustion ------------------------------------------
+    def validate(self, ctx: Any) -> bool:
+        """`Txn.validate_bulk`: batched read-set check, engine-routed."""
+        fn = getattr(self.raw, "validate_ctx", None)
+        return bool(fn(ctx)) if fn is not None else True
+
+    def on_retries_exhausted(self, tid: int) -> None:
+        fn = getattr(self.raw, "on_retries_exhausted", None)
+        if fn is not None:
+            fn(tid)
 
     # -- heap / lifecycle pass-through ------------------------------------
     def alloc(self, n: int, init: Any = None) -> int:

@@ -31,8 +31,8 @@ import numpy as np
 
 from repro.api.substrate import SubstrateBase, Txn
 from repro.core import modes as M
+from repro.core.engine import AbortTx
 from repro.core.stats_schema import base_stats
-from repro.core.stm import AbortTx
 
 __all__ = ["MVStoreHandle"]
 
@@ -217,6 +217,23 @@ class MVStoreHandle(SubstrateBase):
             self._abort_ctx(ctx)
         except AbortTx:
             pass
+
+    def validate(self, ctx: _MVCtx) -> bool:
+        """`Txn.validate_bulk` at the store level (read-only check).
+
+        Unversioned transactions are valid while no commit has advanced
+        the clock past their begin snapshot; versioned readers while the
+        ring still holds a slot at/below their read clock.  One clock
+        compare / one vectorized timestamp scan — the block-granularity
+        analogue of the word engine's bulk read-set validation.
+        """
+        clock, live, ring, ring_ts = self._snap
+        if ctx.versioned and ctx.read_only:
+            if ring_ts is None:
+                return True               # block not versioned yet
+            return bool(((ring_ts != -1) & (ring_ts <= ctx.read_clock))
+                        .any())
+        return clock <= ctx.read_clock
 
     def _abort_ctx(self, ctx: _MVCtx) -> None:
         self._counters[ctx.tid]["aborts"] += 1

@@ -65,7 +65,8 @@ def make_tm(name: str, n_threads: int = 1, *,
 
 
 def _make_multiverse(n_threads: int, params=None, forced_mode=None,
-                     start_bg: bool = True, **kw) -> SubstrateBase:
+                     start_bg: bool = True, array_heap: bool = False,
+                     **kw) -> SubstrateBase:
     from repro.configs.paper_stm import MultiverseParams
     from repro.core.stm import Multiverse
 
@@ -76,7 +77,8 @@ def _make_multiverse(n_threads: int, params=None, forced_mode=None,
     if forced_mode == "Q":
         # disable the Q->QtoU CAS heuristics: the TM can never leave Q
         params = dataclasses.replace(params, k2=1 << 30, k3=1 << 30)
-    tm = Multiverse(n_threads, params, start_bg=start_bg)
+    tm = Multiverse(n_threads, params, start_bg=start_bg,
+                    heap=_make_heap(array_heap))
     if forced_mode == "U":
         # jump the counter to Mode U and pin a synthetic sticky bit so
         # the background thread stays there (Fig. 8 forced-U variant)
@@ -86,13 +88,24 @@ def _make_multiverse(n_threads: int, params=None, forced_mode=None,
     return WordSubstrate(tm, name="multiverse")
 
 
+def _make_heap(array_heap: bool):
+    """`array_heap=True`: numeric words in the engine's int64 buffer
+    (`engine.ArrayHeap`) so bulk kernels can touch the whole heap; the
+    default ObjectHeap additionally stores arbitrary Python values."""
+    if not array_heap:
+        return None
+    from repro.core.engine import ArrayHeap
+    return ArrayHeap()
+
+
 def _make_baseline(cls, name: str):
     def factory(n_threads: int, params=None, forced_mode=None,
-                **kw) -> SubstrateBase:
+                array_heap: bool = False, **kw) -> SubstrateBase:
         # baselines share the Multiverse lock-table sizing for fairness
         if params is not None and "lock_bits" not in kw:
             kw["lock_bits"] = params.lock_table_bits
-        return WordSubstrate(cls(n_threads, **kw), name=name)
+        return WordSubstrate(cls(n_threads, heap=_make_heap(array_heap),
+                                 **kw), name=name)
     return factory
 
 

@@ -30,7 +30,7 @@ import random
 import time
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
-from repro.core.stm import AbortTx, MaxRetriesExceeded
+from repro.core.engine import AbortTx, MaxRetriesExceeded
 
 __all__ = [
     "AbortTx", "MaxRetriesExceeded", "Substrate", "SubstrateBase", "Txn",
@@ -68,6 +68,21 @@ class Txn:
     @property
     def read_count(self) -> int:
         return self._sub.read_count(self._ctx)
+
+    def validate_bulk(self) -> bool:
+        """Batched mid-transaction validation: is everything this txn has
+        read still consistent right now?
+
+        Routes to the substrate's engine-level validator — the word-level
+        engine checks the whole read set in one vectorized pass (numpy
+        gather on CPU, the ``kernels/validate.py`` Pallas kernel on TPU)
+        once it exceeds ``engine.BULK_MIN`` entries; `MVStoreHandle`
+        checks its snapshot clock / ring window.  Read-only: never aborts
+        and never mutates txn state, so long readers can poll it to fail
+        fast instead of discovering staleness only at commit.
+        """
+        fn = getattr(self._sub, "validate", None)
+        return bool(fn(self._ctx)) if fn is not None else True
 
 
 @runtime_checkable
@@ -148,6 +163,16 @@ class SubstrateBase:
     def read_count(self, ctx: Any) -> int:
         return getattr(ctx, "read_cnt", 0)
 
+    def validate(self, ctx: Any) -> bool:
+        """`Txn.validate_bulk` hook: read-only consistency check."""
+        return True
+
+    def on_retries_exhausted(self, tid: int) -> None:
+        """Retry-cap cleanup hook: `run` calls this before raising
+        `MaxRetriesExceeded` so a capped transaction can never leave
+        encounter-time locks held or retire buffers unflushed (a wedged
+        thread must not block later writers — paper SS5's abort cap)."""
+
     # -- uniform user surface -------------------------------------------
     def txn(self, tid: int = 0) -> _TxnScope:
         """One transaction attempt as a context manager."""
@@ -217,6 +242,9 @@ def run(tm: Any, fn: Callable[[Txn], Any], tid: int = 0,
             sub.abort(txn)               # no-op if the backend rolled back
             tries += 1
             if max_retries and tries >= max_retries:
+                cleanup = getattr(sub, "on_retries_exhausted", None)
+                if cleanup is not None:
+                    cleanup(tid)         # release locks, flush retires
                 raise MaxRetriesExceeded(
                     f"{sub.name}: txn exceeded {max_retries} retries")
             if backoff_s:

@@ -1,4 +1,4 @@
-"""Baseline STMs the paper compares against (SS5/SS6), on the same harness.
+"""Baseline STMs the paper compares against (SS5/SS6), as ``TMPolicy``s.
 
   TL2     — commit-time locking, buffered writes, GV-style global clock.
   DCTL    — encounter-time locking, in-place writes, deferred clock
@@ -6,110 +6,32 @@
   NOrec   — single global seqlock, buffered writes, value validation.
   TinySTM — encounter-time locking + snapshot (timestamp) extension.
 
-All share TMBase's heap and the `run(tm, fn, tid)` retry loop, so every
-benchmark data structure runs unmodified on every TM.  None of these keep
-versions: a long read-only transaction aborts whenever a concurrent commit
-advances a lock version past its read clock — the behavior Multiverse's
-versioned path removes (paper Figs. 1/6/7).
+Each baseline is a policy object over ``repro.core.engine`` — the shared
+``TransactionEngine`` owns the heap, clock, lock table, descriptors and
+abort/alloc bookkeeping, so what remains here is exactly the algorithmic
+difference: the read/write access rules and the commit pipeline.  All
+read-set revalidation routes through ``engine.revalidate`` (scalar loop
+below ``BULK_MIN`` reads, vectorized bulk gather above it).
+
+None of these keep versions: a long read-only transaction aborts whenever
+a concurrent commit advances a lock version past its read clock — the
+behavior Multiverse's versioned path removes (paper Figs. 1/6/7).
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, List, Optional
+from typing import Any
 
-from repro.core.clock import AtomicInt, GlobalClock
-from repro.core.locks import LockState, LockTable
-from repro.core.stats_schema import base_stats
-from repro.core.stm import AbortTx, TMBase
-
-
-class _Ctx:
-    __slots__ = ("tid", "r_clock", "read_set", "write_map", "undo",
-                 "attempts", "irrevocable", "stats", "read_vals",
-                 "read_only", "active", "alloc_log")
-
-    def __init__(self, tid: int):
-        self.tid = tid
-        self.attempts = 0
-        self.irrevocable = False
-        self.active = False
-        self.stats = {"commits": 0, "aborts": 0, "versioned_commits": 0,
-                      "ro_commits": 0, "mode_cas": 0}
-        self.reset()
-
-    def reset(self):
-        self.r_clock = 0
-        self.read_set: List[tuple] = []
-        self.write_map: Dict[int, Any] = {}
-        self.undo: Dict[int, Any] = {}
-        self.read_vals: List[tuple] = []
-        self.read_only = True
-        self.alloc_log: List[tuple] = []
-
-
-class _BaselineTM(TMBase):
-    def __init__(self, n_threads: int, lock_bits: int = 16):
-        super().__init__(n_threads)
-        self.clock = GlobalClock(0)
-        self.locks = LockTable(lock_bits)
-        self._ctxs = [_Ctx(t) for t in range(n_threads)]
-
-    def ctx(self, tid):
-        return self._ctxs[tid]
-
-    def begin(self, tid: int):
-        ctx = self._ctxs[tid]
-        ctx.reset()
-        ctx.active = True
-        ctx.r_clock = self.clock.load()
-        return _BTx(self, ctx)
-
-    def tx_alloc(self, ctx, n, init=None):
-        base = self.alloc(n, init)
-        ctx.alloc_log.append((base, n))
-        return base
-
-    def stats(self) -> Dict[str, object]:
-        """Normalized schema: counters a baseline never touches stay 0
-        (no versioning, no modes), so every consumer sees one key set."""
-        out = base_stats(backend=self.name, mode="-")
-        for c in self._ctxs:
-            for k in ("commits", "aborts", "ro_commits"):
-                out[k] += c.stats[k]
-        return out
-
-    def _abort(self, ctx):
-        # free txn-local allocations (nobody else can have seen them: the
-        # addresses were only reachable via this txn's unpublished writes)
-        for base, n in ctx.alloc_log:
-            for i in range(n):
-                self._heap[base + i] = None
-        ctx.alloc_log.clear()
-        ctx.stats["aborts"] += 1
-        ctx.attempts += 1
-        ctx.active = False
-        raise AbortTx()
-
-
-class _BTx:
-    __slots__ = ("_tm", "_ctx")
-
-    def __init__(self, tm, ctx):
-        self._tm = tm
-        self._ctx = ctx
-
-    def read(self, addr):
-        return self._tm.tm_read(self._ctx, addr)
-
-    def write(self, addr, value):
-        self._tm.tm_write(self._ctx, addr, value)
-
-    def alloc(self, n, init=None):
-        return self._tm.tx_alloc(self._ctx, n, init)
-
-    @property
-    def read_count(self):
-        return len(self._ctx.read_set) + len(self._ctx.read_vals)
+from repro.core.clock import AtomicInt
+from repro.core.engine import (
+    PolicyBase,
+    TransactionEngine,
+    V_EQ,
+    V_LE,
+    V_LT,
+)
+from repro.core.engine import commit as C
+from repro.core.engine import validation as V
 
 
 # ---------------------------------------------------------------------------
@@ -117,56 +39,43 @@ class _BTx:
 # ---------------------------------------------------------------------------
 
 
-class TL2(_BaselineTM):
+class TL2Policy(PolicyBase):
     """Deferred (commit-time) locking, buffered writes, GV4-style clock."""
 
-    def tm_read(self, ctx, addr):
-        if addr in ctx.write_map:
-            return ctx.write_map[addr]
-        idx = self.locks.index(addr)
-        st1 = self.locks.read(idx)
-        data = self._heap[addr]
-        st2 = self.locks.read(idx)
+    name = "tl2"
+    validate_mode = V_LE
+
+    def read(self, eng, d, addr: int) -> Any:
+        if addr in d.write_map:
+            return d.write_map[addr]
+        idx = eng.locks.index(addr)
+        st1 = eng.locks.read(idx)
+        data = eng.heap[addr]
+        st2 = eng.locks.read(idx)
         if st1.locked or st2.locked or st1.version != st2.version or \
-                st1.version > ctx.r_clock:
-            self._abort(ctx)
-        ctx.read_set.append((idx, st1.version))
+                st1.version > d.r_clock:
+            eng.abort_txn(d)
+        d.read_set.append((idx, st1.version))
         return data
 
-    def tm_write(self, ctx, addr, value):
-        ctx.read_only = False
-        ctx.write_map[addr] = value
+    def write(self, eng, d, addr: int, value: Any) -> None:
+        d.read_only = False
+        d.write_map[addr] = value
 
-    def _try_commit(self, ctx):
-        if ctx.read_only:
-            ctx.stats["ro_commits"] += 1
-            ctx.attempts = 0
-            return
-        locked: List[int] = []
+    def commit_update(self, eng, d) -> None:
+        locked = C.acquire_write_locks(eng, d)    # aborts on conflict
+        wv = eng.clock.increment()                # GV4-ish: one fetch-add
         try:
-            for addr in ctx.write_map:
-                idx = self.locks.index(addr)
-                st = self.locks.read(idx)
-                if not self.locks.try_lock(idx, st, ctx.tid):
-                    self._abort(ctx)
-                if idx not in locked:
-                    locked.append(idx)
-            wv = self.clock.increment()          # GV4-ish: one fetch-add
-            for idx, seen in ctx.read_set:
-                st = self.locks.read(idx)
-                if (st.locked and st.tid != ctx.tid) or st.version > \
-                        ctx.r_clock:
-                    self._abort(ctx)
-            for addr, value in ctx.write_map.items():
-                self._heap[addr] = value
-            for idx in locked:
-                self.locks.unlock(idx, wv)
+            if not eng.revalidate(d):
+                eng.abort_txn(d)
+            C.write_back(eng, d)
+            C.release_locks(eng, locked, wv)
             locked.clear()
-            ctx.stats["commits"] += 1
-            ctx.attempts = 0
         finally:
-            for idx in locked:
-                self.locks.unlock(idx)
+            # abort or ANY mid-commit exception: commit-time locks are
+            # invisible to rollback (TL2 holds none at encounter time),
+            # so they must be released here or they leak forever
+            C.release_locks(eng, locked)
 
 
 # ---------------------------------------------------------------------------
@@ -174,94 +83,74 @@ class TL2(_BaselineTM):
 # ---------------------------------------------------------------------------
 
 
-class DCTL(_BaselineTM):
+class DCTLPolicy(PolicyBase):
     """Encounter-time locking, in-place writes, deferred clock (bumped on
     abort), single-token irrevocable mode after ``irrevocable_after``
     aborts (the paper uses 100)."""
 
-    def __init__(self, n_threads, lock_bits: int = 16,
-                 irrevocable_after: int = 100):
-        super().__init__(n_threads, lock_bits)
+    name = "dctl"
+    validate_mode = V_LT
+
+    def __init__(self, irrevocable_after: int = 100):
         self.irrevocable_after = irrevocable_after
         self._irrevocable_token = threading.Lock()
 
-    def begin(self, tid):
-        ctx = self._ctxs[tid]
-        ctx.reset()
-        ctx.active = True
-        if ctx.attempts >= self.irrevocable_after and not ctx.irrevocable:
+    def on_begin(self, eng, d) -> None:
+        if d.attempts >= self.irrevocable_after and not d.irrevocable:
             self._irrevocable_token.acquire()
-            ctx.irrevocable = True
-        ctx.r_clock = self.clock.load()
-        return _BTx(self, ctx)
+            d.irrevocable = True
+        d.r_clock = eng.clock.load()
 
-    def tm_read(self, ctx, addr):
-        idx = self.locks.index(addr)
-        if addr in ctx.undo or (ctx.irrevocable and self._lock_for(ctx,
-                                                                   idx)):
-            return self._heap[addr]
-        data = self._heap[addr]
-        st = self.locks.read(idx)
-        if not self.locks.validate(st, ctx.r_clock, ctx.tid):
-            self._rollback_abort(ctx)
-        ctx.read_set.append((idx, st.version))
+    def read(self, eng, d, addr: int) -> Any:
+        idx = eng.locks.index(addr)
+        if addr in d.undo or (d.irrevocable and self._lock_for(eng, d, idx)):
+            return eng.heap[addr]
+        data = eng.heap[addr]
+        st = eng.locks.read(idx)
+        if not eng.locks.validate(st, d.r_clock, d.tid):
+            eng.abort_txn(d)
+        d.read_set.append((idx, st.version))
         return data
 
-    def _lock_for(self, ctx, idx) -> bool:
+    def _lock_for(self, eng, d, idx: int) -> bool:
         """Irrevocable path: claim locks even for reads; spin, never abort."""
         while True:
-            st = self.locks.read(idx)
-            if st.locked and st.tid == ctx.tid:
+            st = eng.locks.read(idx)
+            if st.locked and st.tid == d.tid:
                 return True
-            if not st.locked and self.locks.try_lock(idx, st, ctx.tid):
-                ctx.write_map[idx] = True        # remember to release
+            if not st.locked and eng.locks.try_lock(idx, st, d.tid):
+                d.write_map[idx] = True          # remember to release
                 return True
 
-    def tm_write(self, ctx, addr, value):
-        ctx.read_only = False
-        idx = self.locks.index(addr)
-        if ctx.irrevocable:
-            self._lock_for(ctx, idx)
+    def write(self, eng, d, addr: int, value: Any) -> None:
+        d.read_only = False
+        idx = eng.locks.index(addr)
+        if d.irrevocable:
+            self._lock_for(eng, d, idx)
         else:
-            st = self.locks.read(idx)
-            if not self.locks.validate(st, ctx.r_clock, ctx.tid):
-                self._rollback_abort(ctx)
-            if not self.locks.try_lock(idx, st, ctx.tid):
-                self._rollback_abort(ctx)
-            ctx.write_map[idx] = True
-        if addr not in ctx.undo:
-            ctx.undo[addr] = self._heap[addr]
-        self._heap[addr] = value
+            st = eng.locks.read(idx)
+            if not eng.locks.validate(st, d.r_clock, d.tid):
+                eng.abort_txn(d)
+            if not eng.locks.try_lock(idx, st, d.tid):
+                eng.abort_txn(d)
+            d.write_map[idx] = True
+        if addr not in d.undo:
+            d.undo[addr] = eng.heap[addr]
+        eng.heap[addr] = value
 
-    def _rollback_abort(self, ctx):
-        for addr, old in ctx.undo.items():
-            self._heap[addr] = old
-        nxt = self.clock.increment()             # deferred clock: abort bump
-        for idx in ctx.write_map:
-            self.locks.unlock(idx, nxt)
-        self._abort(ctx)
+    def rollback(self, eng, d) -> None:
+        C.rollback_inplace(eng, d)               # undo + deferred-clock bump
 
-    def _try_commit(self, ctx):
-        if ctx.read_only and not ctx.write_map:
-            ctx.stats["ro_commits"] += 1
-            self._finish(ctx)
-            return
-        if not ctx.irrevocable:
-            for idx, seen in ctx.read_set:
-                st = self.locks.read(idx)
-                if not self.locks.validate(st, ctx.r_clock, ctx.tid):
-                    self._rollback_abort(ctx)
-        cc = self.clock.load()
-        for idx in ctx.write_map:
-            self.locks.unlock(idx, cc)
-        ctx.stats["commits"] += 1
-        self._finish(ctx)
+    def commit_update(self, eng, d) -> None:
+        if not d.irrevocable and not eng.revalidate(d):
+            eng.abort_txn(d)
+        C.release_locks(eng, d.write_map, eng.clock.load())
 
-    def _finish(self, ctx):
-        if ctx.irrevocable:
-            ctx.irrevocable = False
+    def on_finish(self, eng, d) -> None:
+        if d.irrevocable:
+            d.irrevocable = False
             self._irrevocable_token.release()
-        ctx.attempts = 0
+        d.attempts = 0
 
 
 # ---------------------------------------------------------------------------
@@ -269,68 +158,59 @@ class DCTL(_BaselineTM):
 # ---------------------------------------------------------------------------
 
 
-class NOrec(_BaselineTM):
+class NOrecPolicy(PolicyBase):
     """No ownership records: one global seqlock + value validation."""
 
-    def __init__(self, n_threads, lock_bits: int = 16):
-        super().__init__(n_threads, lock_bits)
+    name = "norec"
+
+    def __init__(self):
         self.seq = AtomicInt(0)
 
-    def begin(self, tid):
-        ctx = self._ctxs[tid]
-        ctx.reset()
-        ctx.active = True
+    def on_begin(self, eng, d) -> None:
         while True:
             s = self.seq.load()
             if s % 2 == 0:
-                ctx.r_clock = s
+                d.r_clock = s
                 break
-        return _BTx(self, ctx)
 
-    def _validate_values(self, ctx) -> int:
+    def _validate_values(self, eng, d) -> int:
         while True:
             s = self.seq.load()
             if s % 2 == 1:
                 continue
-            for addr, val in ctx.read_vals:
-                if self._heap[addr] != val:
-                    self._abort(ctx)
+            if not V.validate_values(eng.heap, d.read_vals):
+                eng.abort_txn(d)
             if self.seq.load() == s:
                 return s
 
-    def tm_read(self, ctx, addr):
-        if addr in ctx.write_map:
-            return ctx.write_map[addr]
-        val = self._heap[addr]
-        while self.seq.load() != ctx.r_clock:
-            ctx.r_clock = self._validate_values(ctx)
-            val = self._heap[addr]
-        ctx.read_vals.append((addr, val))
+    def read(self, eng, d, addr: int) -> Any:
+        if addr in d.write_map:
+            return d.write_map[addr]
+        val = eng.heap[addr]
+        while self.seq.load() != d.r_clock:
+            d.r_clock = self._validate_values(eng, d)
+            val = eng.heap[addr]
+        d.read_vals.append((addr, val))
         return val
 
-    def tm_write(self, ctx, addr, value):
-        ctx.read_only = False
-        ctx.write_map[addr] = value
+    def write(self, eng, d, addr: int, value: Any) -> None:
+        d.read_only = False
+        d.write_map[addr] = value
 
-    def _try_commit(self, ctx):
-        if ctx.read_only:
-            ctx.stats["ro_commits"] += 1
-            ctx.attempts = 0
-            return
+    def commit_update(self, eng, d) -> None:
         while True:
-            s = ctx.r_clock
+            s = d.r_clock
             if self.seq.cas(s, s + 1):
                 break
-            ctx.r_clock = self._validate_values(ctx)
-        for addr, val in ctx.read_vals:
-            if self._heap[addr] != val:
-                self.seq.store(s + 2)
-                self._abort(ctx)
-        for addr, value in ctx.write_map.items():
-            self._heap[addr] = value
+            d.r_clock = self._validate_values(eng, d)
+        if not V.validate_values(eng.heap, d.read_vals):
+            self.seq.store(s + 2)
+            eng.abort_txn(d)
+        C.write_back(eng, d)
         self.seq.store(s + 2)
-        ctx.stats["commits"] += 1
-        ctx.attempts = 0
+
+    def validate(self, eng, d) -> bool:
+        return V.validate_values(eng.heap, d.read_vals)
 
 
 # ---------------------------------------------------------------------------
@@ -338,55 +218,84 @@ class NOrec(_BaselineTM):
 # ---------------------------------------------------------------------------
 
 
-class TinySTM(DCTL):
+class TinySTMPolicy(DCTLPolicy):
     """TinySTM-style: DCTL's ETL write path, but the clock advances on every
     commit and readers EXTEND their snapshot instead of aborting when they
     hit a newer-but-consistent version."""
 
-    def __init__(self, n_threads, lock_bits: int = 16):
-        super().__init__(n_threads, lock_bits,
-                         irrevocable_after=1 << 30)   # no irrevocable mode
+    name = "tinystm"
+    validate_mode = V_EQ
 
-    def tm_read(self, ctx, addr):
-        if addr in ctx.undo:
-            return self._heap[addr]
-        idx = self.locks.index(addr)
+    def __init__(self):
+        super().__init__(irrevocable_after=1 << 30)  # no irrevocable mode
+
+    def read(self, eng, d, addr: int) -> Any:
+        if addr in d.undo:
+            return eng.heap[addr]
+        idx = eng.locks.index(addr)
         while True:
-            st = self.locks.read(idx)
-            if st.locked and st.tid != ctx.tid:
-                self._rollback_abort(ctx)
-            data = self._heap[addr]
-            st2 = self.locks.read(idx)
+            st = eng.locks.read(idx)
+            if st.locked and st.tid != d.tid:
+                eng.abort_txn(d)
+            data = eng.heap[addr]
+            st2 = eng.locks.read(idx)
             if st2.locked or st2.version != st.version:
                 continue                      # raced a writer: reread
-            if st.version > ctx.r_clock:
+            if st.version > d.r_clock:
                 # snapshot extension: revalidate at the new clock, then
                 # loop to re-read the value under the extended snapshot
-                now = self.clock.load()
-                for i2, seen in ctx.read_set:
-                    st3 = self.locks.read(i2)
-                    if (st3.locked and st3.tid != ctx.tid) or \
-                            st3.version != seen:
-                        self._rollback_abort(ctx)
-                ctx.r_clock = now
+                now = eng.clock.load()
+                if not eng.revalidate(d):
+                    eng.abort_txn(d)
+                d.r_clock = now
                 continue
-            ctx.read_set.append((idx, st.version))
+            d.read_set.append((idx, st.version))
             return data
 
-    def _try_commit(self, ctx):
-        if ctx.read_only and not ctx.write_map:
-            ctx.stats["ro_commits"] += 1
-            ctx.attempts = 0
-            return
-        for idx, seen in ctx.read_set:
-            st = self.locks.read(idx)
-            if (st.locked and st.tid != ctx.tid) or st.version != seen:
-                self._rollback_abort(ctx)
-        cc = self.clock.increment()
-        for idx in ctx.write_map:
-            self.locks.unlock(idx, cc)
-        ctx.stats["commits"] += 1
-        ctx.attempts = 0
+    def commit_update(self, eng, d) -> None:
+        if not eng.revalidate(d):
+            eng.abort_txn(d)
+        C.release_locks(eng, d.write_map, eng.clock.increment())
+
+
+# ---------------------------------------------------------------------------
+# engine-backed classes (historical constructors)
+# ---------------------------------------------------------------------------
+
+
+class TL2(TransactionEngine):
+    def __init__(self, n_threads: int, lock_bits: int = 16, heap=None):
+        super().__init__(TL2Policy(), n_threads, lock_bits=lock_bits,
+                         heap=heap)
+        self.name = type(self).__name__
+
+
+class DCTL(TransactionEngine):
+    def __init__(self, n_threads: int, lock_bits: int = 16,
+                 irrevocable_after: int = 100, heap=None):
+        super().__init__(DCTLPolicy(irrevocable_after), n_threads,
+                         lock_bits=lock_bits, heap=heap)
+        self.name = type(self).__name__
+
+
+class NOrec(TransactionEngine):
+    def __init__(self, n_threads: int, lock_bits: int = 16, heap=None):
+        super().__init__(NOrecPolicy(), n_threads, lock_bits=lock_bits,
+                         heap=heap)
+        self.name = type(self).__name__
+
+    @property
+    def seq(self) -> AtomicInt:
+        return self.policy.seq
+
+
+class TinySTM(TransactionEngine):
+    def __init__(self, n_threads: int, lock_bits: int = 16, heap=None):
+        super().__init__(TinySTMPolicy(), n_threads, lock_bits=lock_bits,
+                         heap=heap)
+        self.name = type(self).__name__
 
 
 BASELINES = {"tl2": TL2, "dctl": DCTL, "norec": NOrec, "tinystm": TinySTM}
+POLICIES = {"tl2": TL2Policy, "dctl": DCTLPolicy, "norec": NOrecPolicy,
+            "tinystm": TinySTMPolicy}

@@ -1,0 +1,48 @@
+"""repro.core.engine — the shared transaction-engine layer.
+
+One ``TransactionEngine`` (heap + clock + lock table + descriptors +
+commit/abort orchestration) drives every word-level backend; the
+algorithms themselves are ``TMPolicy`` objects (``core/baselines.py``,
+``core/stm.py``).  Layered as:
+
+    descriptor.py   TxnDescriptor — unified per-thread txn context
+    validation.py   commit-time revalidation (scalar + bulk/vectorized)
+    commit.py       lock-acquire / write-back / version-publish steps
+    policy.py       TMPolicy protocol + PolicyBase defaults
+    arrayheap.py    ObjectHeap / ArrayHeap / packed ArrayLockTable
+    engine.py       TransactionEngine + the _Tx user handle
+
+See API.md ("The engine layer") for the worked add-a-backend example.
+"""
+from repro.core.engine.arrayheap import (  # noqa: F401
+    ArrayHeap,
+    ArrayLockTable,
+    ObjectHeap,
+)
+from repro.core.engine.descriptor import (  # noqa: F401
+    COUNTER_KEYS,
+    TxnDescriptor,
+)
+from repro.core.engine.engine import (  # noqa: F401
+    TMBase,
+    TransactionEngine,
+    _Tx,
+)
+from repro.core.engine.errors import (  # noqa: F401
+    AbortTx,
+    MaxRetriesExceeded,
+)
+from repro.core.engine.policy import PolicyBase, TMPolicy  # noqa: F401
+from repro.core.engine.validation import (  # noqa: F401
+    BULK_MIN,
+    V_EQ,
+    V_LE,
+    V_LT,
+)
+
+__all__ = [
+    "ArrayHeap", "ArrayLockTable", "BULK_MIN", "COUNTER_KEYS",
+    "MaxRetriesExceeded", "AbortTx", "ObjectHeap", "PolicyBase", "TMBase",
+    "TMPolicy", "TransactionEngine", "TxnDescriptor", "V_EQ", "V_LE",
+    "V_LT",
+]

@@ -1,0 +1,200 @@
+"""Array-backed heap + lock table: the engine's vectorizable substrate.
+
+Two heap flavors behind one three-method interface (``alloc`` /
+``__getitem__`` / ``__setitem__``):
+
+  * ``ObjectHeap`` — the historical Python list; holds arbitrary objects
+    (struct tests store strings), the default for every backend;
+  * ``ArrayHeap``  — words in a contiguous int64 numpy buffer with
+    capacity doubling and an on-demand ``jnp()`` view, so bulk kernels
+    (``kernels/validate.py``, future sharded stores) can touch the whole
+    heap in one launch.  Numeric words only.
+
+``ArrayLockTable`` packs each versioned lock word ``(locked, version,
+tid, flag)`` into ONE int64 array element::
+
+    bits 18..63  version        (commit clock)
+    bits  2..17  tid + 2        (supports the -2 background/-1 none tids)
+    bit   1      locked
+    bit   0      flag           (versioning-in-progress)
+
+A single packed word makes the bulk path sound: ``gather(idxs)`` fancy-
+indexes the array ONCE, so each gathered element is a consistent
+(locked, version, tid, flag) tuple — gathering parallel arrays field by
+field could tear a word between fields, which the scalar path never does.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.locks import LockState, LockTable
+
+_TID_BIAS = 2                    # stored tid = tid + 2 (tid >= -2)
+_TID_BITS = 16
+_TID_MASK = (1 << _TID_BITS) - 1
+_VER_SHIFT = 2 + _TID_BITS
+
+
+def pack_lock(st: LockState) -> int:
+    return ((st.version << _VER_SHIFT)
+            | ((st.tid + _TID_BIAS) & _TID_MASK) << 2
+            | (1 << 1 if st.locked else 0)
+            | (1 if st.flag else 0))
+
+
+def unpack_lock(word: int) -> LockState:
+    return LockState(bool(word & 2), word >> _VER_SHIFT,
+                     ((word >> 2) & _TID_MASK) - _TID_BIAS, bool(word & 1))
+
+
+_UNLOCKED_WORD = pack_lock(LockState(False, 0, -1, False))
+
+
+class ObjectHeap:
+    """Plain Python-list heap: any value, no vectorization."""
+
+    def __init__(self):
+        self._cells: List[Any] = []
+        self._lock = threading.Lock()
+
+    def alloc(self, n: int, init: Any = None) -> int:
+        with self._lock:
+            base = len(self._cells)
+            self._cells.extend([init] * n)
+            return base
+
+    def __getitem__(self, addr: int) -> Any:
+        return self._cells[addr]
+
+    def __setitem__(self, addr: int, value: Any) -> None:
+        self._cells[addr] = value
+
+    def __len__(self) -> int:
+        return len(self._cells)
+
+
+class ArrayHeap:
+    """Numeric word heap in one int64 numpy buffer (doubling growth).
+
+    ``len()`` is the allocated frontier, not the capacity; reads beyond it
+    raise like the list heap does.  ``jnp()`` returns the live words as a
+    jax array (a copy — jax buffers are immutable) for kernel consumption.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self._buf = np.zeros(max(capacity, 1), np.int64)
+        self._len = 0
+        self._lock = threading.Lock()
+
+    def alloc(self, n: int, init: Any = None) -> int:
+        fill = 0 if init is None else int(init)
+        with self._lock:
+            base = self._len
+            need = base + n
+            if need > self._buf.shape[0]:
+                cap = self._buf.shape[0]
+                while cap < need:
+                    cap *= 2
+                grown = np.zeros(cap, np.int64)
+                grown[:base] = self._buf[:base]
+                self._buf = grown
+            self._buf[base:need] = fill
+            self._len = need
+            return base
+
+    def __getitem__(self, addr: int) -> int:
+        if addr >= self._len:
+            raise IndexError(addr)
+        return int(self._buf[addr])
+
+    def __setitem__(self, addr: int, value: Any) -> None:
+        if addr >= self._len:
+            raise IndexError(addr)
+        # under the lock: a concurrent alloc() may be copying into a grown
+        # buffer, and a write that raced the copy would land in the
+        # discarded old array and silently vanish (ObjectHeap never
+        # rebinds its list, so only the array heap has this hazard)
+        with self._lock:
+            self._buf[addr] = int(value)
+
+    def __len__(self) -> int:
+        return self._len
+
+    def jnp(self):
+        import jax.numpy as jnp
+        return jnp.asarray(self._buf[:self._len])
+
+
+class ArrayLockTable(LockTable):
+    """``LockTable`` semantics over a packed int64 numpy array.
+
+    Inherits ``validate``/``try_lock``/``index`` (they are written against
+    ``read``/``cas``) and overrides only the storage layer, adding the two
+    bulk operations the vectorized hot path needs: ``gather`` and
+    ``held_by``.
+    """
+
+    def __init__(self, bits: int):
+        self.bits = bits
+        self.size = 1 << bits
+        self._words = np.full(self.size, _UNLOCKED_WORD, np.int64)
+        from repro.core.clock import Striped
+        self._stripes = Striped(1024)
+
+    # -- storage ops -------------------------------------------------------
+    def read(self, idx: int) -> LockState:
+        return unpack_lock(int(self._words[idx]))
+
+    def read_wait_unflagged(self, idx: int) -> LockState:
+        while True:
+            w = int(self._words[idx])
+            if not (w & 1):
+                return unpack_lock(w)
+
+    def cas(self, idx: int, expect: LockState, new: LockState) -> bool:
+        with self._stripes.for_index(idx):
+            if int(self._words[idx]) != pack_lock(expect):
+                return False
+            self._words[idx] = pack_lock(new)
+            return True
+
+    def store(self, idx: int, new: LockState) -> None:
+        with self._stripes.for_index(idx):
+            self._words[idx] = pack_lock(new)
+
+    def lock_and_flag(self, idx: int, tid: int) -> LockState:
+        while True:
+            st = unpack_lock(int(self._words[idx]))
+            if not st.locked and not st.flag:
+                if self.cas(idx, st, LockState(True, st.version, tid, True)):
+                    return st
+
+    def unlock(self, idx: int, version: Optional[int] = None) -> None:
+        with self._stripes.for_index(idx):
+            st = unpack_lock(int(self._words[idx]))
+            v = version if version is not None else st.version
+            self._words[idx] = pack_lock(LockState(False, v, -1, False))
+
+    # -- bulk ops ----------------------------------------------------------
+    def gather(self, idxs: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
+                                                np.ndarray]:
+        """One consistent snapshot of many lock words.
+
+        Returns ``(version int64[N], owner int32[N], meta int32[N])`` with
+        meta bit0 = locked, bit1 = flag — the layout the bulk validators
+        (numpy and the Pallas kernel) consume.
+        """
+        w = self._words[idxs]                       # single fancy-index copy
+        ver = w >> _VER_SHIFT
+        own = (((w >> 2) & _TID_MASK) - _TID_BIAS).astype(np.int32)
+        meta = (((w >> 1) & 1) | ((w & 1) << 1)).astype(np.int32)
+        return ver, own, meta
+
+    def held_by(self, tid: int) -> np.ndarray:
+        """Indices currently write-locked by ``tid`` (exhaustion cleanup)."""
+        w = self._words
+        mask = ((w & 2) != 0) & ((((w >> 2) & _TID_MASK) - _TID_BIAS) == tid)
+        return np.nonzero(mask)[0]

@@ -1,0 +1,64 @@
+"""Commit pipeline helpers: lock-acquire, write-back, version-publish.
+
+The begin/read/write/commit scaffolding the backends used to copy-paste
+lives here as policy-agnostic steps over an engine:
+
+  * buffered (TL2-style) commits: ``acquire_write_locks`` then
+    ``write_back`` then ``release_locks`` at the new write version;
+  * encounter-time (DCTL-style) commits: locks are already held, so the
+    pipeline is revalidate + ``release_locks`` at the commit clock;
+  * encounter-time aborts: ``rollback_inplace`` restores the undo log and
+    releases the held locks at a bumped clock (the deferred-clock abort
+    increment that keeps readers from missing the rollback).
+
+Every helper takes the engine explicitly — policies stay ~50-line
+stateless-ish objects and the engine stays the single owner of heap,
+clock and lock table.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+
+def acquire_write_locks(eng, d) -> List[int]:
+    """Claim every buffered write's lock (commit-time locking).
+
+    On conflict, releases whatever was acquired (versions untouched) and
+    aborts the transaction.  Returns the locked indices in acquisition
+    order, deduplicated.
+    """
+    locked: List[int] = []
+    for addr in d.write_map:
+        idx = eng.locks.index(addr)
+        st = eng.locks.read(idx)
+        if not eng.locks.try_lock(idx, st, d.tid):
+            release_locks(eng, locked)
+            eng.abort_txn(d)
+        if idx not in locked:
+            locked.append(idx)
+    return locked
+
+
+def write_back(eng, d) -> None:
+    """Publish buffered writes to the heap (caller holds the locks)."""
+    for addr, value in d.write_map.items():
+        eng.heap[addr] = value
+
+
+def release_locks(eng, idxs: Iterable[int],
+                  version: Optional[int] = None) -> None:
+    for idx in idxs:
+        eng.locks.unlock(idx, version)
+
+
+def rollback_inplace(eng, d, bump_clock: bool = True) -> None:
+    """Undo encounter-time in-place writes and release the held locks.
+
+    ``bump_clock`` implements the deferred clock's abort increment: the
+    released locks are republished at a FRESH version so any reader that
+    validated against the uncommitted value must revalidate and abort.
+    """
+    for addr, old in d.undo.items():
+        eng.heap[addr] = old
+    nxt = eng.clock.increment() if bump_clock else None
+    release_locks(eng, d.write_map, nxt)

@@ -1,0 +1,79 @@
+"""Transaction descriptor: the one per-thread context every backend shares.
+
+The paper's Alg. 1 thread-locals and the baselines' contexts were two
+parallel class hierarchies (``stm._TxCtx`` vs ``baselines._Ctx``) holding
+the same state under different names.  ``TxnDescriptor`` is their union:
+
+  * ``read_set``   — ``(lock_idx, version_seen)`` pairs for commit-time
+                     revalidation (lock-version backends);
+  * ``read_vals``  — ``(addr, value)`` pairs for value validation (NOrec);
+  * ``write_map``  — buffered writes (TL2/NOrec: addr -> new value) or the
+                     set of encounter-time-locked indices (DCTL family:
+                     idx -> True);
+  * ``undo``       — in-place write undo log (addr -> old value) for
+                     encounter-time backends, including Multiverse;
+  * ``versioned_write_set`` — addr -> (vlist, node) for TBD-version
+                     rollback (Multiverse only);
+  * ``alloc_log``  — txn-local allocations, freed by the engine on abort.
+
+State lifetimes (paper Alg. 1 l.10): ``reset()`` clears per-ATTEMPT state
+before each retry; ``reset_operation()`` additionally clears state that
+persists across retries of one logical operation (attempt count, the K1
+versioned flag, its livelock guard).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.core import modes as M
+
+#: per-descriptor counters the engine aggregates into the stats schema
+COUNTER_KEYS = ("commits", "aborts", "versioned_commits", "ro_commits",
+                "mode_cas")
+
+
+class TxnDescriptor:
+    __slots__ = (
+        "tid", "attempts", "active", "stats",
+        # per-attempt
+        "r_clock", "read_only", "read_cnt", "read_set", "read_vals",
+        "write_map", "undo", "versioned_write_set", "alloc_log",
+        "local_mode_counter", "local_mode",
+        # per-operation (survive retries)
+        "versioned", "no_versioning", "initial_versioned_ts", "irrevocable")
+
+    def __init__(self, tid: int):
+        self.tid = tid
+        self.attempts = 0
+        self.active = False
+        self.versioned = False
+        self.no_versioning = False
+        self.irrevocable = False
+        self.initial_versioned_ts: Optional[int] = None
+        self.stats = {k: 0 for k in COUNTER_KEYS}
+        self.reset()
+
+    def reset(self) -> None:
+        """Per-attempt reset (called by the engine at ``begin``)."""
+        self.r_clock = 0
+        self.read_only = True
+        self.read_cnt = 0
+        self.local_mode_counter = 0
+        self.local_mode = M.MODE_Q
+        self.read_set: List[tuple] = []
+        self.read_vals: List[tuple] = []
+        self.write_map: Dict[int, Any] = {}
+        self.undo: Dict[int, Any] = {}
+        self.versioned_write_set: Dict[int, tuple] = {}
+        self.alloc_log: List[tuple] = []
+
+    def reset_operation(self) -> None:
+        """Per-operation reset (a NEW logical operation, not a retry)."""
+        self.attempts = 0
+        self.versioned = False
+        self.no_versioning = False
+        self.initial_versioned_ts = None
+
+    @property
+    def has_writes(self) -> bool:
+        return bool(self.write_map or self.undo or self.versioned_write_set)

@@ -1,4 +1,4 @@
-"""Multiverse STM — faithful implementation of the paper's Algorithms 1-5.
+"""Multiverse STM — the paper's Algorithms 1-5 as a ``TMPolicy``.
 
 Word-based opaque STM with dynamic multiversioning:
   * unversioned path: DCTL-style (global clock, versioned locks,
@@ -11,130 +11,83 @@ Word-based opaque STM with dynamic multiversioning:
     the background thread, which also unversions VLT buckets in Mode Q
     using the L/P commit-delta heuristic and drives EBR.
 
-The user API is `run(tm, fn)` where fn(tx) performs tx.read/tx.write —
-aborts raise AbortTx and retry at begin, the setjmp/longjmp analogue.
+Since the engine refactor the begin/read/write/commit scaffolding lives
+in ``repro.core.engine`` — this module contains only what makes
+Multiverse Multiverse (``MultiversePolicy``), plus the ``Multiverse``
+engine subclass that exposes the historical attribute surface
+(``tm.vlt``, ``tm.mode_counter``, ``tm.announce``, ...) instrumentation
+and benchmarks rely on.  Commit-time read-set revalidation routes through
+``engine.revalidate``, which switches to the vectorized bulk validator
+(numpy gather on CPU, ``kernels/validate.py`` on TPU) for large read
+sets.
+
+The user API is ``repro.api`` (``run``/``@atomic``/``tm.txn()``); the
+module-level ``run`` here remains as a deprecation shim.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Optional
 
 from repro.configs.paper_stm import MultiverseParams
 from repro.core import heuristics as heur
 from repro.core import modes as M
-from repro.core import stats_schema
 from repro.core.bloom import BloomTable
-from repro.core.clock import AtomicInt, GlobalClock
+from repro.core.clock import AtomicInt
 from repro.core.ebr import EBR, TxRetireBuffer
-from repro.core.locks import LockState, LockTable
+from repro.core.engine import (
+    AbortTx,
+    MaxRetriesExceeded,
+    PolicyBase,
+    TMBase,
+    TransactionEngine,
+)
+from repro.core.engine.engine import _Tx  # noqa: F401 (historical export)
 from repro.core.vlt import DELETED_TS, VLT, VersionList, VListNode
 
-
-class AbortTx(Exception):
-    """Transaction abort (longjmp back to beginTxn)."""
-
-
-class MaxRetriesExceeded(Exception):
-    """A transaction hit the retry cap (baselines quit here; paper SS5)."""
+__all__ = ["AbortTx", "MaxRetriesExceeded", "Multiverse",
+           "MultiversePolicy", "TMBase", "run"]
 
 
-class TMBase:
-    """Shared heap + allocation interface (structures build on this)."""
+class MultiversePolicy(PolicyBase):
+    name = "multiverse"
 
-    def __init__(self, n_threads: int):
-        self.n_threads = n_threads
-        self._heap: List[Any] = []
-        self._heap_lock = threading.Lock()
-        self.name = type(self).__name__
-
-    # heap ---------------------------------------------------------------
-    def alloc(self, n: int, init: Any = None) -> int:
-        with self._heap_lock:
-            base = len(self._heap)
-            self._heap.extend([init] * n)
-            return base
-
-    def peek(self, addr: int) -> Any:
-        """Non-transactional read (test/debug only)."""
-        return self._heap[addr]
-
-    def stop(self) -> None:  # pragma: no cover - overridden
-        pass
-
-
-class _TxCtx:
-    """Per-thread transaction context (paper Alg. 1 thread locals)."""
-
-    __slots__ = (
-        "tid", "r_clock", "attempts", "read_only", "read_cnt", "versioned",
-        "local_mode_counter", "local_mode", "read_set", "write_set",
-        "versioned_write_set", "retires", "initial_versioned_ts", "active",
-        "stats", "alloc_log", "no_versioning")
-
-    def __init__(self, tid: int):
-        self.tid = tid
-        self.attempts = 0
-        self.versioned = False
-        self.no_versioning = False
-        self.active = False
-        self.stats = {"commits": 0, "aborts": 0, "versioned_commits": 0,
-                      "mode_cas": 0, "ro_commits": 0}
-        self.reset()
-        self.initial_versioned_ts: Optional[int] = None
-
-    def reset(self):
-        self.r_clock = 0
-        self.read_only = True
-        self.read_cnt = 0
-        self.local_mode_counter = 0
-        self.local_mode = M.MODE_Q
-        self.read_set: List[tuple] = []          # (idx, version_seen)
-        self.write_set: Dict[int, Any] = {}      # addr -> old value
-        # addr -> (vlist, node): the vlist lets rollback UNLINK the node
-        self.versioned_write_set: Dict[int, tuple] = {}
-        self.alloc_log: List[tuple] = []
-
-
-class Multiverse(TMBase):
-    def __init__(self, n_threads: int,
-                 params: Optional[MultiverseParams] = None,
+    def __init__(self, params: Optional[MultiverseParams] = None,
                  start_bg: bool = True):
-        super().__init__(n_threads)
         self.params = params or MultiverseParams()
+        self._start_bg = start_bg
+
+    # ------------------------------------------------------------------
+    # engine wiring
+    # ------------------------------------------------------------------
+    def setup(self, eng) -> None:
         bits = self.params.lock_table_bits
-        self.clock = GlobalClock(0)
-        self.locks = LockTable(bits)
         self.bloom = BloomTable(bits, self.params.bloom_bits)
         self.vlt = VLT(bits)
         self.mode_counter = AtomicInt(0)         # mode = counter & 3
         self.first_obs_mode_u_ts = AtomicInt(-1)
         self.min_mode_u_reads = heur.MinModeUReadCount()
-        self.ebr = EBR(n_threads)
+        self.ebr = EBR(eng.n_threads)
         self.announce = [heur.ThreadAnnouncement()
-                         for _ in range(n_threads)]
+                         for _ in range(eng.n_threads)]
         self.unversion_heur = heur.UnversionThreshold(self.params)
-        self._ctxs = [_TxCtx(t) for t in range(n_threads)]
         self._retire_bufs = [TxRetireBuffer(self.ebr)
-                             for _ in range(n_threads)]
+                             for _ in range(eng.n_threads)]
         self.stats_unversioned_buckets = 0
         self.stats_mode_transitions = 0
         self._stop = threading.Event()
         self._bg: Optional[threading.Thread] = None
-        if start_bg:
-            self._bg = threading.Thread(target=self._bg_thread, daemon=True)
+        if self._start_bg:
+            self._bg = threading.Thread(target=self._bg_thread,
+                                        args=(eng,), daemon=True)
             self._bg.start()
 
     # ------------------------------------------------------------------
     # transaction lifecycle (Alg. 1)
     # ------------------------------------------------------------------
-    def ctx(self, tid: int) -> _TxCtx:
-        return self._ctxs[tid]
-
-    def begin(self, tid: int) -> "_Tx":
-        ctx = self._ctxs[tid]
-        ctx.reset()
-        ann = self.announce[tid]
+    def on_begin(self, eng, d) -> None:
+        ann = self.announce[d.tid]
         # announce-then-verify: publish (counter, active) BEFORE trusting
         # the counter, else the background thread can advance the mode in
         # the window between our load and our announcement and a local-
@@ -142,115 +95,110 @@ class Multiverse(TMBase):
         # breaking the invariant Mode-U readers rely on (paper SS3.4 fn.1).
         while True:
             cnt = self.mode_counter.load()
-            ctx.local_mode_counter = cnt
+            d.local_mode_counter = cnt
             ann.local_mode_counter = cnt
-            ctx.active = True
+            d.active = True
             if self.mode_counter.load() == cnt:
                 break
-            ctx.active = False
-        ctx.local_mode = M.get_mode(cnt)
-        ctx.r_clock = self.clock.load()
-        if ctx.versioned and ctx.initial_versioned_ts is None:
-            ctx.initial_versioned_ts = ctx.r_clock
-        ann.active_versioned = ctx.versioned
-        self.ebr.pin(tid)
-        return _Tx(self, ctx)
+            d.active = False
+        d.local_mode = M.get_mode(cnt)
+        d.r_clock = eng.clock.load()
+        if d.versioned and d.initial_versioned_ts is None:
+            d.initial_versioned_ts = d.r_clock
+        ann.active_versioned = d.versioned
+        self.ebr.pin(d.tid)
 
-    def _try_commit(self, ctx: _TxCtx) -> None:
-        ann = self.announce[ctx.tid]
-        if ctx.read_only:
-            if ctx.versioned:
-                delta = self.clock.load() - (ctx.initial_versioned_ts or 0)
-                ann.commit_ts_delta = delta
-                if ctx.local_mode == M.MODE_U:
-                    self.min_mode_u_reads.update(ctx.read_cnt)
-                ctx.stats["versioned_commits"] += 1
-            if ann.sticky_mode_u and heur.sticky_cleared(
-                    self.params, ann, ctx.read_cnt):
-                ann.sticky_mode_u = False
-            ctx.stats["ro_commits"] += 1
-            self._finish(ctx)
-            return
-        # update transaction: revalidate the read set
-        for idx, seen_version in ctx.read_set:
-            st = self.locks.read(idx)
-            if not self.locks.validate(st, ctx.r_clock, ctx.tid):
-                self._abort(ctx)
-                raise AbortTx()
-        commit_clock = self.clock.load()
+    def commit_read_only(self, eng, d) -> None:
+        ann = self.announce[d.tid]
+        if d.versioned:
+            delta = eng.clock.load() - (d.initial_versioned_ts or 0)
+            ann.commit_ts_delta = delta
+            if d.local_mode == M.MODE_U:
+                self.min_mode_u_reads.update(d.read_cnt)
+            d.stats["versioned_commits"] += 1
+        if ann.sticky_mode_u and heur.sticky_cleared(
+                self.params, ann, d.read_cnt):
+            ann.sticky_mode_u = False
+
+    def commit_update(self, eng, d) -> None:
+        # revalidate the read set: scalar loop for small read sets, the
+        # vectorized bulk path (one lock-table gather) for large ones
+        if not eng.revalidate(d):
+            eng.abort_txn(d)
+        commit_clock = eng.clock.load()
         # remove TBD marks (publish versions at the commit clock)
-        for addr, (vlist, node) in ctx.versioned_write_set.items():
+        for addr, (vlist, node) in d.versioned_write_set.items():
             node.timestamp = commit_clock
             node.tbd = False
         # release write locks at the commit clock
-        for addr in ctx.write_set:
-            self.locks.unlock(self.locks.index(addr), commit_clock)
-        self._retire_bufs[ctx.tid].commit()
-        ctx.stats["commits"] += 1
-        self._finish(ctx)
+        for addr in d.undo:
+            eng.locks.unlock(eng.locks.index(addr), commit_clock)
+        self._retire_bufs[d.tid].commit()
 
-    def _finish(self, ctx: _TxCtx) -> None:
-        ctx.active = False
-        ctx.attempts = 0
-        ctx.versioned = False
-        ctx.initial_versioned_ts = None
-        self.ebr.unpin(ctx.tid)
+    def on_finish(self, eng, d) -> None:
+        d.attempts = 0
+        d.versioned = False
+        d.initial_versioned_ts = None
+        self.ebr.unpin(d.tid)
 
-    def _abort(self, ctx: _TxCtx) -> None:
+    def rollback(self, eng, d) -> None:
         # roll back in-place writes
-        for addr, old in ctx.write_set.items():
-            self._heap[addr] = old
+        for addr, old in d.undo.items():
+            eng.heap[addr] = old
         # roll back versioned writes: deleted timestamp, UNLINK, retire.
         # We hold the address lock, and our node is necessarily still the
         # head (no one else can prepend), so unlinking is safe; without it
         # a reader pinned AFTER the grace period could still walk through
         # the freed node — a real use-after-free caught by the poison-bit
         # assertions (EXPERIMENTS.md SSDeviations).
-        buf = self._retire_bufs[ctx.tid]
-        for addr, (vlist, node) in ctx.versioned_write_set.items():
+        buf = self._retire_bufs[d.tid]
+        for addr, (vlist, node) in d.versioned_write_set.items():
             node.timestamp = DELETED_TS
             node.tbd = False
             if vlist.head is node:
                 vlist.head = node.older
             buf.retire_on_abort(node)
         buf.abort()
-        # free txn-local allocations
-        for base, n in ctx.alloc_log:
-            for i in range(n):
-                self._heap[base + i] = None
-        nxt = self.clock.increment()
-        for addr in ctx.write_set:
-            self.locks.unlock(self.locks.index(addr), nxt)
-        ctx.stats["aborts"] += 1
-        ann = self.announce[ctx.tid]
-        if ctx.read_only:
-            if heur.should_attempt_mode_cas(
-                    self.params, versioned=ctx.versioned,
-                    attempts=ctx.attempts, read_cnt=ctx.read_cnt,
-                    min_mode_u_reads=self.min_mode_u_reads.get()):
-                self._attempt_mode_cas(ctx)
-            if not ctx.versioned and not ctx.no_versioning and \
-                    heur.should_go_versioned(self.params, ctx.attempts):
-                ctx.versioned = True
-        ctx.attempts += 1
-        ctx.active = False
-        self.ebr.unpin(ctx.tid)
+        nxt = eng.clock.increment()
+        for addr in d.undo:
+            eng.locks.unlock(eng.locks.index(addr), nxt)
 
-    def _attempt_mode_cas(self, ctx: _TxCtx) -> None:
+    def on_abort(self, eng, d) -> None:
+        if d.read_only:
+            if heur.should_attempt_mode_cas(
+                    self.params, versioned=d.versioned,
+                    attempts=d.attempts, read_cnt=d.read_cnt,
+                    min_mode_u_reads=self.min_mode_u_reads.get()):
+                self._attempt_mode_cas(d)
+            if not d.versioned and not d.no_versioning and \
+                    heur.should_go_versioned(self.params, d.attempts):
+                d.versioned = True
+        d.attempts += 1
+        self.ebr.unpin(d.tid)
+
+    def on_retries_exhausted(self, eng, tid: int) -> None:
+        # a capped operation must leave nothing behind: flush the retire
+        # buffer (revoking commit-conditional retires, landing the abort-
+        # conditional ones in EBR limbo) and make sure the thread is
+        # unpinned so reclamation cannot stall on a dead transaction
+        self._retire_bufs[tid].abort()
+        self.ebr.unpin(tid)
+
+    def _attempt_mode_cas(self, d) -> None:
         """Any local-Mode-Q txn may CAS Q -> QtoU (SS3.3.1)."""
         cnt = self.mode_counter.load()
         if M.get_mode(cnt) == M.MODE_Q:
-            self.announce[ctx.tid].sticky_mode_u = True
-            self.announce[ctx.tid].small_txn_read_cnt = None
+            self.announce[d.tid].sticky_mode_u = True
+            self.announce[d.tid].small_txn_read_cnt = None
             if self.mode_counter.cas(cnt, cnt + 1):
-                ctx.stats["mode_cas"] += 1
+                d.stats["mode_cas"] += 1
                 self.stats_mode_transitions += 1
 
     # ------------------------------------------------------------------
     # TM accesses (Alg. 3 / Alg. 4)
     # ------------------------------------------------------------------
-    def tm_write(self, ctx: _TxCtx, addr: int, value: Any) -> None:
-        if ctx.versioned:
+    def write(self, eng, d, addr: int, value: Any) -> None:
+        if d.versioned:
             # Only read-only transactions can be versioned (paper SS3.2.2).
             # A versioned txn that turns out to write must restart on the
             # unversioned path: its versioned reads were of the PAST and
@@ -259,22 +207,19 @@ class Multiverse(TMBase):
             # no_versioning is STICKY for this operation — otherwise the K1
             # heuristic re-promotes on the next abort and the write aborts
             # it again, forever (livelock).
-            ctx.versioned = False
-            ctx.no_versioning = True
-            ctx.initial_versioned_ts = None
-            self._abort(ctx)
-            raise AbortTx()
-        ctx.read_only = False
-        idx = self.locks.index(addr)
-        st = self.locks.read_wait_unflagged(idx)
-        if not self.locks.validate(st, ctx.r_clock, ctx.tid):
-            self._abort(ctx)
-            raise AbortTx()
-        if not self.locks.try_lock(idx, st, ctx.tid):
-            self._abort(ctx)
-            raise AbortTx()
-        if addr not in ctx.write_set:
-            ctx.write_set[addr] = self._heap[addr]
+            d.versioned = False
+            d.no_versioning = True
+            d.initial_versioned_ts = None
+            eng.abort_txn(d)
+        d.read_only = False
+        idx = eng.locks.index(addr)
+        st = eng.locks.read_wait_unflagged(idx)
+        if not eng.locks.validate(st, d.r_clock, d.tid):
+            eng.abort_txn(d)
+        if not eng.locks.try_lock(idx, st, d.tid):
+            eng.abort_txn(d)
+        if addr not in d.undo:
+            d.undo[addr] = eng.heap[addr]
         # ORDER MATTERS (paper SS4.1 TEXT, not Alg. 3's line order): the
         # versioned write must complete BEFORE the in-place write.  Mode-U
         # readers of an unversioned address use the lock-freeze protocol,
@@ -284,8 +229,8 @@ class Multiverse(TMBase):
         # lock is held, the bloom filter still misses, and the heap already
         # holds the uncommitted value: a reader returns a torn read.  We
         # hit this as a real ~1-in-20s tear (EXPERIMENTS.md SSDeviations).
-        if ctx.local_mode == M.MODE_Q:
-            self._try_write_to_vlist(ctx, addr, idx, value)
+        if d.local_mode == M.MODE_Q:
+            self._try_write_to_vlist(eng, d, addr, idx, value)
         else:
             # Modes QtoU / U / UtoQ: writers must version (Table 1)
             vlist = self._get_vlist(idx, addr)
@@ -293,58 +238,56 @@ class Multiverse(TMBase):
                 ts = self.first_obs_mode_u_ts.load()
                 if ts < 0:
                     ts = st.version
-                node = VListNode(None, ts, ctx.write_set[addr], False)
+                node = VListNode(None, ts, d.undo[addr], False)
                 vlist = VersionList(node)
                 self.vlt.insert(idx, addr, vlist)
                 self.bloom.add(idx, addr)
-            self._append_version(ctx, addr, vlist, value)
-        self._heap[addr] = value                  # in-place (encounter-time)
+            self._append_version(d, addr, vlist, value)
+        eng.heap[addr] = value                    # in-place (encounter-time)
 
     def _get_vlist(self, idx: int, addr: int) -> Optional[VersionList]:
         if not self.bloom.contains(idx, addr):
             return None
         return self.vlt.get(idx, addr)
 
-    def _try_write_to_vlist(self, ctx, addr, idx, value) -> None:
+    def _try_write_to_vlist(self, eng, d, addr, idx, value) -> None:
         """Mode Q: add a version iff the address is already versioned."""
         vlist = self._get_vlist(idx, addr)
         if vlist is None:
             return
-        self._append_version(ctx, addr, vlist, value)
+        self._append_version(d, addr, vlist, value)
 
-    def _append_version(self, ctx, addr, vlist, value) -> None:
+    def _append_version(self, d, addr, vlist, value) -> None:
         head = vlist.head
-        if head is not None and head.tbd and addr in ctx.versioned_write_set:
+        if head is not None and head.tbd and addr in d.versioned_write_set:
             head.data = value                     # our own TBD: update it
             return
-        node = VListNode(head, ctx.r_clock, value, True)
+        node = VListNode(head, d.r_clock, value, True)
         vlist.head = node
-        ctx.versioned_write_set[addr] = (vlist, node)
+        d.versioned_write_set[addr] = (vlist, node)
         if head is not None:
             # previous version retired iff we commit (eventualFree)
-            self._retire_bufs[ctx.tid].retire_on_commit(head)
+            self._retire_bufs[d.tid].retire_on_commit(head)
 
-    def tm_read(self, ctx: _TxCtx, addr: int) -> Any:
-        ctx.read_cnt += 1
-        if ctx.versioned and ctx.local_mode in (M.MODE_Q, M.MODE_QTOU,
-                                                M.MODE_UTOQ):
-            return self._mode_q_versioned_read(ctx, addr)
-        if ctx.versioned and ctx.local_mode == M.MODE_U:
-            return self._mode_u_versioned_read(ctx, addr)
+    def read(self, eng, d, addr: int) -> Any:
+        if d.versioned and d.local_mode in (M.MODE_Q, M.MODE_QTOU,
+                                            M.MODE_UTOQ):
+            return self._mode_q_versioned_read(eng, d, addr)
+        if d.versioned and d.local_mode == M.MODE_U:
+            return self._mode_u_versioned_read(eng, d, addr)
         # unversioned read
-        idx = self.locks.index(addr)
-        if addr in ctx.write_set:
-            return self._heap[addr]
-        data = self._heap[addr]
-        st = self.locks.read_wait_unflagged(idx)
-        if not self.locks.validate(st, ctx.r_clock, ctx.tid):
-            self._abort(ctx)
-            raise AbortTx()
-        ctx.read_set.append((idx, st.version))
+        idx = eng.locks.index(addr)
+        if addr in d.undo:
+            return eng.heap[addr]
+        data = eng.heap[addr]
+        st = eng.locks.read_wait_unflagged(idx)
+        if not eng.locks.validate(st, d.r_clock, d.tid):
+            eng.abort_txn(d)
+        d.read_set.append((idx, st.version))
         return data
 
     # -- versioned reads ---------------------------------------------------
-    def _traverse(self, ctx, vlist: VersionList) -> Any:
+    def _traverse(self, eng, d, vlist: VersionList) -> Any:
         """Alg. 2 traverse: block on suitable TBD heads, skip deleted.
 
         Acceptance is STRICTLY ts < rClock (the paper writes <=; with the
@@ -353,35 +296,34 @@ class Multiverse(TMBase):
         commitClock also lands on c — mirroring validateLock's strict <
         restores opacity; DESIGN.md SS6)."""
         node = vlist.head
-        while node is not None and node.tbd and node.timestamp < ctx.r_clock:
+        while node is not None and node.tbd and node.timestamp < d.r_clock:
             node = vlist.head                     # reread head (spin)
-        while node is not None and (node.timestamp >= ctx.r_clock
+        while node is not None and (node.timestamp >= d.r_clock
                                     or node.timestamp == DELETED_TS
                                     or node.tbd):
             assert not node.freed, "use-after-free: version node"
             node = node.older
         if node is None:
-            self._abort(ctx)
-            raise AbortTx()
+            eng.abort_txn(d)
         assert not node.freed, "use-after-free: version node"
         return node.data
 
-    def _mode_q_versioned_read(self, ctx, addr: int) -> Any:
-        idx = self.locks.index(addr)
+    def _mode_q_versioned_read(self, eng, d, addr: int) -> Any:
+        idx = eng.locks.index(addr)
         if not self.bloom.try_add(idx, addr):
             vlist = self.vlt.get(idx, addr)       # bloom hit (may be false+)
             if vlist is not None:
-                return self._traverse(ctx, vlist)
-        return self._version_then_read(ctx, addr, idx)
+                return self._traverse(eng, d, vlist)
+        return self._version_then_read(eng, d, addr, idx)
 
-    def _version_then_read(self, ctx, addr: int, idx: int) -> Any:
+    def _version_then_read(self, eng, d, addr: int, idx: int) -> Any:
         """Mode-Q reader versions an unversioned address (SS4.1)."""
-        st = self.locks.lock_and_flag(idx, ctx.tid)
+        st = eng.locks.lock_and_flag(idx, d.tid)
         try:
             # recheck: someone may have versioned it while we waited
             vlist = self.vlt.get(idx, addr)
             if vlist is None:
-                data = self._heap[addr]
+                data = eng.heap[addr]
                 ts = self.first_obs_mode_u_ts.load()
                 if ts < 0:
                     ts = st.version
@@ -389,69 +331,62 @@ class Multiverse(TMBase):
                                 VersionList(VListNode(None, ts, data,
                                                       False)))
                 self.bloom.add(idx, addr)
-            else:
-                data = None
         finally:
-            self.locks.unlock(idx)
-        if st.version >= ctx.r_clock:
+            eng.locks.unlock(idx)
+        if st.version >= d.r_clock:
             # the value we versioned was written at/after our snapshot
-            self._abort(ctx)
-            raise AbortTx()
+            eng.abort_txn(d)
         vlist = self.vlt.get(idx, addr)
         if vlist is not None:
-            return self._traverse(ctx, vlist)
-        return self._heap[addr]
+            return self._traverse(eng, d, vlist)
+        return eng.heap[addr]
 
-    def _mode_u_versioned_read(self, ctx, addr: int) -> Any:
+    def _mode_u_versioned_read(self, eng, d, addr: int) -> Any:
         """SS4.2: unversioned addresses cannot have been written since the
         TM entered Mode U — read them with the lock-freeze protocol."""
-        idx = self.locks.index(addr)
+        idx = eng.locks.index(addr)
         if self.bloom.contains(idx, addr):
             vlist = self.vlt.get(idx, addr)
             if vlist is not None:
-                return self._traverse(ctx, vlist)
+                return self._traverse(eng, d, vlist)
         last_ver, last_val = -1, None
         while True:
-            st = self.locks.read(idx)
+            st = eng.locks.read(idx)
             if st.locked:
-                if st.version == last_ver and self._heap[addr] is last_val:
-                    return last_val
-                last_ver, last_val = st.version, self._heap[addr]
+                # stable-value check by EQUALITY, not identity: ArrayHeap
+                # returns a fresh int per read, so `is` would only ever
+                # match CPython's small-int cache and the early return
+                # would silently stop firing for values > 256
+                cur = eng.heap[addr]
+                if st.version == last_ver and cur == last_val:
+                    return cur
+                last_ver, last_val = st.version, cur
                 # recheck versioned-ness: a writer holding the lock would
                 # have versioned the address before changing it
                 if self.bloom.contains(idx, addr):
                     vlist = self.vlt.get(idx, addr)
                     if vlist is not None:
-                        return self._traverse(ctx, vlist)
+                        return self._traverse(eng, d, vlist)
                 continue
-            data = self._heap[addr]
-            st2 = self.locks.read(idx)
+            data = eng.heap[addr]
+            st2 = eng.locks.read(idx)
             if st2.version != st.version or st2.locked:
                 if self.bloom.contains(idx, addr):
                     vlist = self.vlt.get(idx, addr)
                     if vlist is not None:
-                        return self._traverse(ctx, vlist)
-                self._abort(ctx)
-                raise AbortTx()
+                        return self._traverse(eng, d, vlist)
+                eng.abort_txn(d)
             return data
-
-    # ------------------------------------------------------------------
-    # allocation inside transactions
-    # ------------------------------------------------------------------
-    def tx_alloc(self, ctx, n: int, init: Any = None) -> int:
-        base = self.alloc(n, init)
-        ctx.alloc_log.append((base, n))
-        return base
 
     # ------------------------------------------------------------------
     # background thread (Alg. 5)
     # ------------------------------------------------------------------
-    def _wait_for_workers(self, mode_counter: int) -> None:
+    def _wait_for_workers(self, eng, mode_counter: int) -> None:
         while not self._stop.is_set():
             found = False
-            for ann in self.announce:
+            for t, ann in enumerate(self.announce):
                 if ann.local_mode_counter < mode_counter and \
-                        self._ctxs[self.announce.index(ann)].active:
+                        eng.ctx(t).active:
                     found = True
                     break
             if not found:
@@ -467,30 +402,30 @@ class Multiverse(TMBase):
         self.stats_mode_transitions += 1
         return new
 
-    def _bg_thread(self) -> None:
+    def _bg_thread(self, eng) -> None:
         poll = self.params.unversion_poll_ms / 1000.0
         while not self._stop.is_set():
             cnt = self.mode_counter.load()
             mode = M.get_mode(cnt)
             if mode == M.MODE_QTOU:
-                self._wait_for_workers(cnt)
+                self._wait_for_workers(eng, cnt)
                 cnt = self._transition(cnt)          # -> U
-                self.first_obs_mode_u_ts.store(self.clock.load())
+                self.first_obs_mode_u_ts.store(eng.clock.load())
                 # remain in U while sticky readers want it
                 while self._any_sticky() and not self._stop.is_set():
                     time.sleep(poll)
                 cnt = self._transition(cnt)          # -> UtoQ
-                self._wait_for_workers(cnt)
+                self._wait_for_workers(eng, cnt)
                 self.first_obs_mode_u_ts.store(-1)
                 cnt = self._transition(cnt)          # -> Q
             elif mode == M.MODE_Q:
-                self._unversion_pass()
+                self._unversion_pass(eng)
                 self.ebr.advance_and_reclaim()
                 time.sleep(poll)
             else:  # recover if constructed mid-cycle
                 time.sleep(poll)
 
-    def _unversion_pass(self) -> None:
+    def _unversion_pass(self, eng) -> None:
         """SS4.4: unversion buckets whose newest version is older than the
         L/P-averaged commit-delta threshold."""
         deltas = [a.commit_ts_delta for a in self.announce
@@ -499,13 +434,13 @@ class Multiverse(TMBase):
         thresh = self.unversion_heur.threshold()
         if thresh is None:
             return
-        now = self.clock.load()
+        now = eng.clock.load()
         for bucket in self.vlt.nonempty_buckets():
             newest = self.vlt.bucket_newest_ts(bucket)
             if newest is None or now - newest < thresh:
                 continue
             # claim the bucket's lock, detach, retire everything, reset bloom
-            st = self.locks.lock_and_flag(bucket, tid=-2)
+            st = eng.locks.lock_and_flag(bucket, tid=-2)
             try:
                 head = self.vlt.take_bucket(bucket)
                 node = head
@@ -519,48 +454,85 @@ class Multiverse(TMBase):
                 self.bloom.reset(bucket)
                 self.stats_unversioned_buckets += 1
             finally:
-                self.locks.unlock(bucket)
+                eng.locks.unlock(bucket)
 
-    def stop(self) -> None:
+    # ------------------------------------------------------------------
+    # reporting / teardown
+    # ------------------------------------------------------------------
+    def mode_name(self, eng) -> str:
+        return M.mode_name(self.mode_counter.load())
+
+    def extra_stats(self, eng, out: dict) -> None:
+        out["mode_transitions"] = self.stats_mode_transitions
+        out["unversioned_buckets"] = self.stats_unversioned_buckets
+        out["ebr_freed"] = self.ebr.freed_count
+
+    def stop(self, eng) -> None:
         self._stop.set()
         if self._bg is not None:
             self._bg.join(timeout=2.0)
 
-    # aggregate stats ----------------------------------------------------
-    def stats(self) -> Dict[str, object]:
-        out = stats_schema.base_stats(
-            backend=self.name, mode=M.mode_name(self.mode_counter.load()))
-        for c in self._ctxs:
-            for k in ("commits", "aborts", "versioned_commits",
-                      "ro_commits", "mode_cas"):
-                out[k] += c.stats[k]
-        out["mode_transitions"] = self.stats_mode_transitions
-        out["unversioned_buckets"] = self.stats_unversioned_buckets
-        out["ebr_freed"] = self.ebr.freed_count
-        return out
 
+class Multiverse(TransactionEngine):
+    """The paper's TM: ``MultiversePolicy`` on the shared engine.
 
-class _Tx:
-    """Handle passed to user transaction bodies."""
+    Historical attribute surface (``tm.vlt``, ``tm.mode_counter``, ...)
+    is preserved as properties over the policy so instrumentation,
+    forced-mode ablations and the memory benchmarks keep working.
+    """
 
-    __slots__ = ("_tm", "_ctx")
+    def __init__(self, n_threads: int,
+                 params: Optional[MultiverseParams] = None,
+                 start_bg: bool = True, heap=None):
+        p = params or MultiverseParams()
+        super().__init__(MultiversePolicy(p, start_bg=start_bg), n_threads,
+                         lock_bits=p.lock_table_bits, heap=heap)
+        self.name = "Multiverse"
 
-    def __init__(self, tm: Multiverse, ctx: _TxCtx):
-        self._tm = tm
-        self._ctx = ctx
-
-    def read(self, addr: int) -> Any:
-        return self._tm.tm_read(self._ctx, addr)
-
-    def write(self, addr: int, value: Any) -> None:
-        self._tm.tm_write(self._ctx, addr, value)
-
-    def alloc(self, n: int, init: Any = None) -> int:
-        return self._tm.tx_alloc(self._ctx, n, init)
+    # -- instrumentation surface (policy state) ---------------------------
+    @property
+    def params(self) -> MultiverseParams:
+        return self.policy.params
 
     @property
-    def read_count(self) -> int:
-        return self._ctx.read_cnt
+    def vlt(self) -> VLT:
+        return self.policy.vlt
+
+    @property
+    def bloom(self) -> BloomTable:
+        return self.policy.bloom
+
+    @property
+    def mode_counter(self) -> AtomicInt:
+        return self.policy.mode_counter
+
+    @property
+    def first_obs_mode_u_ts(self) -> AtomicInt:
+        return self.policy.first_obs_mode_u_ts
+
+    @property
+    def min_mode_u_reads(self):
+        return self.policy.min_mode_u_reads
+
+    @property
+    def announce(self):
+        return self.policy.announce
+
+    @property
+    def ebr(self) -> EBR:
+        return self.policy.ebr
+
+    @property
+    def unversion_heur(self):
+        return self.policy.unversion_heur
+
+    @property
+    def stats_mode_transitions(self) -> int:
+        return self.policy.stats_mode_transitions
+
+    @property
+    def stats_unversioned_buckets(self) -> int:
+        return self.policy.stats_unversioned_buckets
 
 
 def run(tm, fn: Callable, tid: int = 0, max_retries: int = 0) -> Any:

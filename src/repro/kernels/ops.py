@@ -16,6 +16,7 @@ from repro.kernels import fused_adamw as _fa
 from repro.kernels import flash_attention as _fl
 from repro.kernels import snapshot_select as _ss
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import validate as _val
 
 INTERPRET = os.environ.get("KERNEL_INTERPRET", "1") != "0"
 
@@ -62,6 +63,48 @@ def snapshot_select(ring, ts, read_clock):
     val, ok = _ss.snapshot_select_flat(flat, ts, read_clock, tile=tile,
                                        interpret=INTERPRET)
     return val.reshape(shape), ok
+
+
+def validate_readset(ver, own, meta, seen, r_clock, tid, mode,
+                     tile: int = 512) -> bool:
+    """Bulk read-set validation: True iff every entry is still valid.
+
+    Adapts ragged read-set lengths to the tiled kernel by padding with
+    always-valid entries (see ``validate.PAD``), then AND-reduces the
+    per-entry mask.  The engine calls this on the TPU path
+    (KERNEL_INTERPRET=0); on CPU it uses the numpy twin directly.
+
+    Versions are rebased to ``r_clock`` before the int32 cast: the packed
+    lock word carries a 46-bit version and the clock bumps on every
+    commit AND abort, so absolute versions can exceed int32 in long runs
+    — but every predicate only compares versions against ``r_clock`` or
+    ``seen``, and within one transaction's lifetime those deltas are
+    tiny.  The clip is a belt-and-braces clamp that preserves the
+    comparison's sign (a clamped entry is >= 2^31 commits away from the
+    snapshot, i.e. unambiguously stale/fresh).
+    """
+    import numpy as np
+
+    n = int(ver.shape[0])
+    if n == 0:
+        return True
+    base = int(r_clock)
+    lo, hi = -(1 << 31) + 1, (1 << 31) - 1
+    ver_rel = np.clip(np.asarray(ver, np.int64) - base, lo, hi)
+    seen_rel = np.clip(np.asarray(seen, np.int64) - base, lo, hi)
+    t = min(tile, 1 << (n - 1).bit_length())
+    pad = (-n) % t
+    p = _val.PAD
+
+    def prep(x, fill):
+        x = jnp.asarray(np.asarray(x), jnp.int32)
+        return jnp.pad(x, (0, pad), constant_values=fill) if pad else x
+
+    mask = _val.validate_readset_flat(
+        prep(ver_rel, p["ver"]), prep(own, p["own"]),
+        prep(meta, p["meta"]), prep(seen_rel, p["seen"]),
+        0, int(tid), int(mode), tile=t, interpret=INTERPRET)
+    return bool(jnp.all(mask == 1))
 
 
 def fused_adamw(p, g, m, v, ring, slot, *, lr, scale, count, b1, b2, eps,

@@ -1,0 +1,84 @@
+"""Bulk read-set validation — the commit-time hot path as a Pallas kernel.
+
+The paper's update-transaction commit revalidates every read-set entry
+against the lock table (Alg. 2 validateLock); the engine's scalar path
+does this word-at-a-time in Python.  This kernel checks an ENTIRE
+read-set's gathered lock words in one launch: the caller (the engine's
+``ArrayLockTable.gather``) fancy-indexes the packed lock array once —
+each element a consistent (locked, version, tid, flag) tuple — and the
+kernel evaluates the per-backend validation predicate elementwise on the
+VPU, tiled over the read set.
+
+Three predicates cover every lock-version backend (``mode`` scalar):
+
+    0 (V_LT)  own locks pass; foreign locks/flags fail; version <  rClock
+              (Multiverse / DCTL, deferred clock)
+    1 (V_LE)  locked-by-other fails;                    version <= rClock
+              (TL2)
+    2 (V_EQ)  locked-by-other fails;                    version == seen
+              (TinySTM exact-snapshot)
+
+Scalars ride in via ``PrefetchScalarGridSpec`` (SMEM), so one compiled
+kernel serves every (r_clock, tid, mode) triple.  ``interpret=True`` is
+the CPU fallback path; for CPU *production* validation the engine uses
+the numpy twin (``engine.validation.np_validate``) because interpret-mode
+tiling costs more than it saves — the kernel test pins the two
+implementations together element-for-element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: padding element that every mode accepts: unlocked, unflagged,
+#: version -1 (< and <= any clock), seen -1 (== its own version)
+PAD = dict(ver=-1, own=-1, meta=0, seen=-1)
+
+
+def _validate_kernel(params_ref, ver_ref, own_ref, meta_ref, seen_ref,
+                     o_ref):
+    r_clock = params_ref[0]
+    tid = params_ref[1]
+    mode = params_ref[2]
+    ver = ver_ref[...]
+    own = own_ref[...]
+    meta = meta_ref[...]
+    seen = seen_ref[...]
+    locked = (meta & 1) != 0
+    flagged = (meta & 2) != 0
+    mine = jnp.logical_and(locked, own == tid)
+    free = jnp.logical_and(~locked, ~flagged)
+    unheld = jnp.logical_or(~locked, mine)
+    ok_lt = jnp.logical_or(mine, jnp.logical_and(free, ver < r_clock))
+    ok_le = jnp.logical_and(unheld, ver <= r_clock)
+    ok_eq = jnp.logical_and(unheld, ver == seen)
+    ok = jnp.where(mode == 0, ok_lt, jnp.where(mode == 1, ok_le, ok_eq))
+    o_ref[...] = ok.astype(jnp.int32)
+
+
+def validate_readset_flat(ver, own, meta, seen, r_clock, tid, mode, *,
+                          tile: int = 512, interpret: bool = True):
+    """ver/own/meta/seen: [N] int32 (N a multiple of ``tile``).
+
+    Returns the [N] int32 validity mask (1 = entry still valid).  The
+    caller reduces with ``jnp.all`` — keeping the mask exposed lets
+    diagnostics name WHICH reads went stale, not just that one did.
+    """
+    n = ver.shape[0]
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    spec = pl.BlockSpec((tile,), lambda i, params_ref: (i,))
+    params = jnp.asarray([r_clock, tid, mode], jnp.int32)
+    return pl.pallas_call(
+        _validate_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec, spec],
+            out_specs=spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(params, ver, own, meta, seen)

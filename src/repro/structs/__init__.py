@@ -2,7 +2,12 @@
 
 Each structure takes any `make_tm(...)` product (or raw TM) at
 construction and uniform `Txn` handles per operation, so one
-implementation serves every backend.
+implementation serves every backend — since the engine refactor that
+means any `TMPolicy` over `repro.core.engine`, including third-party
+backends registered via `register_backend`.  Long read-only operations
+(range queries, size queries) can poll `tx.validate_bulk()` to fail fast
+on staleness; the engine answers it with one vectorized pass over the
+whole read set.
 """
 from repro.structs.abtree import ABTree  # noqa: F401
 from repro.structs.extbst import ExternalBST  # noqa: F401

@@ -1,0 +1,22 @@
+"""Shared backend lists + factory for the engine-era test modules.
+
+`tests/test_api_conformance.py` keeps its own private copy by design —
+the engine-refactor acceptance criteria pin that file as UNCHANGED, so
+it must not grow an import on this helper.  Everything newer
+(test_engine.py, test_read_own_writes.py, future conformance suites)
+imports from here instead of copy-pasting.
+"""
+from repro.api import make_tm
+from repro.configs.paper_stm import MultiverseParams
+
+WORD_BACKENDS = ["multiverse", "tl2", "dctl", "norec", "tinystm"]
+ALL_BACKENDS = WORD_BACKENDS + ["mvstore"]
+
+
+def make_test_tm(backend, n_threads=2, **kw):
+    """A small-table TM tuned for fast deterministic tests."""
+    params = MultiverseParams(k1=2, k2=50, k3=50, lock_table_bits=8)
+    if backend == "mvstore":
+        kw.setdefault("ring_slots", 16)
+        kw.setdefault("start_bg", False)
+    return make_tm(backend, n_threads, params=params, **kw)

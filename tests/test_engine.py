@@ -1,0 +1,273 @@
+"""Engine-layer unit tests: descriptor lifecycle, policy plumbing, the
+array lock table, scalar-vs-bulk validation parity, `Txn.validate_bulk`,
+and the retry-exhaustion safety net (lock release + retire-buffer flush).
+"""
+import numpy as np
+import pytest
+
+from _backends import ALL_BACKENDS, WORD_BACKENDS, make_test_tm as _make
+from repro.api import AbortTx, MaxRetriesExceeded, run
+from repro.configs.paper_stm import MultiverseParams
+from repro.core.baselines import BASELINES
+from repro.core.engine import (
+    ArrayHeap,
+    ArrayLockTable,
+    PolicyBase,
+    TransactionEngine,
+    TxnDescriptor,
+    V_EQ,
+    V_LE,
+    V_LT,
+)
+from repro.core.engine import validation as V
+from repro.core.locks import LockState, LockTable
+from repro.core.stm import Multiverse
+
+
+# ---------------------------------------------------------------------------
+# descriptor lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_descriptor_reset_scopes():
+    d = TxnDescriptor(3)
+    d.read_set.append((1, 2))
+    d.undo[5] = "old"
+    d.attempts = 4
+    d.versioned = True
+    d.no_versioning = True
+    d.reset()                      # per-attempt: sets cleared, op state kept
+    assert d.read_set == [] and d.undo == {} and d.write_map == {}
+    assert d.attempts == 4 and d.versioned and d.no_versioning
+    d.reset_operation()            # per-operation: retry state cleared
+    assert d.attempts == 0 and not d.versioned and not d.no_versioning
+    assert d.initial_versioned_ts is None
+
+
+def test_every_word_backend_is_a_policy_over_the_engine():
+    tms = [Multiverse(1, start_bg=False)] + [cls(1)
+                                             for cls in BASELINES.values()]
+    for tm in tms:
+        assert isinstance(tm, TransactionEngine), type(tm)
+        assert isinstance(tm.policy, PolicyBase), type(tm.policy)
+        tm.stop()
+
+
+# ---------------------------------------------------------------------------
+# array lock table: packed-word semantics == list-of-namedtuple semantics
+# ---------------------------------------------------------------------------
+
+
+def test_array_lock_table_matches_lock_table_semantics():
+    for lt in (LockTable(8), ArrayLockTable(8)):
+        idx = lt.index(1234)
+        st = lt.read(idx)
+        assert lt.validate(st, r_clock=1, tid=0)
+        assert lt.try_lock(idx, st, tid=3)
+        held = lt.read(idx)
+        assert held.locked and held.tid == 3 and not held.flag
+        assert not lt.validate(held, r_clock=10, tid=0)
+        assert lt.validate(held, r_clock=10, tid=3)
+        lt.unlock(idx, version=9)
+        st = lt.read(idx)
+        assert not st.locked and st.version == 9
+        assert not lt.validate(st, r_clock=9, tid=0)
+        st = lt.lock_and_flag(idx, tid=-2)       # background-thread tid
+        assert st.version == 9
+        flagged = lt.read(idx)
+        assert flagged.flag and flagged.locked and flagged.tid == -2
+        lt.unlock(idx)
+        assert lt.read(idx).version == 9
+
+
+def test_array_lock_table_gather_and_held_by():
+    lt = ArrayLockTable(6)
+    st0 = lt.read(0)
+    assert lt.try_lock(0, st0, tid=2)
+    lt.store(5, LockState(False, 17, -1, False))
+    lt.store(9, LockState(True, 4, 2, True))
+    ver, own, meta = lt.gather(np.array([0, 5, 9]))
+    assert list(ver) == [0, 17, 4]
+    assert list(own) == [2, -1, 2]
+    assert list(meta) == [1, 0, 3]               # bit0 locked, bit1 flag
+    assert sorted(lt.held_by(2)) == [0, 9]
+    assert list(lt.held_by(7)) == []
+
+
+def test_array_heap_growth_and_indexing():
+    h = ArrayHeap(capacity=2)
+    base = h.alloc(5, 7)
+    assert [h[base + i] for i in range(5)] == [7] * 5
+    b2 = h.alloc(2000, 1)                        # forces buffer doubling
+    h[b2 + 1999] = 42
+    assert h[b2 + 1999] == 42 and len(h) == 2005
+    with pytest.raises(IndexError):
+        h[len(h)]
+    assert h.jnp().shape == (2005,)
+
+
+# ---------------------------------------------------------------------------
+# scalar vs bulk validation parity (all three predicates)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", [V_LT, V_LE, V_EQ])
+def test_bulk_validation_matches_scalar(mode):
+    lt = ArrayLockTable(10)
+    rng = np.random.default_rng(mode)
+    for idx in rng.integers(0, 1 << 10, 300):
+        lt.store(int(idx), LockState(
+            bool(rng.integers(2)), int(rng.integers(0, 40)),
+            int(rng.integers(-2, 4)), bool(rng.integers(2))))
+    read_set = [(int(i), int(rng.integers(0, 40)))
+                for i in rng.integers(0, 1 << 10, 2000)]
+    for r_clock, tid in [(0, 0), (20, 1), (39, -1)]:
+        scalar = V.revalidate_scalar(lt, read_set, r_clock, tid, mode)
+        bulk = V.revalidate_bulk(lt, read_set, r_clock, tid, mode)
+        assert scalar == bulk
+        # dispatcher: large read sets take the bulk path, small the scalar
+        assert V.revalidate(lt, read_set, r_clock, tid, mode) == scalar
+        assert V.revalidate(lt, read_set[:3], r_clock, tid, mode) == \
+            V.revalidate_scalar(lt, read_set[:3], r_clock, tid, mode)
+
+
+def test_bulk_validation_none_without_gather():
+    lt = LockTable(4)                            # no gather(): bulk opts out
+    assert V.revalidate_bulk(lt, [(0, 0)], 1, 0, V_LT) is None
+    assert V.revalidate(lt, [(0, 0)], 1, 0, V_LT) is True
+
+
+# ---------------------------------------------------------------------------
+# Txn.validate_bulk through the API (both layers)
+# ---------------------------------------------------------------------------
+
+
+def _begin_with_reads(tm, base, n, tid=0):
+    """Begin a txn and read n addresses, retrying begin-time aborts (the
+    deferred clock can make the very first read of a fresh table abort)."""
+    for _ in range(30):
+        tx = tm.begin(tid)
+        try:
+            for i in range(n):
+                tx.read(base + i)
+            return tx
+        except AbortTx:
+            continue
+    raise RuntimeError("could not establish a clean read snapshot")
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_validate_bulk_goes_stale_after_concurrent_commit(backend):
+    tm = _make(backend)
+    base = tm.alloc(4, 0)
+    run(tm, lambda tx: tx.write(base, 0), tid=0)     # warm the clock
+    tx = _begin_with_reads(tm, base, 4, tid=0)
+    assert tx.validate_bulk()                        # fresh: consistent
+    run(tm, lambda tx2: tx2.write(base + 1, 99), tid=1)
+    assert not tx.validate_bulk()                    # stale: writer won
+    tm.abort(tx)
+    tm.stop()
+
+
+@pytest.mark.parametrize("backend", WORD_BACKENDS)
+def test_validate_bulk_large_readset_routes_through_bulk(backend):
+    n = max(V.BULK_MIN * 2, 600)
+    tm = _make(backend)
+    base = tm.alloc(n, 1)
+    run(tm, lambda tx: tx.write(base, 1), tid=0)
+    tx = _begin_with_reads(tm, base, n, tid=0)
+    assert len(getattr(tx._ctx, "read_set", [])) >= 0  # norec uses read_vals
+    assert tx.validate_bulk()
+    run(tm, lambda tx2: tx2.write(base + n // 2, -5), tid=1)
+    assert not tx.validate_bulk()
+    tm.abort(tx)
+    tm.stop()
+
+
+# ---------------------------------------------------------------------------
+# retry-exhaustion safety net (MaxRetriesExceeded must not wedge the TM)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", WORD_BACKENDS)
+def test_retries_exhausted_releases_leaked_locks(backend):
+    """A capped operation force-releases anything its thread still holds:
+    later writers (other tids) must not spin/abort forever on its locks."""
+    tm = _make(backend)
+    a = tm.alloc(2, 0)
+    raw = tm.raw
+    idx = raw.locks.index(a)
+    st = raw.locks.read(idx)
+    assert raw.locks.try_lock(idx, st, 0)        # simulate a wedged tid-0 op
+
+    def always_abort(tx):
+        raise AbortTx()
+
+    with pytest.raises(MaxRetriesExceeded):
+        run(tm, always_abort, tid=0, max_retries=3)
+    assert not raw.locks.read(idx).locked        # exhaustion cleanup ran
+    run(tm, lambda tx: tx.write(a, 5), tid=1, max_retries=50)
+    got = run(tm, lambda tx: tx.read(a), tid=1)
+    tm.stop()
+    assert got == 5
+
+
+def test_retries_exhausted_flushes_multiverse_retire_buffer():
+    tm = Multiverse(2, MultiverseParams(lock_table_bits=6), start_bg=False)
+    from repro.core.vlt import VListNode
+    buf = tm.policy._retire_bufs[0]
+    pending = VListNode(None, 1, "p", False)
+    on_abort = VListNode(None, 1, "a", False)
+    buf.retire_on_commit(pending)                # would leak if unflushed
+    buf.retire_on_abort(on_abort)
+    tm.ebr.pin(0)                                # simulate a wedged pin
+    tm.on_retries_exhausted(0)
+    assert buf._pending == [] and buf._on_abort == []
+    assert tm.ebr.limbo_size == 1                # abort-retire landed in EBR
+    assert tm.ebr._thread_epochs[0] == -1        # unpinned: reclaim can run
+    tm.stop()
+
+
+def test_release_thread_locks_bumps_clock():
+    tm = BASELINES["dctl"](2)
+    a = tm.alloc(1, 0)
+    idx = tm.locks.index(a)
+    assert tm.locks.try_lock(idx, tm.locks.read(idx), 0)
+    before = tm.clock.load()
+    assert tm.release_thread_locks(0) == 1
+    st = tm.locks.read(idx)
+    assert not st.locked and st.version == before + 1
+    assert tm.release_thread_locks(0) == 0       # idempotent, no extra bump
+    assert tm.clock.load() == before + 1
+    tm.stop()
+
+
+def test_tl2_mid_commit_exception_releases_commit_time_locks():
+    """A non-AbortTx failure inside commit-time validation (e.g. a kernel
+    lowering error on the bulk path) must not leak the write locks TL2
+    acquired at commit — they are invisible to rollback, so the commit
+    pipeline itself owns their release."""
+    tm = BASELINES["tl2"](2)
+    a = tm.alloc(2, 0)
+
+    boom = RuntimeError("bulk validator exploded")
+    original = tm.revalidate
+
+    def exploding_revalidate(d, *args, **kw):
+        raise boom
+
+    tx = tm.begin(0)
+    tx.read(a)
+    tx.write(a + 1, 5)
+    tm.revalidate = exploding_revalidate
+    try:
+        with pytest.raises(RuntimeError):
+            tm._try_commit(tx._ctx)
+    finally:
+        tm.revalidate = original
+    idx = tm.locks.index(a + 1)
+    assert not tm.locks.read(idx).locked     # commit-time lock released
+    tm._abort(tx._ctx)
+    run(tm, lambda t: t.write(a + 1, 9), tid=1, max_retries=50)
+    assert tm.peek(a + 1) == 9               # later writers not wedged
+    tm.stop()

@@ -1,0 +1,148 @@
+"""Dedicated coverage for `core/heuristics.py`: K1/K2/K3 trigger
+conditions, `MinModeUReadCount` reset semantics, sticky-bit clearing, and
+the L/P commit-delta unversioning threshold (paper SS4.2-SS4.4)."""
+import pytest
+
+from repro.configs.paper_stm import MultiverseParams
+from repro.core import heuristics as heur
+
+
+# ---------------------------------------------------------------------------
+# K1: unversioned read-only txns go versioned after K1 failed attempts
+# ---------------------------------------------------------------------------
+
+
+def test_k1_exact_boundary():
+    p = MultiverseParams(k1=3)
+    assert not heur.should_go_versioned(p, 0)
+    assert not heur.should_go_versioned(p, 2)
+    assert heur.should_go_versioned(p, 3)        # >= k1, not >
+    assert heur.should_go_versioned(p, 4)
+
+
+# ---------------------------------------------------------------------------
+# K2/K3: when a read-only txn CASes the TM from Q to QtoU
+# ---------------------------------------------------------------------------
+
+
+def test_k3_versioned_txns_cas_regardless_of_read_count():
+    p = MultiverseParams(k2=100, k3=4)
+    for read_cnt in (0, 1, 10 ** 6):
+        assert heur.should_attempt_mode_cas(
+            p, versioned=True, attempts=4, read_cnt=read_cnt,
+            min_mode_u_reads=None)
+    assert not heur.should_attempt_mode_cas(
+        p, versioned=True, attempts=3, read_cnt=10 ** 6,
+        min_mode_u_reads=None)
+
+
+def test_k2_requires_mode_u_read_evidence_for_unversioned():
+    p = MultiverseParams(k2=2, k3=100)
+    # no Mode-U history: unversioned txns may NOT CAS (only versioned do)
+    assert not heur.should_attempt_mode_cas(
+        p, versioned=False, attempts=5, read_cnt=10 ** 6,
+        min_mode_u_reads=None)
+    assert heur.should_attempt_mode_cas(
+        p, versioned=True, attempts=5, read_cnt=0, min_mode_u_reads=None)
+    # with history: read count must reach the observed Mode-U minimum
+    assert heur.should_attempt_mode_cas(
+        p, versioned=False, attempts=2, read_cnt=8, min_mode_u_reads=8)
+    assert not heur.should_attempt_mode_cas(
+        p, versioned=False, attempts=2, read_cnt=7, min_mode_u_reads=8)
+    # attempts below k2 never CAS for unversioned txns
+    assert not heur.should_attempt_mode_cas(
+        p, versioned=False, attempts=1, read_cnt=100, min_mode_u_reads=1)
+
+
+# ---------------------------------------------------------------------------
+# MinModeUReadCount: monotone minimum with explicit reset
+# ---------------------------------------------------------------------------
+
+
+def test_min_mode_u_read_count_tracks_minimum_and_resets():
+    m = heur.MinModeUReadCount()
+    assert m.get() is None                       # no Mode-U commits yet
+    m.update(50)
+    assert m.get() == 50
+    m.update(80)                                 # larger: ignored
+    assert m.get() == 50
+    m.update(12)                                 # smaller: new minimum
+    assert m.get() == 12
+    m.reset()
+    assert m.get() is None                       # Mode-U epoch ended
+    m.update(7)                                  # fresh epoch re-learns
+    assert m.get() == 7
+
+
+# ---------------------------------------------------------------------------
+# S: sticky Mode-U bit clears after S consecutive small transactions
+# ---------------------------------------------------------------------------
+
+
+def test_sticky_threshold_set_by_first_commit_then_clears():
+    p = MultiverseParams(s=2)
+    ann = heur.ThreadAnnouncement()
+    ann.sticky_mode_u = True
+    # first post-CAS commit of 100 reads sets small-threshold = 100/2 = 50
+    assert not heur.sticky_cleared(p, ann, 100)
+    assert ann.small_txn_read_cnt == 50
+    assert not heur.sticky_cleared(p, ann, 50)   # 1 consecutive small
+    assert heur.sticky_cleared(p, ann, 49)       # 2 consecutive: cleared
+    # clearing resets the tracking state for the next Mode-U episode
+    assert ann.small_txn_read_cnt is None and ann.consec_small_txns == 0
+
+
+def test_sticky_large_txn_resets_consecutive_count():
+    p = MultiverseParams(s=2)
+    ann = heur.ThreadAnnouncement()
+    heur.sticky_cleared(p, ann, 100)             # threshold = 50
+    assert not heur.sticky_cleared(p, ann, 10)   # small (1)
+    assert not heur.sticky_cleared(p, ann, 99)   # LARGE: streak broken
+    assert ann.consec_small_txns == 0
+    assert not heur.sticky_cleared(p, ann, 10)   # small (1)
+    assert heur.sticky_cleared(p, ann, 10)       # small (2): cleared
+
+
+def test_sticky_threshold_floor_is_one():
+    p = MultiverseParams(s=10)
+    ann = heur.ThreadAnnouncement()
+    heur.sticky_cleared(p, ann, 3)               # 3 // 10 == 0 -> floor 1
+    assert ann.small_txn_read_cnt == 1
+
+
+# ---------------------------------------------------------------------------
+# L/P: the commit-delta unversioning threshold
+# ---------------------------------------------------------------------------
+
+
+def test_lp_threshold_needs_l_full_rounds():
+    p = MultiverseParams(l=3, p=0.5)
+    u = heur.UnversionThreshold(p)
+    u.observe_round([10])
+    u.observe_round([20])
+    assert u.threshold() is None                 # only 2 of L=3 rounds
+    u.observe_round([30])
+    # sorted desc [30,20,10]; top P=0.5 of 3 -> 1 entry -> 30
+    assert u.threshold() == pytest.approx(30.0)
+
+
+def test_lp_empty_rounds_are_ignored():
+    p = MultiverseParams(l=2, p=1.0)
+    u = heur.UnversionThreshold(p)
+    u.observe_round([])                          # no announcements: skipped
+    u.observe_round([8])
+    assert u.threshold() is None
+    u.observe_round([])
+    assert u.threshold() is None                 # still one real round
+    u.observe_round([4])
+    assert u.threshold() == pytest.approx(6.0)   # mean of [8, 4], P=1.0
+
+
+def test_lp_window_slides_and_averages_within_rounds():
+    p = MultiverseParams(l=2, p=1.0)
+    u = heur.UnversionThreshold(p)
+    u.observe_round([10, 30])                    # round mean 20
+    u.observe_round([40])
+    assert u.threshold() == pytest.approx(30.0)  # (20 + 40) / 2
+    u.observe_round([100])                       # evicts the 20
+    assert u.threshold() == pytest.approx(70.0)  # (40 + 100) / 2

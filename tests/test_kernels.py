@@ -150,3 +150,93 @@ def test_fused_adamw_sweep(shape, with_ring, dtype):
             np.asarray(rr, np.float32), rtol=tol, atol=tol)
         # untouched slots stay zero
         assert float(jnp.abs(r2[0]).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# bulk read-set validation kernel vs the scalar Python validator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])          # V_LT / V_LE / V_EQ
+@pytest.mark.parametrize("n", [1, 7, 512, 1000])
+def test_validate_readset_kernel_matches_scalar(mode, n):
+    """The Pallas kernel, the numpy twin and the word-at-a-time scalar
+    validator must agree on every (lock word, read entry) combination."""
+    from repro.core.engine import validation as V
+    from repro.core.engine.arrayheap import ArrayLockTable
+    from repro.core.locks import LockState
+
+    rng = np.random.default_rng(17 * mode + n)
+    lt = ArrayLockTable(9)
+    for idx in rng.integers(0, 1 << 9, 150):
+        lt.store(int(idx), LockState(
+            bool(rng.integers(2)), int(rng.integers(0, 30)),
+            int(rng.integers(-2, 4)), bool(rng.integers(2))))
+    read_set = [(int(i), int(rng.integers(0, 30)))
+                for i in rng.integers(0, 1 << 9, n)]
+    idxs = np.array([e[0] for e in read_set], np.int64)
+    seen = np.array([e[1] for e in read_set], np.int64)
+    ver, own, meta = lt.gather(idxs)
+    for r_clock, tid in [(0, 0), (15, 1), (29, -1)]:
+        scalar = V.revalidate_scalar(lt, read_set, r_clock, tid, mode)
+        via_np = V.np_validate(ver, own, meta, seen, r_clock, tid, mode)
+        via_kernel = ops.validate_readset(ver, own, meta, seen, r_clock,
+                                          tid, mode)
+        assert scalar == via_np == via_kernel, (mode, n, r_clock, tid)
+
+
+def test_validate_readset_kernel_elementwise_mask():
+    """Per-element mask parity (not just the AND): each lane of the kernel
+    must equal the scalar predicate for its lock word."""
+    from repro.core.engine import validation as V
+    from repro.kernels import validate as vk
+    from repro.core.locks import LockState
+
+    states = []
+    for locked in (False, True):
+        for tid in (-2, 0, 1):
+            for flag in (False, True):
+                for version in (0, 3, 7):
+                    states.append(LockState(locked, version, tid, flag))
+    ver = jnp.asarray([s.version for s in states], jnp.int32)
+    own = jnp.asarray([s.tid for s in states], jnp.int32)
+    meta = jnp.asarray([int(s.locked) | (int(s.flag) << 1)
+                        for s in states], jnp.int32)
+    seen = jnp.asarray([s.version if i % 2 == 0 else s.version + 1
+                        for i, s in enumerate(states)], jnp.int32)
+    pad = (-len(states)) % 8
+    pd = vk.PAD
+
+    def prep(x, fill):
+        return jnp.pad(x, (0, pad), constant_values=fill)
+
+    for mode in (0, 1, 2):
+        mask = vk.validate_readset_flat(
+            prep(ver, pd["ver"]), prep(own, pd["own"]),
+            prep(meta, pd["meta"]), prep(seen, pd["seen"]),
+            r_clock=5, tid=0, mode=mode, tile=8, interpret=True)
+        for i, s in enumerate(states):
+            want = V.check_entry(s, int(seen[i]), 5, 0, mode)
+            assert bool(mask[i]) == want, (mode, i, s)
+        assert bool(jnp.all(mask[len(states):] == 1))   # padding all-valid
+
+
+def test_validate_readset_survives_64bit_clock():
+    """Lock versions exceed int32 in long runs (the packed word gives the
+    version 46 bits); ops.validate_readset rebases to r_clock before the
+    int32 kernel, so it must agree with the int64 numpy twin out there."""
+    from repro.core.engine import validation as V
+
+    big = (1 << 31) + 12345
+    ver = np.asarray([big, big + 1, big - 1, big - 3], np.int64)
+    own = np.full(4, -1, np.int32)
+    meta = np.zeros(4, np.int32)
+    seen = ver.copy()
+    for mode, r_clock in [(0, big), (0, big + 2), (1, big), (2, big + 2)]:
+        want = V.np_validate(ver, own, meta, seen, r_clock, 0, mode)
+        got = ops.validate_readset(ver, own, meta, seen, r_clock, 0, mode)
+        assert got == want, (mode, r_clock, got, want)
+    # stale entry at a 64-bit clock: version == r_clock fails V_LT
+    assert not ops.validate_readset(
+        np.asarray([big], np.int64), own[:1], meta[:1],
+        np.asarray([big], np.int64), big, 0, 0)

@@ -1,0 +1,95 @@
+"""Read-own-writes conformance: `tx.read` after `tx.write` in the SAME
+transaction must return the pending value, on every backend and through
+every write shape (fresh write, overwrite, write-after-read, txn-alloc'd
+cells) — the opacity clause the engine migration must not disturb.
+"""
+import pytest
+
+from _backends import ALL_BACKENDS, WORD_BACKENDS, make_test_tm as _make
+from repro.api import atomic, run
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_read_sees_own_pending_write(backend):
+    tm = _make(backend)
+    a = tm.alloc(2, 10)
+
+    def txn(tx):
+        tx.write(a, 77)
+        first = tx.read(a)               # pending value, not the heap's
+        tx.write(a, first + 1)
+        second = tx.read(a)
+        untouched = tx.read(a + 1)       # reads of unwritten cells intact
+        return first, second, untouched
+
+    out = run(tm, txn, tid=0)
+    assert out == (77, 78, 10)
+    assert run(tm, lambda tx: tx.read(a), tid=0) == 78
+    tm.stop()
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_read_after_write_after_read(backend):
+    """The read-modify-write shape: read, write, re-read must round-trip
+    through the pending write (TL2/NOrec redo logs, DCTL/Multiverse
+    in-place undo logs — one contract)."""
+    tm = _make(backend)
+    a = tm.alloc(1, 5)
+
+    @atomic(tm)
+    def bump(tx):
+        before = tx.read(a)
+        tx.write(a, before + 100)
+        after = tx.read(a)
+        assert after == before + 100, (before, after)
+        return after
+
+    assert bump() == 105
+    assert bump() == 205
+    tm.stop()
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_read_own_write_to_txn_allocated_cell(backend):
+    tm = _make(backend)
+    tm.alloc(1, 0)                       # burn address 0
+
+    def txn(tx):
+        node = tx.alloc(3, 0)
+        tx.write(node + 1, 42)
+        return tx.read(node), tx.read(node + 1)
+
+    assert run(tm, txn, tid=0) == (0, 42)
+    tm.stop()
+
+
+@pytest.mark.parametrize("backend", WORD_BACKENDS)
+def test_own_writes_not_visible_to_other_threads_before_commit(backend):
+    """The dual: pending writes are NOT read-own-writes for anyone else.
+    Buffered backends keep them private; encounter-time backends hold the
+    lock, so a reader validates-and-aborts rather than seeing them mixed
+    with pre-write state (it never returns a committed-looking 99)."""
+    from repro.api import AbortTx
+    tm = _make(backend)
+    a = tm.alloc(1, 1)
+    run(tm, lambda tx: tx.write(a, 1), tid=0)    # warm the clock
+    for _ in range(30):                          # deferred clocks can abort
+        tx = tm.begin(0)                         # the first write attempt
+        try:
+            tx.write(a, 99)
+            break
+        except AbortTx:
+            continue
+    else:
+        raise RuntimeError("could not acquire the write lock")
+    try:
+        for _ in range(5):
+            try:
+                got = run(tm, lambda t: t.read(a), tid=1, max_retries=1)
+                assert got == 1, got             # buffered: old value only
+            except Exception:                    # noqa: BLE001
+                pass                             # locked: abort is correct
+    finally:
+        tm.abort(tx)
+    assert run(tm, lambda t: t.read(a), tid=1) == 1
+    tm.stop()
