@@ -16,9 +16,7 @@ name exactly what they measured and can be re-run bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
-import subprocess
 import sys
 import time
 
@@ -27,36 +25,16 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 SEED = 0                          # set by --seed; threaded into workloads
 
 
-def _git_sha() -> str:
-    try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(__file__), capture_output=True, text=True,
-            timeout=5).stdout.strip() or "unknown"
-    except Exception:  # noqa: BLE001 - sandboxed/bare checkouts
-        return "unknown"
-
-
 def _emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
 
 def _save(name: str, rows):
-    """Results JSON = {meta, rows}: the meta block pins the trajectory."""
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    meta = {
-        "bench": name,
-        "git_sha": _git_sha(),
-        "seed": SEED,
-        "backends": sorted({r["backend"] for r in rows
-                            if isinstance(r, dict) and "backend" in r}),
-        "mode_transitions": {
-            r.get("tm", r.get("backend", "?")): r["mode_transitions"]
-            for r in rows
-            if isinstance(r, dict) and "mode_transitions" in r},
-    }
-    with open(os.path.join(RESULTS_DIR, f"bench_{name}.json"), "w") as f:
-        json.dump({"meta": meta, "rows": rows}, f, indent=1)
+    """Results JSON = {meta, rows} in the shared ``repro.eval.results``
+    schema (one writer for everything under results/; the historical
+    ``bench_*.json`` names are kept via the prefix)."""
+    from repro.eval.results import save_results
+    save_results(name, rows, SEED, out_dir=RESULTS_DIR, prefix="bench")
 
 
 # ---------------------------------------------------------------------------

@@ -48,12 +48,17 @@ def main():
                for t in (0, 1)]
     [w.start() for w in workers]
 
-    # long-running reads: sum every balance, atomically, while transfers fly
+    # long-running reads: sum every balance, atomically, while transfers
+    # fly — alternating the word-at-a-time spelling with the batched one
+    # (read_bulk snapshots the whole range in one gather)
     def audit(tx):
         return sum(tx.read(base + i) for i in range(N_ACCOUNTS))
 
+    def audit_bulk(tx):
+        return int(sum(tx.read_bulk(range(base, base + N_ACCOUNTS))))
+
     for trial in range(5):
-        total = run(tm, audit, tid=2)
+        total = run(tm, audit_bulk if trial % 2 else audit, tid=2)
         assert total == N_ACCOUNTS * INITIAL, "torn read!"
         print(f"audit {trial}: total={total} (consistent) "
               f"mode={tm.stats()['mode']}")

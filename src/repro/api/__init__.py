@@ -14,6 +14,10 @@ The paper's single programming model over both layers:
     with tm.txn(tid=1) as tx:                   # single attempt
         total = sum(tx.read(base + i) for i in range(100))
 
+    run(tm, lambda tx: sum(tx.read_bulk(range(base, base + 100))))
+                                                # batched long read:
+                                                # one gather, not 100
+                                                # interpreter round-trips
     tm.stats()                                  # normalized schema
     tm.stop()
 

@@ -75,6 +75,15 @@ class WordSubstrate(SubstrateBase):
     def read(self, ctx: Any, addr: int) -> Any:
         return self.raw.tm_read(ctx, addr)
 
+    def read_bulk(self, ctx: Any, addrs) -> Any:
+        """`Txn.read_bulk`: engine-routed batch (one heap gather + lock
+        gathers + vectorized predicate); legacy raw TMs without
+        `tm_read_bulk` fall back to the scalar loop."""
+        fn = getattr(self.raw, "tm_read_bulk", None)
+        if fn is not None:
+            return fn(ctx, addrs)
+        return [self.raw.tm_read(ctx, int(a)) for a in addrs]
+
     def write(self, ctx: Any, addr: int, value: Any) -> None:
         self.raw.tm_write(ctx, addr, value)
 

@@ -39,6 +39,19 @@ __all__ = ["MVStoreHandle"]
 _COUNTER_KEYS = ("commits", "aborts", "ro_commits", "versioned_commits")
 
 
+def _ring_slot(ring_ts, read_clock: int) -> Optional[int]:
+    """Newest ring slot with a timestamp at/below ``read_clock``, or
+    ``None`` when the clock fell out of the ring window (the one place
+    the slot-selection idiom lives: scalar read, bulk read,
+    ``snapshot_bulk`` and ``validate`` all route here)."""
+    if ring_ts is None:
+        return None
+    valid = (ring_ts != -1) & (ring_ts <= read_clock)
+    if not valid.any():
+        return None
+    return int(np.argmax(np.where(valid, ring_ts, -1)))
+
+
 class _MVCtx:
     """Per-transaction context at the store level."""
 
@@ -133,16 +146,53 @@ class MVStoreHandle(SubstrateBase):
                 # Mode-Q reader versions the block itself (paper SS4.1's
                 # reader-triggered versioning, at block granularity)
                 clock, live, ring, ring_ts = self._version_block()
-            valid = (ring_ts != -1) & (ring_ts <= ctx.read_clock)
-            if not valid.any():
+            slot = _ring_slot(ring_ts, ctx.read_clock)
+            if slot is None:
                 self._abort_ctx(ctx)       # fell out of the ring window
-            slot = int(np.argmax(np.where(valid, ring_ts, -1)))
             return ring[slot, addr].item()
         # unversioned (Mode-Q reader / writer encounter read): validate
         # that no commit has advanced the clock past our begin snapshot
         if clock > ctx.read_clock:
             self._abort_ctx(ctx)
         return live[addr].item()
+
+    def read_bulk(self, ctx: _MVCtx, addrs) -> Any:
+        """`Txn.read_bulk` at the store level: one slice per batch.
+
+        The store is already array-shaped, so the batch is literally one
+        gather — of the live block on the unversioned path (after the
+        same clock check every scalar read makes), or of the ONE ring row
+        the reader's clock selects on the versioned path (slot selection
+        is a host-side scan of the tiny timestamp vector; the row gather
+        runs through ``kernels/gather_read.py`` on TPU).  A scanner that
+        reads the whole block thus costs one launch, not N interpreter
+        round-trips — the measurement the eval subsystem is built on.
+        """
+        from repro.core.engine.bulkread import as_addr_array
+        a = as_addr_array(addrs)
+        ctx.read_cnt += a.size
+        clock, live, ring, ring_ts = self._snap
+        if ctx.versioned and ctx.read_only:
+            if ring is None:
+                clock, live, ring, ring_ts = self._version_block()
+            slot = _ring_slot(ring_ts, ctx.read_clock)
+            if slot is None:
+                self._abort_ctx(ctx)       # fell out of the ring window
+            vals = self._gather_row(ring[slot], a)
+        else:
+            if clock > ctx.read_clock:
+                self._abort_ctx(ctx)
+            vals = self._gather_row(live, a)
+        if ctx.write_buf:
+            return [ctx.write_buf.get(int(x), v)
+                    for x, v in zip(a, vals.tolist())]
+        return vals
+
+    def _gather_row(self, row: np.ndarray, a: np.ndarray) -> np.ndarray:
+        """One row gather (kernel-dispatched): the engine's shared
+        ``gather_row`` serves the store's live block and ring rows too."""
+        from repro.core.engine.bulkread import gather_row
+        return gather_row(row, a)
 
     def write(self, ctx: _MVCtx, addr: int, value: Any) -> None:
         if ctx.versioned:
@@ -231,8 +281,7 @@ class MVStoreHandle(SubstrateBase):
         if ctx.versioned and ctx.read_only:
             if ring_ts is None:
                 return True               # block not versioned yet
-            return bool(((ring_ts != -1) & (ring_ts <= ctx.read_clock))
-                        .any())
+            return _ring_slot(ring_ts, ctx.read_clock) is not None
         return clock <= ctx.read_clock
 
     def _abort_ctx(self, ctx: _MVCtx) -> None:
@@ -278,6 +327,25 @@ class MVStoreHandle(SubstrateBase):
         if read_clock is None:
             read_clock = int(state.clock)
         return self._mvstore.mv_snapshot(state, read_clock)
+
+    def snapshot_bulk(self, addrs, read_clock: Optional[int] = None):
+        """``(values, ok)``: batched snapshot read outside any transaction.
+
+        The functional spelling of `read_bulk` in a read-only transaction
+        at ``read_clock`` (default: now): the current clock serves from
+        the live block; a stale clock resolves through the ring (``ok``
+        False when the block is unversioned or the clock fell out of the
+        ring window — the cases a transactional reader would abort on).
+        """
+        from repro.core.engine.bulkread import as_addr_array
+        a = as_addr_array(addrs)
+        clock, live, ring, ring_ts = self._snap
+        if read_clock is None or read_clock >= clock:
+            return self._gather_row(live, a), True
+        slot = _ring_slot(ring_ts, read_clock)
+        if slot is None:
+            return None, False
+        return self._gather_row(ring[slot], a), True
 
     @property
     def state(self):

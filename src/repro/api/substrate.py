@@ -56,6 +56,35 @@ class Txn:
     def read(self, addr: int) -> Any:
         return self._sub.read(self._ctx, addr)
 
+    def read_bulk(self, addrs) -> Any:
+        """Batched transactional read: ``[self.read(a) for a in addrs]``
+        semantics, one substrate call.
+
+        ``addrs`` is any address sequence (``range``, list, ndarray).
+        On engine-backed word substrates the batch runs as one heap
+        gather bracketed by two consistent lock-word gathers plus a
+        vectorized predicate (the ``kernels/gather_read.py`` path on
+        TPU); on `MVStoreHandle` it is one slice of the live block or the
+        snapshot ring row.  Elements the fast path cannot prove
+        consistent are transparently re-read through the scalar protocol.
+
+        SAFETY is never weakened: every accepted element is provably the
+        value at the transaction's snapshot, and unprovable elements get
+        the policy's exact scalar semantics.  One LIVENESS caveat: on
+        Multiverse's Mode-Q versioned path, batching accepts stable words
+        by validation instead of seeding version lists for them (the
+        scalar reader-triggered versioning), so a later re-read of a word
+        an updater has since overwritten — or another versioned reader of
+        it — may abort where the all-scalar protocol would have found a
+        version.  Long scans read each word once and are unaffected.
+        Returns a sequence (ndarray on array-backed heaps when the whole
+        batch gathered clean, list otherwise).
+        """
+        fn = getattr(self._sub, "read_bulk", None)
+        if fn is not None:
+            return fn(self._ctx, addrs)
+        return [self._sub.read(self._ctx, int(a)) for a in addrs]
+
     def write(self, addr: int, value: Any) -> None:
         self._sub.write(self._ctx, addr, value)
 
@@ -162,6 +191,12 @@ class SubstrateBase:
 
     def read_count(self, ctx: Any) -> int:
         return getattr(ctx, "read_cnt", 0)
+
+    def read_bulk(self, ctx: Any, addrs) -> Any:
+        """`Txn.read_bulk` hook: default is the scalar loop, so every
+        substrate supports the batched surface even before it vectorizes
+        (`WordSubstrate`/`MVStoreHandle` override with real batches)."""
+        return [self.read(ctx, int(a)) for a in addrs]
 
     def validate(self, ctx: Any) -> bool:
         """`Txn.validate_bulk` hook: read-only consistency check."""

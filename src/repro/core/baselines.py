@@ -30,6 +30,7 @@ from repro.core.engine import (
     V_LE,
     V_LT,
 )
+from repro.core.engine import bulkread as B
 from repro.core.engine import commit as C
 from repro.core.engine import validation as V
 
@@ -57,6 +58,14 @@ class TL2Policy(PolicyBase):
             eng.abort_txn(d)
         d.read_set.append((idx, st1.version))
         return data
+
+    def read_bulk(self, eng, d, addrs) -> Any:
+        # buffered writes make the overlay ambiguous — the rare
+        # read-own-writes batch takes the exact scalar loop instead
+        if d.write_map:
+            return [self.read(eng, d, int(a)) for a in addrs]
+        vals, ok = B.bulk_read_lockver(eng, d, addrs, inclusive=True)
+        return B.finish_with_scalar(eng, d, addrs, vals, ok, self.read)
 
     def write(self, eng, d, addr: int, value: Any) -> None:
         d.read_only = False
@@ -111,6 +120,13 @@ class DCTLPolicy(PolicyBase):
             eng.abort_txn(d)
         d.read_set.append((idx, st.version))
         return data
+
+    def read_bulk(self, eng, d, addrs) -> Any:
+        # irrevocable transactions lock even their reads — scalar only
+        if d.irrevocable:
+            return [self.read(eng, d, int(a)) for a in addrs]
+        vals, ok = B.bulk_read_lockver(eng, d, addrs, inclusive=False)
+        return B.finish_with_scalar(eng, d, addrs, vals, ok, self.read)
 
     def _lock_for(self, eng, d, idx: int) -> bool:
         """Irrevocable path: claim locks even for reads; spin, never abort."""
@@ -193,6 +209,26 @@ class NOrecPolicy(PolicyBase):
         d.read_vals.append((addr, val))
         return val
 
+    def read_bulk(self, eng, d, addrs) -> Any:
+        """Batched NOrec read: gather under an unchanged seqlock.
+
+        The scalar read's invariant — "value observed while ``seq`` was
+        even and equal to ``r_clock``" — holds for the whole batch when
+        the seqlock is unchanged across the gather (writers bump it odd
+        before touching the heap), so one gather + two seq loads replace
+        N validate-and-reread loops.
+        """
+        if d.write_map:
+            return [self.read(eng, d, int(a)) for a in addrs]
+        while True:
+            if self.seq.load() != d.r_clock:
+                d.r_clock = self._validate_values(eng, d)
+            vals = B.heap_gather(eng.heap, addrs)
+            if self.seq.load() == d.r_clock:
+                break
+        d.read_vals.extend(zip((int(a) for a in addrs), vals))
+        return vals
+
     def write(self, eng, d, addr: int, value: Any) -> None:
         d.read_only = False
         d.write_map[addr] = value
@@ -251,6 +287,12 @@ class TinySTMPolicy(DCTLPolicy):
                 continue
             d.read_set.append((idx, st.version))
             return data
+
+    def read_bulk(self, eng, d, addrs) -> Any:
+        # commit-bumped clock: versions AT r_clock are still consistent;
+        # entries needing snapshot extension fall back to the scalar read
+        vals, ok = B.bulk_read_lockver(eng, d, addrs, inclusive=True)
+        return B.finish_with_scalar(eng, d, addrs, vals, ok, self.read)
 
     def commit_update(self, eng, d) -> None:
         if not eng.revalidate(d):

@@ -7,6 +7,8 @@ algorithms themselves are ``TMPolicy`` objects (``core/baselines.py``,
 
     descriptor.py   TxnDescriptor — unified per-thread txn context
     validation.py   commit-time revalidation (scalar + bulk/vectorized)
+    bulkread.py     batched reads (Txn.read_bulk): gather + vectorized
+                    stability predicate, scalar fallback per element
     commit.py       lock-acquire / write-back / version-publish steps
     policy.py       TMPolicy protocol + PolicyBase defaults
     arrayheap.py    ObjectHeap / ArrayHeap / packed ArrayLockTable
@@ -18,6 +20,11 @@ from repro.core.engine.arrayheap import (  # noqa: F401
     ArrayHeap,
     ArrayLockTable,
     ObjectHeap,
+)
+from repro.core.engine.bulkread import (  # noqa: F401
+    as_addr_array,
+    bulk_read_lockver,
+    heap_gather,
 )
 from repro.core.engine.descriptor import (  # noqa: F401
     COUNTER_KEYS,
@@ -44,5 +51,5 @@ __all__ = [
     "ArrayHeap", "ArrayLockTable", "BULK_MIN", "COUNTER_KEYS",
     "MaxRetriesExceeded", "AbortTx", "ObjectHeap", "PolicyBase", "TMBase",
     "TMPolicy", "TransactionEngine", "TxnDescriptor", "V_EQ", "V_LE",
-    "V_LT",
+    "V_LT", "as_addr_array", "bulk_read_lockver", "heap_gather",
 ]

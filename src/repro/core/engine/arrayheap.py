@@ -75,6 +75,13 @@ class ObjectHeap:
     def __len__(self) -> int:
         return len(self._cells)
 
+    def gather(self, addrs) -> List[Any]:
+        """Batched read (``Txn.read_bulk``): one pass, no vectorization
+        possible over arbitrary objects — but still one bounds check and
+        no per-word lock/validate Python round-trips."""
+        cells = self._cells
+        return [cells[int(a)] for a in addrs]
+
 
 class ArrayHeap:
     """Numeric word heap in one int64 numpy buffer (doubling growth).
@@ -122,6 +129,21 @@ class ArrayHeap:
 
     def __len__(self) -> int:
         return self._len
+
+    def gather(self, addrs) -> np.ndarray:
+        """Batched read: one fancy-index copy of ``buf[addrs]``.
+
+        The copy is taken under the heap lock so a concurrent ``alloc``
+        cannot swap the buffer out mid-gather (the same hazard
+        ``__setitem__`` guards against); each element is then a plain
+        int64 word.  Bounds are checked against the allocation frontier,
+        matching the scalar ``__getitem__`` contract.
+        """
+        idx = np.asarray(addrs, np.int64)
+        with self._lock:
+            if idx.size and int(idx.max(initial=0)) >= self._len:
+                raise IndexError(int(idx.max()))
+            return self._buf[idx]
 
     def jnp(self):
         import jax.numpy as jnp
@@ -179,6 +201,14 @@ class ArrayLockTable(LockTable):
             self._words[idx] = pack_lock(LockState(False, v, -1, False))
 
     # -- bulk ops ----------------------------------------------------------
+    def index_bulk(self, addrs: np.ndarray) -> np.ndarray:
+        """Vectorized ``index``: the Fibonacci hash of many addresses at
+        once (uint64 arithmetic wraps mod 2**64 exactly like the scalar
+        Python path masks it)."""
+        from repro.core.locks import _GOLDEN
+        a = np.asarray(addrs, np.uint64) * np.uint64(_GOLDEN)
+        return (a >> np.uint64(64 - self.bits)).astype(np.int64)
+
     def gather(self, idxs: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
                                                 np.ndarray]:
         """One consistent snapshot of many lock words.

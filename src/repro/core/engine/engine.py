@@ -28,6 +28,7 @@ from __future__ import annotations
 from typing import Any, List, Optional
 
 from repro.core.clock import GlobalClock
+from repro.core.engine import bulkread as B
 from repro.core.engine import validation as V
 from repro.core.engine.arrayheap import ArrayLockTable, ObjectHeap
 from repro.core.engine.descriptor import COUNTER_KEYS, TxnDescriptor
@@ -71,6 +72,9 @@ class _Tx:
 
     def read(self, addr: int) -> Any:
         return self._tm.tm_read(self._ctx, addr)
+
+    def read_bulk(self, addrs) -> Any:
+        return self._tm.tm_read_bulk(self._ctx, addrs)
 
     def write(self, addr: int, value: Any) -> None:
         self._tm.tm_write(self._ctx, addr, value)
@@ -148,6 +152,17 @@ class TransactionEngine(TMBase):
     def tm_read(self, d: TxnDescriptor, addr: int) -> Any:
         d.read_cnt += 1
         return self.policy.read(self, d, addr)
+
+    def tm_read_bulk(self, d: TxnDescriptor, addrs) -> Any:
+        """Batched read: the whole address batch in one policy call.
+
+        Counts as ``len(addrs)`` reads (heuristics like K1/K2/K3 and the
+        paper's MinModeUReadCount are calibrated on words read, and a
+        bulk scan reads just as many words as a scalar one).
+        """
+        a = B.as_addr_array(addrs)
+        d.read_cnt += a.size
+        return self.policy.read_bulk(self, d, a)
 
     def tm_write(self, d: TxnDescriptor, addr: int, value: Any) -> None:
         self.policy.write(self, d, addr, value)

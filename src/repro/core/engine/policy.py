@@ -83,6 +83,16 @@ class PolicyBase:
     def read(self, eng, d, addr: int) -> Any:
         raise NotImplementedError
 
+    def read_bulk(self, eng, d, addrs) -> Any:
+        """Batched read (``Txn.read_bulk``): default is the scalar loop.
+
+        Lock-version policies override this with the vectorized batch in
+        ``engine.bulkread`` (one heap gather bracketed by two lock-word
+        gathers); the default keeps every third-party policy correct.
+        ``addrs`` arrives as an int64 ndarray (the engine normalizes).
+        """
+        return [self.read(eng, d, int(a)) for a in addrs]
+
     def write(self, eng, d, addr: int, value: Any) -> None:
         raise NotImplementedError
 

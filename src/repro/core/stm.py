@@ -35,6 +35,7 @@ from repro.core import heuristics as heur
 from repro.core import modes as M
 from repro.core.bloom import BloomTable
 from repro.core.clock import AtomicInt
+from repro.core.engine import bulkread as B
 from repro.core.ebr import EBR, TxRetireBuffer
 from repro.core.engine import (
     AbortTx,
@@ -268,6 +269,32 @@ class MultiversePolicy(PolicyBase):
         if head is not None:
             # previous version retired iff we commit (eventualFree)
             self._retire_bufs[d.tid].retire_on_commit(head)
+
+    def read_bulk(self, eng, d, addrs) -> Any:
+        """Batched read on BOTH of the paper's read paths.
+
+        Unversioned: the shared lock-version batch (one heap gather
+        bracketed by two lock-word gathers, V_LT predicate); failures
+        re-read scalar, which spins/aborts exactly like a scalar loop.
+
+        Versioned: the same batch WITHOUT read-set tracking — an element
+        that is unlocked, unflagged and stable at ``version < r_clock``
+        holds precisely its value as of the reader's snapshot, no version
+        list needed — and only the recently-written minority (version at
+        or past the snapshot, locked, or mid-versioning) walks the
+        version lists through the mode's scalar read.  This is what makes
+        the paper's long-running read an array operation instead of a
+        pointer chase: updaters touch few addresses per scan, so the
+        traversal set stays tiny while the stable majority moves in bulk.
+        """
+        if not d.versioned:
+            vals, ok = B.bulk_read_lockver(eng, d, addrs, inclusive=False)
+            return B.finish_with_scalar(eng, d, addrs, vals, ok, self.read)
+        vals, ok = B.bulk_read_lockver(eng, d, addrs, inclusive=False,
+                                       track=False)
+        scalar = (self._mode_u_versioned_read if d.local_mode == M.MODE_U
+                  else self._mode_q_versioned_read)
+        return B.finish_with_scalar(eng, d, addrs, vals, ok, scalar)
 
     def read(self, eng, d, addr: int) -> Any:
         if d.versioned and d.local_mode in (M.MODE_Q, M.MODE_QTOU,

@@ -1,0 +1,38 @@
+"""repro.eval — the paper-figure evaluation subsystem.
+
+Reproduces the paper's long-running-read experiments across every
+registered backend, with the batched snapshot-read path
+(``Txn.read_bulk`` / ``kernels/gather_read.py``) as the measurement
+surface, so the numbers reflect the TM algorithm rather than the Python
+interpreter:
+
+    python -m repro.eval --workload longread            # the headline
+    python -m repro.eval --workload structrq --quick    # CI smoke
+
+    from repro.eval import run_eval
+    rows, path = run_eval("longread", seed=3)
+
+Workload families live in ``workloads.py`` (longread / rwmix /
+structrq), the thread/warmup machinery in ``driver.py``, and the
+normalized ``{meta, rows}`` results schema in ``results.py`` — shared
+with ``benchmarks/run.py`` so everything under ``results/`` carries the
+same ``{git_sha, seed, backends, mode_transitions}`` meta block.
+See BENCHMARKS.md for how each experiment maps to a paper figure.
+"""
+from repro.eval.driver import (  # noqa: F401
+    longread_headline,
+    run_eval,
+    time_trial,
+)
+from repro.eval.results import save_results  # noqa: F401
+from repro.eval.workloads import (  # noqa: F401
+    DEFAULT_BACKENDS,
+    UNVERSIONED,
+    WORKLOADS,
+    TrialSpec,
+)
+
+__all__ = [
+    "DEFAULT_BACKENDS", "TrialSpec", "UNVERSIONED", "WORKLOADS",
+    "longread_headline", "run_eval", "save_results", "time_trial",
+]

@@ -1,0 +1,90 @@
+"""CLI for the eval subsystem: ``python -m repro.eval``.
+
+    python -m repro.eval --workload longread             # all six backends
+    python -m repro.eval --workload longread --quick     # CI smoke
+    python -m repro.eval --workload structrq --backends multiverse tl2
+    python -m repro.eval --list                          # what exists
+
+Writes ``results/eval_<workload>.json`` (see BENCHMARKS.md for the row
+schemas) and prints one table line per trial.  Exit status is non-zero
+if any completed long read observed an inconsistent snapshot — the CLI
+doubles as a correctness gate, not just a stopwatch.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.eval.driver import longread_headline, run_eval
+from repro.eval.workloads import WORKLOADS
+
+
+def _fmt_row(row: dict) -> str:
+    extra = ""
+    if "scans_per_sec" in row:
+        extra = (f"scans/s={row['scans_per_sec']:8.1f} "
+                 f"failed={row['failed_scans']:4d} "
+                 f"updates/s={row['updates_per_sec']:8.0f}")
+    elif "rqs_per_sec" in row:
+        extra = (f"ops/s={row['ops_per_sec']:8.0f} "
+                 f"rqs/s={row['rqs_per_sec']:6.1f} "
+                 f"failed={row['failed_ops']:4d}")
+    elif "ops_per_sec" in row:
+        extra = (f"ops/s={row['ops_per_sec']:8.0f} "
+                 f"failed={row['failed_ops']:4d}")
+    mode = row["stm_stats"].get("mode", "-")
+    return (f"{row['workload']}/{row['variant']:<9s} "
+            f"{row['backend']:<10s} {extra} mode={mode}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.eval",
+        description="paper-figure evaluation: workloads x backends")
+    ap.add_argument("--workload", default="longread",
+                    choices=sorted(WORKLOADS))
+    ap.add_argument("--backends", nargs="*", default=None,
+                    help="registered backend names "
+                         "(default: the workload's full set)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer variants, short windows")
+    ap.add_argument("--out", default=None,
+                    help="results directory (default: results/)")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="list workloads and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, w in sorted(WORKLOADS.items()):
+            variants = ", ".join(s.variant for s in w.variants())
+            print(f"{name:<10s} metric={w.metric:<14s} "
+                  f"variants: {variants}")
+        return 0
+
+    rows, path = run_eval(
+        args.workload, backends=args.backends, seed=args.seed,
+        quick=args.quick, out_dir=args.out, save=not args.no_save,
+        progress=lambda r: print(_fmt_row(r), flush=True))
+
+    violations = sum(r.get("violations", 0) for r in rows)
+    if args.workload == "longread":
+        h = longread_headline(rows)
+        if h:
+            verdict = "WINS" if h["multiverse_wins"] else "does NOT win"
+            base = ", ".join(f"{b}={v:.1f}" for b, v in
+                             h["baseline_scans_per_sec"].items())
+            print(f"\nheadline @ scan{h['scan_size']}: multiverse="
+                  f"{h['multiverse_scans_per_sec']:.1f} scans/s {verdict} "
+                  f"vs [{base}]")
+    if path:
+        print(f"results -> {path}")
+    if violations:
+        print(f"CONSISTENCY VIOLATIONS: {violations}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,6 @@
 """Pallas TPU kernels for the compute hot spots (DESIGN.md SS7):
 flash_attention, ssd_scan (Mamba-2 chunk scan), snapshot_select (MVStore
-versioned read), fused_adamw (optimizer + versioned commit).  ops.py holds
-the jit.d wrappers, ref.py the pure-jnp oracles."""
+versioned read), fused_adamw (optimizer + versioned commit), validate
+(bulk read-set revalidation), gather_read (batched snapshot read —
+`Txn.read_bulk`/`snapshot_bulk`).  ops.py holds the jit.d wrappers,
+ref.py the pure-jnp oracles."""

@@ -1,0 +1,68 @@
+"""Batched snapshot read — the long-running-read hot path as a Pallas kernel.
+
+The paper's headline workload is a transaction that reads THOUSANDS of
+words (a range query / audit / scan) while updaters commit around it.
+Word-at-a-time that read is bottlenecked by the interpreter, not the TM;
+this kernel gathers an entire address batch from the heap in ONE launch:
+
+    values[i] = heap[addrs[i]]          for i in [0, N)
+
+so a `Txn.read_bulk` costs one heap gather + one lock-word gather + one
+vectorized validation pass instead of N Python round-trips.
+
+The same kernel serves both layers:
+
+  * word level — ``heap`` is the live ``ArrayHeap`` buffer (int64 words);
+  * store level — ``heap`` is the ring row ``snapshot_select`` (or the
+    host-side slot scan) picked for the reader's clock, so a versioned
+    bulk read is slot-select + this gather.
+
+Layout: the heap rides in as one full block (the whole live heap must fit
+the kernel's memory budget — at this repro's scales it is KBs..MBs); the
+address vector and output are tiled over the grid, so the gather runs
+tile-by-tile on the VPU.  ``interpret=True`` is the CPU fallback path;
+for CPU *production* reads the engine uses the numpy twin (a single
+fancy-index in ``engine.bulkread.heap_gather``), mirroring the
+``validate.py`` / ``engine.validation.np_validate`` split — the kernel
+test pins the two implementations together element-for-element.
+
+Out-of-range addresses are the caller's bug (the engine bounds-checks
+against the allocation frontier before launching); padding uses address 0,
+which every heap has (structures burn it as NULL).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: padding address: always allocated (address 0), gathered then discarded
+PAD_ADDR = 0
+
+
+def _gather_kernel(heap_ref, addr_ref, o_ref):
+    o_ref[...] = jnp.take(heap_ref[...], addr_ref[...], axis=0)
+
+
+def gather_read_flat(heap, addrs, *, tile: int = 512,
+                     interpret: bool = True):
+    """heap: [H]; addrs: [N] int32 (N a multiple of ``tile``).
+
+    Returns the [N] gathered values (``heap.dtype``).  The heap is one
+    full block per grid step; addresses/outputs are tiled.
+    """
+    (h,) = heap.shape
+    n = addrs.shape[0]
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), heap.dtype),
+        interpret=interpret,
+    )(heap, addrs)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import fused_adamw as _fa
 from repro.kernels import flash_attention as _fl
+from repro.kernels import gather_read as _gr
 from repro.kernels import snapshot_select as _ss
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import validate as _val
@@ -63,6 +64,30 @@ def snapshot_select(ring, ts, read_clock):
     val, ok = _ss.snapshot_select_flat(flat, ts, read_clock, tile=tile,
                                        interpret=INTERPRET)
     return val.reshape(shape), ok
+
+
+def snapshot_read(heap, addrs, tile: int = 512):
+    """Batched snapshot read: ``heap[addrs]`` in one gather launch.
+
+    ``heap``: [H] (any numeric dtype); ``addrs``: [N] int — returns the
+    [N] gathered values as a jax array.  Adapts ragged batch lengths to
+    the tiled kernel by padding with address 0 (always allocated — the
+    heaps burn it as NULL) and slicing the result back to N.  This is the
+    `Txn.read_bulk` / `snapshot_bulk` hot path on TPU
+    (KERNEL_INTERPRET=0); on CPU the engine uses the numpy twin (a single
+    fancy-index in ``engine.bulkread.heap_gather``) directly.
+    """
+    n = int(addrs.shape[0])
+    if n == 0:
+        return jnp.zeros((0,), heap.dtype)
+    t = min(tile, 1 << (n - 1).bit_length())
+    pad = (-n) % t
+    a = jnp.asarray(addrs, jnp.int32)
+    if pad:
+        a = jnp.pad(a, (0, pad), constant_values=_gr.PAD_ADDR)
+    out = _gr.gather_read_flat(jnp.asarray(heap), a, tile=t,
+                               interpret=INTERPRET)
+    return out[:n]
 
 
 def validate_readset(ver, own, meta, seen, r_clock, tid, mode,

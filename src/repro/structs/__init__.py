@@ -7,7 +7,9 @@ means any `TMPolicy` over `repro.core.engine`, including third-party
 backends registered via `register_backend`.  Long read-only operations
 (range queries, size queries) can poll `tx.validate_bulk()` to fail fast
 on staleness; the engine answers it with one vectorized pass over the
-whole read set.
+whole read set.  Contiguous regions (hashmap bucket heads, abtree nodes)
+read through `tx.read_bulk`, so the long-running reads the paper studies
+move in batches instead of word-at-a-time Python.
 """
 from repro.structs.abtree import ABTree  # noqa: F401
 from repro.structs.extbst import ExternalBST  # noqa: F401

@@ -190,21 +190,25 @@ class ABTree:
             return out
 
         def dfs(node: int) -> bool:
-            n = tx.read(node + 1)
-            if tx.read(node):
+            # nodes are contiguous, so each visit is ONE read_bulk batch
+            # (header + keys + values/children) instead of ~2b word reads;
+            # unused slots ride along — a slightly wider conflict surface
+            # paid once per node for a vectorized long read
+            words = tx.read_bulk(range(node, node + self.node_words))
+            n = int(words[1])
+            if int(words[0]):
                 for i in range(n):
-                    k = tx.read(node + self._keys_off(i))
+                    k = int(words[self._keys_off(i)])
                     if k >= lo:
-                        out.append((k, tx.read(node + self._vals_off(i))))
+                        out.append((k, words[self._vals_off(i)]))
                         if len(out) >= count:
                             return True
                 return False
-            keys = [tx.read(node + self._keys_off(i)) for i in range(n)]
             for ci in range(n + 1):
                 # child ci holds keys < keys[ci]: skip if all below lo
-                if ci < n and keys[ci] <= lo:
+                if ci < n and int(words[self._keys_off(ci)]) <= lo:
                     continue
-                child = tx.read(node + self._child_off(ci))
+                child = int(words[self._child_off(ci)])
                 if child != NULL and dfs(child):
                     return True
             return False

@@ -1,0 +1,67 @@
+"""The eval subsystem: driver plumbing, results schema, CLI wiring.
+
+Quick-mode trials on a two-backend subset keep this a smoke of the REAL
+path (threads, warmup, counters, JSON) rather than a perf assertion —
+relative throughput claims live in the full `python -m repro.eval`
+run and BENCHMARKS.md, not in CI-sized windows.
+"""
+import json
+
+import pytest
+
+from repro.eval import WORKLOADS, longread_headline, run_eval
+
+
+def test_workload_registry_names():
+    assert {"longread", "rwmix", "structrq"} <= set(WORKLOADS)
+    for w in WORKLOADS.values():
+        variants = w.variants(quick=True)
+        assert variants and all(v.workload == w.name for v in variants)
+        assert len(w.variants(quick=False)) >= len(variants)
+
+
+def test_run_eval_unknown_workload():
+    with pytest.raises(ValueError, match="unknown workload"):
+        run_eval("nope", save=False)
+
+
+def test_longread_quick_rows_and_results_file(tmp_path):
+    rows, path = run_eval("longread", backends=["multiverse", "tl2"],
+                          quick=True, seed=7, out_dir=str(tmp_path))
+    assert len(rows) == 2
+    for r in rows:
+        assert r["workload"] == "longread"
+        assert r["seed"] == 7
+        assert r["violations"] == 0          # consistency, not speed
+        assert "scans_per_sec" in r and "stm_stats" in r
+        assert set(r["stm_stats"]) >= {"commits", "aborts", "mode",
+                                       "backend"}
+    payload = json.loads((tmp_path / "eval_longread.json").read_text())
+    assert payload["meta"]["schema_version"] == 1
+    assert payload["meta"]["seed"] == 7
+    assert payload["meta"]["workload"] == "longread"
+    assert sorted(payload["meta"]["backends"]) == ["multiverse", "tl2"]
+    assert "mode_transitions" in payload["meta"]
+    assert len(payload["rows"]) == 2
+    assert path == str(tmp_path / "eval_longread.json")
+
+
+def test_longread_headline_extraction():
+    rows = [
+        {"backend": "multiverse", "scan_size": 4096, "scans_per_sec": 9.0},
+        {"backend": "multiverse", "scan_size": 256, "scans_per_sec": 1.0},
+        {"backend": "tl2", "scan_size": 4096, "scans_per_sec": 2.0},
+        {"backend": "tinystm", "scan_size": 4096, "scans_per_sec": 0.5},
+    ]
+    h = longread_headline(rows)
+    assert h["scan_size"] == 4096
+    assert h["multiverse_wins"] is True
+    assert h["baseline_scans_per_sec"] == {"tl2": 2.0, "tinystm": 0.5}
+    assert longread_headline([]) == {}
+
+
+def test_structrq_quick_single_backend(tmp_path):
+    rows, _ = run_eval("structrq", backends=["tl2"], quick=True,
+                       out_dir=str(tmp_path))
+    assert rows and rows[0]["structure"] == "hashmap"
+    assert rows[0]["ops_per_sec"] >= 0
