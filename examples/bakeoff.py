@@ -6,7 +6,10 @@ schema everywhere, the comparison table needs zero per-backend glue.
 A validation microbenchmark then times the engine's commit-time read-set
 revalidation both ways — the word-at-a-time scalar loop vs the bulk
 vectorized path (`engine.validation` / `kernels/validate.py`) — across
-read-set sizes.
+read-set sizes; the read_bulk microbench does the same for flat long
+reads, and the structrq microbench for pointer-chasing ones (the
+frontier-at-a-time `HashMap.size_query` vs the scalar chain walk,
+asserted >=3x at 4k keys).
 
     PYTHONPATH=src python examples/bakeoff.py [--seconds 1.0] [--quick]
 """
@@ -153,6 +156,53 @@ def readbulk_microbench(sizes=(1024, 4096, 16384), repeats=5,
     return rows
 
 
+def structrq_microbench(n_keys=4096, n_buckets=1 << 10, repeats=3):
+    """Struct long read: frontier-at-a-time walk vs the scalar traversal.
+
+    A quiescent hashmap with ``n_keys`` keys over ``n_buckets`` chained
+    buckets (load factor 4, so chains are real).  The frontier walk is
+    the shipped ``HashMap.size_query`` (bucket heads in one ``read_bulk``
+    batch, then every chain advancing in lockstep via
+    ``engine.traverse.chase_bulk``); the scalar reference hops each
+    chain word-at-a-time through ``tx.read`` — the pre-traversal-layer
+    implementation.  Asserts the two agree; returns timing rows.
+    """
+    from repro.structs import HashMap
+
+    tm = make_tm("multiverse", n_threads=1,
+                 params=MultiverseParams(lock_table_bits=16),
+                 array_heap=True)
+    h = HashMap(tm, n_buckets=n_buckets)
+    for k in range(n_keys):
+        run(tm, lambda tx, k=k: h.insert(tx, k, k), tid=0)
+
+    def scalar_sq(tx):
+        total = 0
+        heads = tx.read_bulk(range(h.table, h.table + h.n_buckets))
+        for node in heads:
+            node = int(node)
+            while node:
+                total += 1
+                node = int(tx.read(node + 2))
+        return total
+
+    def timeit(fn):
+        best, val = float("inf"), None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            val = run(tm, fn, tid=0)
+            best = min(best, time.perf_counter() - t0)
+        return val, best
+
+    v_f, t_frontier = timeit(h.size_query)
+    v_s, t_scalar = timeit(scalar_sq)
+    assert v_f == v_s == n_keys, (v_f, v_s)
+    tm.stop()
+    return [{"keys": n_keys, "scalar_us": t_scalar * 1e6,
+             "frontier_us": t_frontier * 1e6,
+             "speedup": t_scalar / max(t_frontier, 1e-12)}]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--seconds", type=float, default=1.0)
@@ -198,6 +248,15 @@ def main():
         if row["reads"] >= 4096 and beats_at_4k is None:
             beats_at_4k = row["speedup"] >= 4.0
     assert beats_at_4k, "read_bulk did not beat the scalar loop 4x at 4k"
+
+    print("\nstruct long read: scalar chain walk vs frontier-at-a-time")
+    print(f"{'keys':>7s} {'scalar_us':>10s} {'frontier_us':>11s} "
+          f"{'speedup':>8s}")
+    for row in structrq_microbench(n_keys=4096):
+        print(f"{row['keys']:7d} {row['scalar_us']:10.1f} "
+              f"{row['frontier_us']:11.1f} {row['speedup']:7.1f}x")
+        assert row["speedup"] >= 3.0, \
+            "frontier walk did not beat the scalar traversal 3x at 4k keys"
 
 
 if __name__ == "__main__":

@@ -167,6 +167,10 @@ class MVStoreHandle(SubstrateBase):
         runs through ``kernels/gather_read.py`` on TPU).  A scanner that
         reads the whole block thus costs one launch, not N interpreter
         round-trips — the measurement the eval subsystem is built on.
+        This is also the store-level substrate of the traversal layer:
+        ``Txn.traverse_bulk``/``chase_bulk`` issue only ``read_bulk``
+        calls, so struct walks over an MVStore block batch per frontier
+        step exactly like the word-level engine.
         """
         from repro.core.engine.bulkread import as_addr_array
         a = as_addr_array(addrs)

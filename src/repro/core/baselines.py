@@ -271,8 +271,15 @@ class TinySTMPolicy(DCTLPolicy):
         idx = eng.locks.index(addr)
         while True:
             st = eng.locks.read(idx)
-            if st.locked and st.tid != d.tid:
-                eng.abort_txn(d)
+            if st.locked:
+                if st.tid != d.tid:
+                    eng.abort_txn(d)
+                # lock held by THIS txn (a written address sharing the
+                # lock index): the word is stable under our own lock —
+                # spinning on it would self-livelock forever.  V_EQ
+                # revalidation passes while we still hold it.
+                d.read_set.append((idx, st.version))
+                return eng.heap[addr]
             data = eng.heap[addr]
             st2 = eng.locks.read(idx)
             if st2.locked or st2.version != st.version:

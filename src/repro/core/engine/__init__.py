@@ -9,6 +9,8 @@ algorithms themselves are ``TMPolicy`` objects (``core/baselines.py``,
     validation.py   commit-time revalidation (scalar + bulk/vectorized)
     bulkread.py     batched reads (Txn.read_bulk): gather + vectorized
                     stability predicate, scalar fallback per element
+    traverse.py     frontier-at-a-time traversal (traverse_bulk /
+                    chase_bulk): pointer chases as per-level batches
     commit.py       lock-acquire / write-back / version-publish steps
     policy.py       TMPolicy protocol + PolicyBase defaults
     arrayheap.py    ObjectHeap / ArrayHeap / packed ArrayLockTable
@@ -40,6 +42,10 @@ from repro.core.engine.errors import (  # noqa: F401
     MaxRetriesExceeded,
 )
 from repro.core.engine.policy import PolicyBase, TMPolicy  # noqa: F401
+from repro.core.engine.traverse import (  # noqa: F401
+    chase_bulk,
+    traverse_bulk,
+)
 from repro.core.engine.validation import (  # noqa: F401
     BULK_MIN,
     V_EQ,
@@ -51,5 +57,6 @@ __all__ = [
     "ArrayHeap", "ArrayLockTable", "BULK_MIN", "COUNTER_KEYS",
     "MaxRetriesExceeded", "AbortTx", "ObjectHeap", "PolicyBase", "TMBase",
     "TMPolicy", "TransactionEngine", "TxnDescriptor", "V_EQ", "V_LE",
-    "V_LT", "as_addr_array", "bulk_read_lockver", "heap_gather",
+    "V_LT", "as_addr_array", "bulk_read_lockver", "chase_bulk",
+    "heap_gather", "traverse_bulk",
 ]

@@ -28,6 +28,19 @@ through the policy's scalar path, which spins/extends/aborts with the
 policy's exact semantics.  The batch is an optimization of the common
 case (a quiescent majority), never a semantic change.
 
+Multiverse's VERSIONED readers (paper SS3.1/SS4.2) add a vectorized
+middle tier between the batch and the scalar walk: the failed elements
+are precisely the recently-written words a versioned reader serves from
+version lists, and the packed VLT mirror (``core/vlt.py`` —
+per-lock-index int64 rows of the newest committed ``(timestamp, data)``
+pairs, seqlock-bracketed) resolves them in ONE ``PackedVLT.select``
+gather — ``np_version_select`` on CPU, the
+``kernels/version_select.py`` Pallas kernel when ``KERNEL_INTERPRET=0``
+— so the Mode-U/Q hybrid bulk read (``MultiversePolicy.read_bulk`` →
+``_bulk_versioned_gather``) only falls through to the per-word
+version-list traversal for what the mirror cannot represent (colliding
+buckets, non-int payloads, torn rows, versions deeper than the mirror).
+
 Own writes: encounter-time policies (DCTL/TinySTM/Multiverse) see their
 in-place values in the heap gather already, but those addresses skip
 validation and the read set (the scalar paths return them early);

@@ -76,6 +76,16 @@ class _Tx:
     def read_bulk(self, addrs) -> Any:
         return self._tm.tm_read_bulk(self._ctx, addrs)
 
+    def traverse_bulk(self, roots, expand, *, limit: Optional[int] = None):
+        """Frontier-at-a-time traversal (see ``engine/traverse.py``)."""
+        from repro.core.engine.traverse import traverse_bulk
+        return traverse_bulk(self, roots, expand, limit=limit)
+
+    def chase_bulk(self, cursors, advance) -> int:
+        """Vectorized single-word pointer chase (``engine/traverse.py``)."""
+        from repro.core.engine.traverse import chase_bulk
+        return chase_bulk(self, cursors, advance)
+
     def write(self, addr: int, value: Any) -> None:
         self._tm.tm_write(self._ctx, addr, value)
 

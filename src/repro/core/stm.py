@@ -30,6 +30,8 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+import numpy as np
+
 from repro.configs.paper_stm import MultiverseParams
 from repro.core import heuristics as heur
 from repro.core import modes as M
@@ -77,6 +79,8 @@ class MultiversePolicy(PolicyBase):
                              for _ in range(eng.n_threads)]
         self.stats_unversioned_buckets = 0
         self.stats_mode_transitions = 0
+        self.stats_version_gather_hits = 0   # words resolved by the
+        #                                      packed-VLT bulk gather
         self._stop = threading.Event()
         self._bg: Optional[threading.Thread] = None
         if self._start_bg:
@@ -127,10 +131,14 @@ class MultiversePolicy(PolicyBase):
         if not eng.revalidate(d):
             eng.abort_txn(d)
         commit_clock = eng.clock.load()
-        # remove TBD marks (publish versions at the commit clock)
+        # remove TBD marks (publish versions at the commit clock), and
+        # mirror each now-committed version into the packed VLT while the
+        # address lock is still held (the mirror's writer discipline)
         for addr, (vlist, node) in d.versioned_write_set.items():
             node.timestamp = commit_clock
             node.tbd = False
+            self.vlt.mirror.publish(eng.locks.index(addr), addr,
+                                    commit_clock, node.data)
         # release write locks at the commit clock
         for addr in d.undo:
             eng.locks.unlock(eng.locks.index(addr), commit_clock)
@@ -280,21 +288,74 @@ class MultiversePolicy(PolicyBase):
         Versioned: the same batch WITHOUT read-set tracking — an element
         that is unlocked, unflagged and stable at ``version < r_clock``
         holds precisely its value as of the reader's snapshot, no version
-        list needed — and only the recently-written minority (version at
-        or past the snapshot, locked, or mid-versioning) walks the
-        version lists through the mode's scalar read.  This is what makes
-        the paper's long-running read an array operation instead of a
-        pointer chase: updaters touch few addresses per scan, so the
-        traversal set stays tiny while the stable majority moves in bulk.
+        list needed — then the recently-written minority (version at or
+        past the snapshot, locked, or mid-versioning) resolves through
+        ONE gather of the packed VLT mirror (`PackedVLT.select`: the
+        newest committed version strictly below the snapshot, vectorized
+        — `kernels/version_select.py` on TPU, the numpy twin on CPU),
+        and only what the mirror cannot represent (colliding buckets,
+        torn rows, versions deeper than the mirror) walks the version
+        lists through the mode's scalar read.  This is what makes the
+        paper's long-running read an array operation end to end: the
+        stable majority moves in the heap gather, the written minority
+        in the mirror gather, and the scalar walk handles a residue that
+        is empty in the common case.
         """
         if not d.versioned:
             vals, ok = B.bulk_read_lockver(eng, d, addrs, inclusive=False)
             return B.finish_with_scalar(eng, d, addrs, vals, ok, self.read)
         vals, ok = B.bulk_read_lockver(eng, d, addrs, inclusive=False,
                                        track=False)
+        vals, ok = self._bulk_versioned_gather(eng, d, addrs, vals, ok)
         scalar = (self._mode_u_versioned_read if d.local_mode == M.MODE_U
                   else self._mode_q_versioned_read)
         return B.finish_with_scalar(eng, d, addrs, vals, ok, scalar)
+
+    def _bulk_versioned_gather(self, eng, d, addrs, vals, ok):
+        """Vectorized version-list resolution for a failed batch minority.
+
+        Elements the lock-version predicate rejected are exactly the
+        recently-written ones a versioned reader serves from version
+        lists (paper SS4.2); `PackedVLT.select` answers them in one
+        mirror gather.  SOUNDNESS needs a lock gate in front of the row
+        gather: a commit that could still land BELOW this snapshot (its
+        commit clock was loaded before we began — the deferred clock can
+        advance in between) holds its address locks for its entire
+        version-publish window, so requiring the lock word to be free
+        BEFORE reading the row excludes every such in-flight commit —
+        serving the mirror there could mix pre- and post-commit state
+        across a multi-address commit (the scalar traverse instead waits
+        on the TBD mark).  A writer who takes the lock AFTER the gate
+        commits at/above our snapshot and is skipped by the strict
+        `ts < r_clock` acceptance anyway, and an accepted row is a
+        seqlock-stable snapshot of the address's newest committed
+        versions, so acceptance equals the scalar traverse's result.
+        Unresolved elements keep `ok=False` and take the scalar walk.
+        """
+        if bool(ok.all()):
+            return vals, ok
+        bad = np.nonzero(~ok)[0]
+        sub = addrs[bad]
+        idxs = eng.locks.index_bulk(sub)
+        # the lock gate: gathered BEFORE the mirror rows (GIL program
+        # order), unlocked AND unflagged required
+        _, _, meta = eng.locks.gather(idxs)
+        free = (meta & 3) == 0
+        mvals, mok = self.vlt.mirror.select(idxs, sub, d.r_clock)
+        mok &= free
+        hit = bad[mok]
+        if hit.size == 0:
+            return vals, ok
+        self.stats_version_gather_hits += int(hit.size)
+        if isinstance(vals, np.ndarray):
+            if not vals.flags.writeable:     # kernel-path gathers are
+                vals = vals.copy()           # read-only jax views
+            vals[hit] = mvals[mok]
+        else:
+            for i, v in zip(hit.tolist(), mvals[mok].tolist()):
+                vals[i] = v
+        ok[hit] = True
+        return vals, ok
 
     def read(self, eng, d, addr: int) -> Any:
         if d.versioned and d.local_mode in (M.MODE_Q, M.MODE_QTOU,
@@ -493,6 +554,9 @@ class MultiversePolicy(PolicyBase):
         out["mode_transitions"] = self.stats_mode_transitions
         out["unversioned_buckets"] = self.stats_unversioned_buckets
         out["ebr_freed"] = self.ebr.freed_count
+        # raw-engine stats only (the normalized substrate schema drops
+        # it): words a versioned bulk read resolved via PackedVLT.select
+        out["version_gather_hits"] = self.stats_version_gather_hits
 
     def stop(self, eng) -> None:
         self._stop.set()

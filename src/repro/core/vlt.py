@@ -1,4 +1,4 @@
-"""Version List Table (paper SS3.1, Fig. 2).
+"""Version List Table (paper SS3.1, Fig. 2) + its packed bulk mirror.
 
 Each bucket is a linked list of VLT nodes; a node holds (1) the head of a
 version list, (2) the address it tracks, (3) the next bucket node.  Version
@@ -7,13 +7,35 @@ first.  The address's lock (same index) protects all VLT mutations.
 
 DELETED_TS marks versions rolled back by an aborted writer so concurrent
 traversals are never permanently blocked on a TBD mark (paper SS4.1).
+
+The bucket lists are what writers MUTATE; what bulk readers need is a
+gather-friendly view of what they would FIND.  ``PackedVLT`` is that
+view: an int64 mirror, indexed like the lock table, of each bucket's
+newest ``depth`` COMMITTED ``(timestamp, data)`` pairs, maintained under
+the same address lock that protects the list mutations and bracketed by
+a per-row seqlock for lock-free readers.  A versioned bulk read
+(``engine/bulkread.py`` Mode-U/Q hybrid path, paper SS4.2) resolves its
+recently-written minority through ONE ``PackedVLT.select`` gather —
+numpy twin ``np_version_select`` on CPU, the
+``kernels/version_select.py`` Pallas kernel on TPU — instead of walking
+version lists node by node in Python.  Rows the mirror cannot represent
+(hash-colliding addresses sharing a bucket, non-integer payloads,
+versions deeper than ``depth``) simply fail ``select`` and fall back to
+the exact scalar traversal, so the mirror is an optimization of the
+common case, never a semantic change.
 """
 from __future__ import annotations
 
-import threading
-from typing import List, Optional
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 DELETED_TS = -2
+
+#: empty mirror slot: never strictly below any snapshot clock, so the
+#: selection predicate rejects it with no special-casing (rebased to the
+#: int32-saturated positive sentinel on the kernel path)
+EMPTY_TS = 1 << 62
 
 
 class VListNode:
@@ -45,10 +67,138 @@ class VLTNode:
         self.freed = False
 
 
+def np_version_select(ts: np.ndarray, data: np.ndarray,
+                      r_clock: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Newest committed version strictly below ``r_clock``, per row.
+
+    ``ts``/``data`` are [N, depth] newest-first mirror rows; returns
+    ``(values [N], ok [N] bool)`` with ``values`` meaningful only where
+    ``ok``.  Strict ``<`` mirrors the scalar traverse's acceptance (the
+    deferred clock shares timestamps across commits; DESIGN.md SS6).
+    The same contract is implemented by ``kernels/version_select.py`` —
+    the kernel test pins the two element-for-element.
+    """
+    valid = ts < r_clock
+    ok = valid.any(axis=1)
+    first = np.argmax(valid, axis=1)
+    vals = data[np.arange(ts.shape[0]), first]
+    return vals, ok
+
+
+def _packable(data) -> bool:
+    """Only plain int64-range integers ride in the packed mirror."""
+    return type(data) in (int, np.int64, np.int32) and \
+        -(1 << 62) < int(data) < (1 << 62)
+
+
+class PackedVLT:
+    """Gather-friendly mirror of each bucket's newest committed versions.
+
+    Four arrays indexed by lock-table index: ``seq`` (per-row seqlock),
+    ``addr`` (the single address the row tracks, or a sentinel), and the
+    newest-first ``ts``/``data`` version slots.  WRITERS mutate a row
+    only while holding the row's address lock, bumping ``seq`` odd
+    before and even after, so the scalar path's lock discipline also
+    serializes mirror updates.  READERS hold nothing: ``select`` brackets
+    its gathers with two ``seq`` gathers and accepts only rows that were
+    stable and even across the window — a torn row just falls back to
+    the scalar version-list walk.
+
+    TBD (uncommitted) versions are never mirrored, so callers MUST gate
+    acceptance on the address lock being free, gathered BEFORE the row
+    (``MultiversePolicy._bulk_versioned_gather``): a commit whose clock
+    was loaded before the reader began — and which can therefore still
+    publish BELOW the reader's snapshot — holds its address locks for
+    its entire publish window, and serving the mirror mid-window could
+    mix pre- and post-commit values across a multi-address commit.
+    With the gate, a writer locking after the gather commits at/above
+    the snapshot and is skipped by strict ``ts < r_clock`` regardless —
+    the same versions the scalar traverse waits on and then skips.
+    """
+
+    NO_ADDR = -1       # row empty (bucket has no versioned address)
+    UNPACKABLE = -2    # colliding addresses or non-int payload: always
+    #                    fails the select match -> scalar fallback
+
+    def __init__(self, size: int, depth: int = 4):
+        self.size = size
+        self.depth = depth
+        self._seq = np.zeros(size, np.int64)
+        self._addr = np.full(size, self.NO_ADDR, np.int64)
+        self._ts = np.full((size, depth), EMPTY_TS, np.int64)
+        self._data = np.zeros((size, depth), np.int64)
+
+    # -- writer side (caller holds the address lock for ``bucket``) ------
+    def seed(self, bucket: int, addr: int, head: VListNode) -> None:
+        """A version list was inserted for ``addr`` in ``bucket``."""
+        self._seq[bucket] += 1
+        if self._addr[bucket] != self.NO_ADDR:
+            # second address hashing into this bucket: one row cannot
+            # serve two version lists — poison until unversioned
+            self._addr[bucket] = self.UNPACKABLE
+        elif head is None or head.tbd or head.timestamp == DELETED_TS \
+                or not _packable(head.data):
+            self._addr[bucket] = self.UNPACKABLE
+        else:
+            self._addr[bucket] = addr
+            self._ts[bucket, 0] = head.timestamp
+            self._ts[bucket, 1:] = EMPTY_TS
+            self._data[bucket, 0] = int(head.data)
+        self._seq[bucket] += 1
+
+    def publish(self, bucket: int, addr: int, ts: int, data) -> None:
+        """A commit published a NEW newest version for ``addr``."""
+        if self._addr[bucket] != addr:
+            return                     # empty/poisoned/other addr: no-op
+        self._seq[bucket] += 1
+        if _packable(data):
+            self._ts[bucket, 1:] = self._ts[bucket, :-1]
+            self._data[bucket, 1:] = self._data[bucket, :-1]
+            self._ts[bucket, 0] = ts
+            self._data[bucket, 0] = int(data)
+        else:
+            # the newest version is unrepresentable; serving older slots
+            # would time-travel, so the whole row must fall back
+            self._addr[bucket] = self.UNPACKABLE
+        self._seq[bucket] += 1
+
+    def clear(self, bucket: int) -> None:
+        """The bucket was unversioned (paper SS4.4): forget everything."""
+        self._seq[bucket] += 1
+        self._addr[bucket] = self.NO_ADDR
+        self._ts[bucket] = EMPTY_TS
+        self._seq[bucket] += 1
+
+    # -- reader side (lock-free) -----------------------------------------
+    def select(self, idxs: np.ndarray, addrs: np.ndarray,
+               r_clock: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched version resolution: ``(values int64[N], ok bool[N])``.
+
+        ``values[i]`` is the newest committed version of ``addrs[i]``
+        strictly below ``r_clock`` wherever ``ok[i]``; everywhere else
+        the caller re-reads through the scalar traverse.  One seqlock-
+        bracketed gather of the mirror rows plus one vectorized select
+        (numpy twin on CPU, the Pallas kernel when KERNEL_INTERPRET=0).
+        """
+        s1 = self._seq[idxs]
+        rows_addr = self._addr[idxs]
+        ts = self._ts[idxs]
+        data = self._data[idxs]
+        s2 = self._seq[idxs]
+        stable = (s1 == s2) & ((s1 & 1) == 0)
+        from repro.kernels import ops
+        if not ops.INTERPRET:
+            vals, found = ops.version_select(ts, data, r_clock)
+        else:
+            vals, found = np_version_select(ts, data, r_clock)
+        return vals, stable & (rows_addr == addrs) & found
+
+
 class VLT:
-    def __init__(self, buckets_bits: int):
+    def __init__(self, buckets_bits: int, mirror_depth: int = 4):
         self.size = 1 << buckets_bits
         self._buckets: List[Optional[VLTNode]] = [None] * self.size
+        self.mirror = PackedVLT(self.size, depth=mirror_depth)
 
     def get(self, bucket: int, addr: int) -> Optional[VersionList]:
         """tryGetVList: walk the bucket list (caller saw a bloom hit)."""
@@ -63,11 +213,13 @@ class VLT:
     def insert(self, bucket: int, addr: int, vlist: VersionList) -> None:
         """Prepend (caller holds the address lock)."""
         self._buckets[bucket] = VLTNode(vlist, addr, self._buckets[bucket])
+        self.mirror.seed(bucket, addr, vlist.head)
 
     def take_bucket(self, bucket: int) -> Optional[VLTNode]:
         """Detach the whole bucket (unversioning; caller holds the lock)."""
         head = self._buckets[bucket]
         self._buckets[bucket] = None
+        self.mirror.clear(bucket)
         return head
 
     def bucket_newest_ts(self, bucket: int) -> Optional[int]:

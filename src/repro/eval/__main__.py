@@ -15,7 +15,8 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.eval.driver import longread_headline, run_eval
+from repro.eval.driver import longread_headline, run_eval, \
+    structrq_headline
 from repro.eval.workloads import WORKLOADS
 
 
@@ -26,9 +27,9 @@ def _fmt_row(row: dict) -> str:
                  f"failed={row['failed_scans']:4d} "
                  f"updates/s={row['updates_per_sec']:8.0f}")
     elif "rqs_per_sec" in row:
-        extra = (f"ops/s={row['ops_per_sec']:8.0f} "
-                 f"rqs/s={row['rqs_per_sec']:6.1f} "
-                 f"failed={row['failed_ops']:4d}")
+        extra = (f"rqs/s={row['rqs_per_sec']:7.1f} "
+                 f"failed={row['failed_ops']:4d} "
+                 f"rq-vs-scan={row.get('rq_vs_scan', 0.0):5.2f}x")
     elif "ops_per_sec" in row:
         extra = (f"ops/s={row['ops_per_sec']:8.0f} "
                  f"failed={row['failed_ops']:4d}")
@@ -78,6 +79,15 @@ def main(argv=None) -> int:
             print(f"\nheadline @ scan{h['scan_size']}: multiverse="
                   f"{h['multiverse_scans_per_sec']:.1f} scans/s {verdict} "
                   f"vs [{base}]")
+    if args.workload == "structrq":
+        h = structrq_headline(rows)
+        for struct, d in sorted(h.items()):
+            verdict = ("within 5x of the array scan" if d["within_5x"]
+                       else "NOT within 5x of the array scan")
+            print(f"\nheadline @ {struct}: multiverse rq="
+                  f"{d['rq_solo_per_sec']:.1f}/s vs flat scan of "
+                  f"{d['rq_words']} words={d['arrayscan_per_sec']:.1f}/s "
+                  f"-> {d['rq_vs_scan']:.2f}x ({verdict})")
     if path:
         print(f"results -> {path}")
     if violations:

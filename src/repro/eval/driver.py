@@ -31,7 +31,8 @@ from repro.eval.workloads import (
     TrialSpec,
 )
 
-__all__ = ["run_eval", "time_trial", "longread_headline"]
+__all__ = ["run_eval", "time_trial", "longread_headline",
+           "structrq_headline"]
 
 
 def time_trial(workers: Sequence[Callable], spec: TrialSpec,
@@ -128,3 +129,29 @@ def longread_headline(rows: List[Dict]) -> Dict:
         "multiverse_wins": bool(baselines) and all(
             mv > v for v in baselines.values()),
     }
+
+
+def structrq_headline(rows: List[Dict]) -> Dict:
+    """Struct long reads vs equivalent-size array scans, per structure.
+
+    Each structrq row carries a quiescent single-thread reference pair
+    (`rq_solo_per_sec` vs `arrayscan_per_sec` over the SAME word count
+    on the same backend+heap); the headline extracts Multiverse's ratio
+    per structure and whether it lands within 5x of the flat scan —
+    pointer-chasing long reads used to be interpreter-bound, the
+    frontier-at-a-time traversal is what closes the gap.  Returns
+    ``{structure: {...}}`` (the CLI prints it; BENCHMARKS.md documents
+    the expected shape).
+    """
+    out: Dict[str, Dict] = {}
+    for r in rows:
+        if r.get("backend") == "multiverse" and "rq_vs_scan" in r:
+            ratio = r["rq_vs_scan"]
+            out[r["structure"]] = {
+                "rq_words": r["rq_words"],
+                "rq_solo_per_sec": r["rq_solo_per_sec"],
+                "arrayscan_per_sec": r["arrayscan_per_sec"],
+                "rq_vs_scan": ratio,
+                "within_5x": ratio >= 0.2,
+            }
+    return out

@@ -15,9 +15,17 @@ Three families, all runnable on any registered backend through one driver
   * ``rwmix``     — array read/write mixes: every thread interleaves
     point transfers with bulk reads at a given write fraction (the
     low-contention regime where unversioned TMs are supposed to win).
-  * ``structrq``  — data-structure ops over ``repro.structs`` (hashmap /
-    extbst / abtree) with range queries (size queries on the hashmap) as
-    the long-running reads and dedicated updaters, the Fig. 6/7 shape.
+  * ``structrq``  — data-structure long reads over ``repro.structs``
+    (hashmap / extbst / abtree): reader threads run whole-structure
+    range queries (size queries on the hashmap) while a dedicated
+    updater commits size-preserving key moves, the Fig. 6/7 shape.
+    Every completed query checks the size invariant (``violations``),
+    and each trial ends with a quiescent reference measurement — the
+    same backend scanning an EQUAL number of flat words through
+    ``read_bulk`` — so the headline ratio (``rq_vs_scan``) states how
+    close the frontier-at-a-time struct traversal comes to an array
+    scan of the same volume (it was interpreter-bound before the
+    traversal layer).
 
 Workload objects expose ``variants(quick)`` -> [TrialSpec] and
 ``run_trial(backend, spec, seed)`` -> row dict; the driver owns threads,
@@ -264,52 +272,62 @@ class StructRQWorkload:
             workload=self.name, variant=s, n_readers=2, n_updaters=1,
             duration_s=dur, warmup_s=warm,
             params=dict(structure=s, prefill=prefill,
-                        key_range=prefill * 2, rq_size=prefill,
-                        rq_pct=0.2, max_retries=500),
+                        key_range=prefill * 4, chunk=256,
+                        max_retries=150, ref_window_s=0.25),
         ) for s in structs]
 
     def run_trial(self, backend: str, spec: TrialSpec, seed: int) -> Dict:
+        import time
+
         from repro.eval.driver import time_trial
         p = spec.params
-        tm = make_tm(backend, spec.total_threads, params=_tm_params())
         kind = p["structure"]
+        prefill = p["prefill"]
+        # structs store only ints here, so word backends run on the
+        # int64 array heap — same substrate the flat-scan reference uses
+        tm = _make(backend, spec.total_threads)
         cls = STRUCTS[kind]
         s = cls(tm, n_buckets=1 << 10) if kind == "hashmap" else cls(tm)
         rnd = random.Random(42 + seed)
         filled = 0
-        while filled < p["prefill"]:
+        while filled < prefill:
             k = rnd.randrange(p["key_range"])
             if run(tm, lambda tx, k=k: s.insert(tx, k, k), tid=0):
                 filled += 1
 
+        # the long read: whole-structure range/size query.  The size is
+        # invariant under the updater's key moves, so a completed query
+        # that does not see exactly `prefill` keys is a torn snapshot.
+        if kind == "hashmap":
+            def rq(tx):
+                return s.size_query(tx)
+        else:
+            def rq(tx):
+                return len(s.range_query(tx, 0, prefill + 1))
+
         def reader(tid, stop, c):
-            r = random.Random(seed * 10007 + 500 + tid)
             while not stop.is_set():
-                k = r.randrange(p["key_range"])
                 try:
-                    if r.random() < p["rq_pct"]:
-                        if kind == "hashmap":
-                            run(tm, s.size_query, tid=tid,
-                                max_retries=p["max_retries"])
-                        else:
-                            run(tm, lambda tx: s.range_query(
-                                tx, k, p["rq_size"]), tid=tid,
-                                max_retries=p["max_retries"])
-                        c["rqs"] += 1
-                    else:
-                        run(tm, lambda tx: s.search(tx, k), tid=tid,
-                            max_retries=p["max_retries"])
-                    c["ops"] += 1
+                    got = run(tm, rq, tid=tid,
+                              max_retries=p["max_retries"])
+                    c["rqs"] += 1
+                    if got != prefill:
+                        c["violations"] += 1
                 except MaxRetriesExceeded:
                     c["failed_ops"] += 1
 
         def updater(tid, stop, c):
             r = random.Random(seed * 10007 + 700 + tid)
+
+            def move(tx):
+                ka = r.randrange(p["key_range"])
+                kb = r.randrange(p["key_range"])
+                if s.delete(tx, ka):
+                    if not s.insert(tx, kb, kb):
+                        s.insert(tx, ka, ka)   # kb existed: put ka back
             while not stop.is_set():
-                k = r.randrange(p["key_range"])
                 try:
-                    run(tm, lambda tx: s.upsert_touch(tx, k, k), tid=tid,
-                        max_retries=p["max_retries"])
+                    run(tm, move, tid=tid, max_retries=p["max_retries"])
                     c["updates"] += 1
                 except MaxRetriesExceeded:
                     c["failed_updates"] += 1
@@ -320,16 +338,58 @@ class StructRQWorkload:
                                                  stop, c)
                     for t in range(spec.n_updaters)]
         counters, dt = time_trial(workers, spec)
+
+        # quiescent reference: the SAME backend + heap, single thread —
+        # the struct query vs a flat read_bulk scan over exactly as many
+        # words, chunked like the longread scanner.  The ratio is the
+        # headline: how close a pointer-chasing long read comes to an
+        # equivalent-size array scan now that it traverses in batches.
+        words = {}
+
+        def probe(tx):
+            got = rq(tx)
+            words["n"] = tx.read_count
+            return got
+
+        violations = counters["violations"]
+        if run(tm, probe, tid=0) != prefill:
+            violations += 1
+        rq_words = int(words["n"])
+        chunk = p["chunk"]
+        flat = tm.alloc(rq_words, 1)
+
+        def scan(tx):
+            tot = 0
+            for off in range(0, rq_words, chunk):
+                hi = min(off + chunk, rq_words)
+                tot += _batch_sum(tx.read_bulk(
+                    range(flat + off, flat + hi)))
+            return tot
+
+        def solo_rate(fn):
+            run(tm, fn, tid=0)                 # warm (mode/clock settle)
+            n, t0 = 0, time.perf_counter()
+            while time.perf_counter() - t0 < p["ref_window_s"]:
+                run(tm, fn, tid=0)
+                n += 1
+            return n / (time.perf_counter() - t0)
+
+        rq_solo = solo_rate(rq)
+        scan_solo = solo_rate(scan)
         stats = tm.stats()
         tm.stop()
         return {
             "workload": self.name, "backend": backend, "tm": backend,
             "variant": spec.variant, "seed": seed, "structure": kind,
-            "ops_per_sec": counters["ops"] / dt,
             "rqs_per_sec": counters["rqs"] / dt,
             "failed_ops": counters["failed_ops"],
+            "violations": violations,
             "updates_per_sec": counters["updates"] / dt,
             "failed_updates": counters["failed_updates"],
+            "rq_words": rq_words,
+            "rq_solo_per_sec": rq_solo,
+            "arrayscan_per_sec": scan_solo,
+            "rq_vs_scan": rq_solo / max(scan_solo, 1e-12),
             "mode_transitions": stats.get("mode_transitions", 0),
             "stm_stats": stats,
         }

@@ -18,6 +18,7 @@ from repro.kernels import gather_read as _gr
 from repro.kernels import snapshot_select as _ss
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import validate as _val
+from repro.kernels import version_select as _vs
 
 INTERPRET = os.environ.get("KERNEL_INTERPRET", "1") != "0"
 
@@ -130,6 +131,49 @@ def validate_readset(ver, own, meta, seen, r_clock, tid, mode,
         prep(meta, p["meta"]), prep(seen_rel, p["seen"]),
         0, int(tid), int(mode), tile=t, interpret=INTERPRET)
     return bool(jnp.all(mask == 1))
+
+
+def version_select(ts, data, r_clock, tile: int = 256):
+    """Batched snapshot version select over packed VLT mirror rows.
+
+    ``ts``/``data``: [N, D] newest-first (timestamps int, data numeric);
+    returns ``(values [N] ndarray, ok [N] bool)`` — per row, the newest
+    ``data`` whose timestamp is strictly below ``r_clock`` and whether
+    any slot qualified.  Adapts ragged batch sizes to the tiled kernel
+    by padding with always-invalid rows and rebases timestamps to
+    ``r_clock`` before the int32 cast (absolute clocks exceed int32 in
+    long runs; only the sign of ``ts - r_clock`` matters — same
+    treatment as ``validate_readset``).  This is the Mode-U bulk
+    versioned-read hot path on TPU (KERNEL_INTERPRET=0); on CPU the
+    engine uses the numpy twin (``core.vlt.np_version_select``)
+    directly.
+    """
+    import numpy as np
+
+    n = int(ts.shape[0])
+    if n == 0:
+        return (np.zeros((0,), np.int64), np.zeros((0,), bool))
+    lo, hi = -(1 << 31) + 1, (1 << 31) - 1
+    data = np.asarray(data)
+    if data.dtype == np.int64 and data.size and \
+            (int(data.max()) > hi or int(data.min()) < lo):
+        # without jax x64 the kernel would silently truncate int64
+        # payloads to int32 — wrong values with ok=True; such batches
+        # take the numpy twin (exact at any width) instead
+        from repro.core.vlt import np_version_select
+        return np_version_select(np.asarray(ts, np.int64), data,
+                                 int(r_clock))
+    rel = np.clip(np.asarray(ts, np.int64) - int(r_clock), lo, hi)
+    t = min(tile, 1 << (n - 1).bit_length())
+    pad = (-n) % t
+    rel = jnp.asarray(rel, jnp.int32)
+    d = jnp.asarray(data)
+    if pad:
+        rel = jnp.pad(rel, ((0, pad), (0, 0)), constant_values=_vs.PAD_TS)
+        d = jnp.pad(d, ((0, pad), (0, 0)))
+    vals, ok = _vs.version_select_flat(rel, d, 0, tile=t,
+                                       interpret=INTERPRET)
+    return np.asarray(vals[:n]), np.asarray(ok[:n]) != 0
 
 
 def fused_adamw(p, g, m, v, ring, slot, *, lr, scale, count, b1, b2, eps,

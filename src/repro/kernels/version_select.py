@@ -1,0 +1,73 @@
+"""Snapshot version select — the word-level versioned read as a kernel.
+
+Multiverse resolves a versioned read by walking an address's version
+list for the newest committed timestamp strictly below the reader's
+snapshot clock (paper Alg. 2 traverse).  The packed VLT mirror
+(``core/vlt.py``) keeps each lock bucket's newest ``D`` committed
+``(timestamp, data)`` pairs in two int arrays, newest-first, so the walk
+becomes an elementwise selection this kernel evaluates for an ENTIRE
+batch of recently-written addresses in one launch:
+
+    valid[n, j] = ts[n, j] < r_clock            (strict: the deferred
+                                                 clock shares timestamps
+                                                 across commits)
+    value[n]    = data[n, first j with valid]   (rows are newest-first)
+    ok[n]       = any(valid[n, :])
+
+Timestamps arrive REBASED to the reader's clock (the ``ops`` wrapper
+subtracts ``r_clock`` in int64 and clips to int32 — same treatment as
+``kernels/validate.py``), so the predicate inside is ``ts < 0`` with the
+clock scalar pinned to 0; empty slots carry the positive-saturated
+sentinel and fail it naturally.  ``interpret=True`` is the CPU fallback
+path; for CPU *production* reads the engine uses the numpy twin
+(``core.vlt.np_version_select``) per the validate.py / gather_read.py
+pattern — the kernel test pins the two element-for-element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: rebased-timestamp padding for ragged batches: positive-saturated, so
+#: the ``ts < clock`` predicate rejects it for every clock value
+PAD_TS = (1 << 31) - 1
+
+
+def _select_kernel(params_ref, ts_ref, data_ref, val_ref, ok_ref):
+    clock = params_ref[0]
+    valid = ts_ref[...] < clock            # [tile, D], newest-first rows
+    first = jnp.argmax(valid, axis=1)      # first True == newest valid
+    val = jnp.take_along_axis(data_ref[...], first[:, None], axis=1)
+    val_ref[...] = val[:, 0]
+    ok_ref[...] = jnp.any(valid, axis=1).astype(jnp.int32)
+
+
+def version_select_flat(ts, data, clock, *, tile: int = 256,
+                        interpret: bool = True):
+    """ts: [N, D] int32 (rebased); data: [N, D]; clock: int32 scalar.
+
+    Returns ``(values [N] data.dtype, ok [N] int32)``: per row, the
+    newest ``data`` whose ``ts`` is strictly below ``clock``, and
+    whether any slot qualified (``values`` is only meaningful where
+    ``ok``).  Rows are tiled over the grid; ``D`` rides whole.
+    """
+    n, depth = ts.shape
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    row2d = pl.BlockSpec((tile, depth), lambda i, params_ref: (i, 0))
+    row1d = pl.BlockSpec((tile,), lambda i, params_ref: (i,))
+    params = jnp.asarray([clock], jnp.int32)
+    return pl.pallas_call(
+        _select_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[row2d, row2d],
+            out_specs=[row1d, row1d],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((n,), data.dtype),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(params, ts, data)

@@ -7,9 +7,13 @@ means any `TMPolicy` over `repro.core.engine`, including third-party
 backends registered via `register_backend`.  Long read-only operations
 (range queries, size queries) can poll `tx.validate_bulk()` to fail fast
 on staleness; the engine answers it with one vectorized pass over the
-whole read set.  Contiguous regions (hashmap bucket heads, abtree nodes)
-read through `tx.read_bulk`, so the long-running reads the paper studies
-move in batches instead of word-at-a-time Python.
+whole read set.  The long reads themselves are frontier-at-a-time
+(`repro.core.engine.traverse`): contiguous regions move through
+`tx.read_bulk`, hashmap overflow chains advance in lockstep
+(`chase_bulk`), and the tree range queries are ordered frontier walks
+(`traverse_bulk`, one batch per level) — so the long-running reads the
+paper studies vectorize end-to-end instead of chasing pointers
+word-at-a-time through Python.
 """
 from repro.structs.abtree import ABTree  # noqa: F401
 from repro.structs.extbst import ExternalBST  # noqa: F401

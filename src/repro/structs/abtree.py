@@ -15,6 +15,8 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, List, Optional, Tuple
 
+from repro.core.engine.traverse import traverse_bulk
+
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.api.substrate import Substrate, Txn
 
@@ -183,35 +185,35 @@ class ABTree:
 
     def range_query(self, tx: "Txn", lo: int, count: int) -> List[Tuple[int,
                                                                  object]]:
-        """Collect up to `count` pairs with key >= lo (in key order)."""
-        out: List[Tuple[int, object]] = []
+        """Collect up to `count` pairs with key >= lo (in key order).
+
+        Frontier-at-a-time (``engine.traverse.traverse_bulk``): per
+        round, ONE ``read_bulk`` batch gathers the contiguous words of
+        EVERY pending node (header + keys + values/children — unused
+        slots ride along, a slightly wider conflict surface paid for the
+        vectorized long read), and nodes expand in place into in-order
+        children / leaf emissions, so a query costs one batch per tree
+        LEVEL instead of one per node.
+        """
         root = tx.read(self.root_ptr)
         if root == NULL:
-            return out
+            return []
 
-        def dfs(node: int) -> bool:
-            # nodes are contiguous, so each visit is ONE read_bulk batch
-            # (header + keys + values/children) instead of ~2b word reads;
-            # unused slots ride along — a slightly wider conflict surface
-            # paid once per node for a vectorized long read
-            words = tx.read_bulk(range(node, node + self.node_words))
+        def expand(state, words, emit, push):
             n = int(words[1])
-            if int(words[0]):
+            if int(words[0]):                 # leaf
                 for i in range(n):
                     k = int(words[self._keys_off(i)])
                     if k >= lo:
-                        out.append((k, words[self._vals_off(i)]))
-                        if len(out) >= count:
-                            return True
-                return False
-            for ci in range(n + 1):
-                # child ci holds keys < keys[ci]: skip if all below lo
-                if ci < n and int(words[self._keys_off(ci)]) <= lo:
-                    continue
-                child = int(words[self._child_off(ci)])
-                if child != NULL and dfs(child):
-                    return True
-            return False
+                        emit((k, words[self._vals_off(i)]))
+            else:
+                for ci in range(n + 1):
+                    # child ci holds keys < keys[ci]: skip if all < lo
+                    if ci < n and int(words[self._keys_off(ci)]) <= lo:
+                        continue
+                    child = int(words[self._child_off(ci)])
+                    if child != NULL:
+                        push(child, self.node_words)
 
-        dfs(root)
-        return out
+        return traverse_bulk(tx, [(root, self.node_words)], expand,
+                             limit=count)

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, List, Optional, Tuple
 
+from repro.core.engine.traverse import traverse_bulk
+
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.api.substrate import Substrate, Txn
 
@@ -37,7 +39,9 @@ class ExternalBST:
         tx.write(n + 1, key)
         tx.write(n + 2, left)
         tx.write(n + 3, right)
-        tx.write(n + 4, None)
+        # routing nodes carry no value; NULL (not None) keeps the node
+        # representable on numeric heaps (ArrayHeap / MVStore blocks)
+        tx.write(n + 4, NULL)
         return n
 
     def search(self, tx: "Txn", key: int) -> Optional[object]:
@@ -103,24 +107,29 @@ class ExternalBST:
 
     def range_query(self, tx: "Txn", lo: int, count: int) -> List[Tuple[int,
                                                                  object]]:
-        out: List[Tuple[int, object]] = []
+        """Collect up to `count` pairs with key >= lo (in key order).
+
+        Frontier-at-a-time: the recursive DFS is an explicit ordered
+        worklist (``engine.traverse.traverse_bulk``) — per round, ONE
+        ``read_bulk`` batch gathers every pending node's 5 words, and
+        each node expands in place into its in-order children / leaf
+        emission.  Emission order and the ``count`` cutoff match the
+        scalar DFS exactly, and tree depth costs worklist length, not
+        Python stack — a degenerate (sorted-insert) tree deeper than
+        ``sys.getrecursionlimit()`` traverses fine.
+        """
         root = tx.read(self.root_ptr)
         if root == NULL:
-            return out
+            return []
 
-        def dfs(node: int) -> bool:
-            if tx.read(node):
-                k = tx.read(node + 1)
+        def expand(state, w, emit, push):
+            if w[0]:                          # leaf
+                k = w[1]
                 if k >= lo:
-                    out.append((k, tx.read(node + 4)))
-                    if len(out) >= count:
-                        return True
-                return False
-            k = tx.read(node + 1)
-            if lo < k:
-                if dfs(tx.read(node + 2)):
-                    return True
-            return dfs(tx.read(node + 3))
+                    emit((k, w[4]))
+            else:                             # internal: keys < w[1] left
+                if lo < w[1]:
+                    push(w[2], self.NODE)
+                push(w[3], self.NODE)
 
-        dfs(root)
-        return out
+        return traverse_bulk(tx, [(root, self.NODE)], expand, limit=count)

@@ -12,6 +12,10 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, Optional
 
+import numpy as np
+
+from repro.core.engine.traverse import chase_bulk
+
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.api.substrate import Substrate, Txn
 
@@ -73,17 +77,24 @@ class HashMap:
     def size_query(self, tx: "Txn") -> int:
         """Atomic size: the long-running read-only transaction (SQ).
 
-        The bucket-head array is contiguous, so the whole sweep starts as
-        ONE ``read_bulk`` batch — the dominant cost at realistic load
-        factors, since most buckets are empty and never leave the batch —
-        and only the non-empty chains are walked word-at-a-time (they are
-        pointer-chases; a future PR could batch per chain hop).
+        Fully frontier-at-a-time: the contiguous bucket-head array is ONE
+        ``read_bulk`` batch, then every overflow chain advances in
+        lockstep — round ``r`` gathers the ``r``-th next-pointer of ALL
+        live chains in one batch (``engine.traverse.chase_bulk``), so the
+        whole sweep costs ``O(max chain length)`` batched reads instead
+        of ``O(keys)`` scalar hops.  Advancement is pure numpy; chains
+        that end simply drop out of the cursor set.
         """
+        heads = np.asarray(
+            tx.read_bulk(range(self.table, self.table + self.n_buckets)),
+            dtype=np.int64)
         total = 0
-        heads = tx.read_bulk(range(self.table, self.table + self.n_buckets))
-        for node in heads:
-            node = int(node)
-            while node != NULL:
-                total += 1
-                node = int(tx.read(node + 2))
+
+        def advance(cur, vals):
+            nonlocal total
+            total += cur.size              # one live node per cursor
+            nxt = np.asarray(vals, dtype=np.int64)
+            return nxt[nxt != NULL] + 2    # follow the survivors' next ptr
+
+        chase_bulk(tx, heads[heads != NULL] + 2, advance)
         return total

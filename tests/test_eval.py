@@ -64,4 +64,8 @@ def test_structrq_quick_single_backend(tmp_path):
     rows, _ = run_eval("structrq", backends=["tl2"], quick=True,
                        out_dir=str(tmp_path))
     assert rows and rows[0]["structure"] == "hashmap"
-    assert rows[0]["ops_per_sec"] >= 0
+    assert rows[0]["rqs_per_sec"] >= 0
+    assert rows[0]["violations"] == 0
+    # the quiescent reference pair: struct query vs equal-word flat scan
+    assert rows[0]["rq_words"] > 0
+    assert rows[0]["rq_vs_scan"] > 0
