@@ -7,9 +7,12 @@ A validation microbenchmark then times the engine's commit-time read-set
 revalidation both ways — the word-at-a-time scalar loop vs the bulk
 vectorized path (`engine.validation` / `kernels/validate.py`) — across
 read-set sizes; the read_bulk microbench does the same for flat long
-reads, and the structrq microbench for pointer-chasing ones (the
-frontier-at-a-time `HashMap.size_query` vs the scalar chain walk,
-asserted >=3x at 4k keys).
+reads, the commitbulk microbench for the COMMIT pipeline (one
+`try_lock_bulk` CAS sweep + one heap scatter + one `unlock_bulk` vs
+the word-at-a-time loop, asserted >=3x at 1k-word write sets), and the
+structrq microbench for pointer-chasing ones (the frontier-at-a-time
+`HashMap.size_query` vs the scalar chain walk, asserted >=3x at 4k
+keys).
 
     PYTHONPATH=src python examples/bakeoff.py [--seconds 1.0] [--quick]
 """
@@ -156,6 +159,65 @@ def readbulk_microbench(sizes=(1024, 4096, 16384), repeats=5,
     return rows
 
 
+def commitbulk_microbench(sizes=(256, 1024, 4096), repeats=5,
+                          backend="tl2"):
+    """Commit pipeline: scalar loop vs batched acquire/write-back/release.
+
+    A quiescent TL2 on the int64 array heap; each measurement buffers an
+    n-word write set through real ``tx.write`` calls, then times the
+    three commit-pipeline steps on the SAME descriptor both ways: the
+    word-at-a-time scalar loop (``bulk_min`` forced past the write set)
+    vs the batched pipeline (one ``try_lock_bulk`` CAS sweep + one heap
+    scatter + one ``unlock_bulk``).  Asserts both leave identical heap
+    state; returns timing rows.
+    """
+    import numpy as np
+
+    from repro.core.engine import commit as Cm
+
+    tm = make_tm(backend, n_threads=1,
+                 params=MultiverseParams(lock_table_bits=16),
+                 array_heap=True)
+    base = tm.alloc(max(sizes), 0)
+    raw = tm.raw
+    rows = []
+    inf = 1 << 60
+    for n in sizes:
+        def pipeline(bulk_min):
+            tx = raw.begin(0)
+            for i in range(n):
+                tx.write(base + i, i + 1)
+            d = tx._ctx
+            t0 = time.perf_counter()
+            locked = Cm.acquire_write_locks(raw, d, bulk_min=bulk_min)
+            wv = raw.clock.increment()
+            Cm.write_back(raw, d, bulk_min=bulk_min)
+            Cm.release_locks(raw, locked, wv, bulk_min=bulk_min)
+            dt = time.perf_counter() - t0
+            snap = np.asarray(raw.heap.gather(
+                np.arange(base, base + n, dtype=np.int64)))
+            d.reset()
+            d.active = False
+            return dt, snap
+
+        def timeit(bulk_min):
+            best, snap = float("inf"), None
+            for _ in range(repeats):
+                dt, snap = pipeline(bulk_min)
+                best = min(best, dt)
+            return best, snap
+
+        t_scalar, snap_s = timeit(inf)
+        t_bulk, snap_b = timeit(0)
+        assert (snap_s == snap_b).all(), \
+            "scalar and bulk commit pipelines disagree"
+        rows.append({"writes": n, "scalar_us": t_scalar * 1e6,
+                     "bulk_us": t_bulk * 1e6,
+                     "speedup": t_scalar / max(t_bulk, 1e-12)})
+    tm.stop()
+    return rows
+
+
 def structrq_microbench(n_keys=4096, n_buckets=1 << 10, repeats=3):
     """Struct long read: frontier-at-a-time walk vs the scalar traversal.
 
@@ -248,6 +310,20 @@ def main():
         if row["reads"] >= 4096 and beats_at_4k is None:
             beats_at_4k = row["speedup"] >= 4.0
     assert beats_at_4k, "read_bulk did not beat the scalar loop 4x at 4k"
+
+    print("\ncommit pipeline: scalar loop vs batched "
+          "acquire/write-back/release")
+    print(f"{'writes':>7s} {'scalar_us':>10s} {'bulk_us':>9s} "
+          f"{'speedup':>8s}")
+    sizes = (1024,) if args.quick else (256, 1024, 4096)
+    beats_at_1k = None
+    for row in commitbulk_microbench(sizes=sizes):
+        print(f"{row['writes']:7d} {row['scalar_us']:10.1f} "
+              f"{row['bulk_us']:9.1f} {row['speedup']:7.1f}x")
+        if row["writes"] >= 1024 and beats_at_1k is None:
+            beats_at_1k = row["speedup"] >= 3.0
+    assert beats_at_1k, \
+        "bulk commit did not beat the scalar pipeline 3x at 1k writes"
 
     print("\nstruct long read: scalar chain walk vs frontier-at-a-time")
     print(f"{'keys':>7s} {'scalar_us':>10s} {'frontier_us':>11s} "

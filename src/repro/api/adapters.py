@@ -87,6 +87,18 @@ class WordSubstrate(SubstrateBase):
     def write(self, ctx: Any, addr: int, value: Any) -> None:
         self.raw.tm_write(ctx, addr, value)
 
+    def write_bulk(self, ctx: Any, addrs, values) -> None:
+        """`Txn.write_bulk`: engine-routed batch (one lock-claim sweep +
+        undo gather + heap scatter for encounter-time policies, one
+        write-map update for buffered ones); legacy raw TMs without
+        `tm_write_bulk` fall back to the scalar loop."""
+        fn = getattr(self.raw, "tm_write_bulk", None)
+        if fn is not None:
+            fn(ctx, addrs, values)
+            return
+        for a, v in zip(addrs, values):
+            self.raw.tm_write(ctx, int(a), v)
+
     def txn_alloc(self, ctx: Any, n: int, init: Any = None) -> int:
         return self.raw.tx_alloc(ctx, n, init)
 

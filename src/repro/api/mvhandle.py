@@ -208,6 +208,17 @@ class MVStoreHandle(SubstrateBase):
         ctx.read_only = False
         ctx.write_buf[addr] = value
 
+    def write_bulk(self, ctx: _MVCtx, addrs, values) -> None:
+        """`Txn.write_bulk` at the store level: writes buffer until the
+        single `mv_commit`, so the batch is one dict update — the commit
+        itself already publishes the whole buffer through the shared
+        scatter (``engine/commit.scatter_row``)."""
+        if ctx.versioned:
+            self._no_version[ctx.tid] = True
+            self._abort_ctx(ctx)
+        ctx.read_only = False
+        ctx.write_buf.update(zip((int(a) for a in addrs), values))
+
     def txn_alloc(self, ctx: _MVCtx, n: int, init: Any = None) -> int:
         # applied immediately, NOT rolled back on abort: block shapes are
         # step-boundary state at this layer, and an orphaned tail of the
@@ -251,8 +262,13 @@ class MVStoreHandle(SubstrateBase):
                 heap = state.live[self._key]
                 idx = np.array(sorted(ctx.write_buf), dtype=np.int32)
                 vals = np.array([ctx.write_buf[int(i)] for i in idx])
-                new_heap = heap.at[idx].set(
-                    self._jnp.asarray(vals, heap.dtype))
+                # the shared commit-pipeline scatter: one jnp scatter on
+                # CPU, one ``kernels/scatter_write.py`` launch on TPU —
+                # the store-level write-back rides the same kernel as
+                # the word engine's bulk commit
+                from repro.core.engine.commit import scatter_row
+                new_heap = scatter_row(
+                    heap, idx, self._jnp.asarray(vals, heap.dtype))
                 state = self._mvstore.mv_commit(
                     state, {self._key: new_heap}, local_mode=mode,
                     cfg=self.cfg)

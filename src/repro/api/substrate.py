@@ -114,6 +114,26 @@ class Txn:
     def write(self, addr: int, value: Any) -> None:
         self._sub.write(self._ctx, addr, value)
 
+    def write_bulk(self, addrs, values) -> None:
+        """Batched transactional write: ``for a, v: self.write(a, v)``
+        semantics, one substrate call.
+
+        Buffered backends (TL2/NOrec/MVStore) fold the batch into the
+        write buffer in one update; encounter-time backends (DCTL,
+        TinySTM, Multiverse Mode Q) validate and claim every lock in ONE
+        all-or-nothing ``try_lock_bulk`` CAS sweep, record pre-images in
+        one undo gather, and publish in one heap scatter — the write
+        half of the batched commit pipeline (API.md "Batched commits").
+        Semantics are never weakened: batches the sweep cannot claim
+        take the policy's exact scalar path word by word.
+        """
+        fn = getattr(self._sub, "write_bulk", None)
+        if fn is not None:
+            fn(self._ctx, addrs, values)
+            return
+        for a, v in zip(addrs, values):
+            self._sub.write(self._ctx, int(a), v)
+
     def alloc(self, n: int, init: Any = None) -> int:
         """Transactional allocation.  Word-level backends free it again
         if this txn aborts; MVStoreHandle applies growth immediately

@@ -71,6 +71,10 @@ class TL2Policy(PolicyBase):
         d.read_only = False
         d.write_map[addr] = value
 
+    def write_bulk(self, eng, d, addrs, values) -> None:
+        d.read_only = False
+        d.write_map.update(zip((int(a) for a in addrs), values))
+
     def commit_update(self, eng, d) -> None:
         locked = C.acquire_write_locks(eng, d)    # aborts on conflict
         wv = eng.clock.increment()                # GV4-ish: one fetch-add
@@ -135,7 +139,7 @@ class DCTLPolicy(PolicyBase):
             if st.locked and st.tid == d.tid:
                 return True
             if not st.locked and eng.locks.try_lock(idx, st, d.tid):
-                d.write_map[idx] = True          # remember to release
+                d.locked_idxs.add(idx)           # remember to release
                 return True
 
     def write(self, eng, d, addr: int, value: Any) -> None:
@@ -149,10 +153,39 @@ class DCTLPolicy(PolicyBase):
                 eng.abort_txn(d)
             if not eng.locks.try_lock(idx, st, d.tid):
                 eng.abort_txn(d)
-            d.write_map[idx] = True
+            d.locked_idxs.add(idx)
         if addr not in d.undo:
             d.undo[addr] = eng.heap[addr]
         eng.heap[addr] = value
+
+    def write_bulk(self, eng, d, addrs, values) -> None:
+        """Encounter-time batched write: validate + claim every lock in
+        ONE ``try_lock_bulk`` sweep (version checked under the same
+        stripes as the claim — the atomic validate-then-lock), then one
+        undo gather and one heap scatter.  A conflicting batch aborts
+        with NOTHING acquired or written, where the scalar loop would
+        have locked and written a prefix first — the same end state
+        (abort, deferred-clock bump) without the partial work to roll
+        back.  Irrevocable transactions and sub-``BULK_MIN`` batches
+        take the exact scalar loop.
+        """
+        from repro.core.engine.validation import BULK_MIN
+        try_bulk = getattr(eng.locks, "try_lock_bulk", None)
+        if d.irrevocable or try_bulk is None or addrs.size < BULK_MIN:
+            for a, v in zip(addrs, values):
+                self.write(eng, d, int(a), v)
+            return
+        d.read_only = False
+        addrs, values = C.dedup_last_wins(addrs, values)
+        idxs = eng.locks.index_bulk(addrs)
+        new = try_bulk(idxs, d.tid, max_version=d.r_clock)
+        if new is None:
+            new = C.extend_and_relock(eng, d, idxs)
+        if new is None:
+            eng.abort_txn(d)
+        d.locked_idxs.update(new.tolist())
+        C.merge_undo(eng, d, addrs)
+        C.heap_scatter(eng.heap, addrs, values)
 
     def rollback(self, eng, d) -> None:
         C.rollback_inplace(eng, d)               # undo + deferred-clock bump
@@ -160,7 +193,7 @@ class DCTLPolicy(PolicyBase):
     def commit_update(self, eng, d) -> None:
         if not d.irrevocable and not eng.revalidate(d):
             eng.abort_txn(d)
-        C.release_locks(eng, d.write_map, eng.clock.load())
+        C.release_locks(eng, d.locked_idxs, eng.clock.load())
 
     def on_finish(self, eng, d) -> None:
         if d.irrevocable:
@@ -226,12 +259,29 @@ class NOrecPolicy(PolicyBase):
             vals = B.heap_gather(eng.heap, addrs)
             if self.seq.load() == d.r_clock:
                 break
-        d.read_vals.extend(zip((int(a) for a in addrs), vals))
+        pairs = zip((int(a) for a in addrs), vals)
+        if d.dedup_read_set:
+            # traversal dedup, value-log flavor: within one NOrec txn an
+            # address's observed value can never legally change (value
+            # validation would have aborted), so keeping the first
+            # (addr, value) entry is exact
+            seen = d.read_set_seen
+            rv = d.read_vals
+            for p in pairs:
+                if p[0] not in seen:
+                    seen.add(p[0])
+                    rv.append(p)
+        else:
+            d.read_vals.extend(pairs)
         return vals
 
     def write(self, eng, d, addr: int, value: Any) -> None:
         d.read_only = False
         d.write_map[addr] = value
+
+    def write_bulk(self, eng, d, addrs, values) -> None:
+        d.read_only = False
+        d.write_map.update(zip((int(a) for a in addrs), values))
 
     def commit_update(self, eng, d) -> None:
         while True:
@@ -304,7 +354,7 @@ class TinySTMPolicy(DCTLPolicy):
     def commit_update(self, eng, d) -> None:
         if not eng.revalidate(d):
             eng.abort_txn(d)
-        C.release_locks(eng, d.write_map, eng.clock.increment())
+        C.release_locks(eng, d.locked_idxs, eng.clock.increment())
 
 
 # ---------------------------------------------------------------------------

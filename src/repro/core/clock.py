@@ -52,3 +52,17 @@ class Striped:
 
     def for_index(self, idx: int) -> threading.Lock:
         return self._locks[idx & self._mask]
+
+    def for_indices(self, idxs) -> list:
+        """The DISTINCT stripe locks covering ``idxs``, ascending.
+
+        The bulk lock-table operations hold every stripe their index
+        batch touches for the whole compare-and-sweep; ascending
+        acquisition order keeps two concurrent bulk sweeps deadlock-free
+        (scalar CAS holds a single stripe, so it can never close a
+        cycle).
+        """
+        import numpy as np
+
+        ids = np.unique(np.asarray(idxs, np.int64) & self._mask)
+        return [self._locks[int(i)] for i in ids]

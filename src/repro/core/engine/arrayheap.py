@@ -82,6 +82,15 @@ class ObjectHeap:
         cells = self._cells
         return [cells[int(a)] for a in addrs]
 
+    def scatter(self, addrs, values) -> None:
+        """Batched write-back (the commit pipeline's ``write_back``):
+        one pass over arbitrary objects — the list analogue of
+        ``ArrayHeap.scatter``, so the bulk commit path has one
+        interface on both heaps."""
+        cells = self._cells
+        for a, v in zip(addrs, values):
+            cells[int(a)] = v
+
 
 class ArrayHeap:
     """Numeric word heap in one int64 numpy buffer (doubling growth).
@@ -145,6 +154,26 @@ class ArrayHeap:
                 raise IndexError(int(idx.max()))
             return self._buf[idx]
 
+    def scatter(self, addrs, values) -> None:
+        """Batched write-back: one fancy-index assignment of
+        ``buf[addrs] = values`` under the heap lock (the same
+        buffer-swap hazard ``__setitem__`` guards against).  Bounds are
+        checked against the allocation frontier, matching the scalar
+        ``__setitem__`` contract; values coerce through int64 exactly
+        like the scalar ``int(value)`` does.  Addresses must be unique
+        (write sets are dict-keyed) — with duplicates numpy keeps an
+        unspecified writer, where the scalar loop keeps the last.
+        """
+        idx = np.asarray(addrs, np.int64)
+        vals = np.asarray(values)
+        if vals.dtype.kind not in "iu":       # match scalar int(value)
+            vals = np.fromiter((int(v) for v in values), np.int64,
+                               idx.size)
+        with self._lock:
+            if idx.size and int(idx.max(initial=0)) >= self._len:
+                raise IndexError(int(idx.max()))
+            self._buf[idx] = vals
+
     def jnp(self):
         import jax.numpy as jnp
         return jnp.asarray(self._buf[:self._len])
@@ -164,7 +193,12 @@ class ArrayLockTable(LockTable):
         self.size = 1 << bits
         self._words = np.full(self.size, _UNLOCKED_WORD, np.int64)
         from repro.core.clock import Striped
-        self._stripes = Striped(1024)
+        # 128 stripes, not 1024: a bulk sweep acquires every DISTINCT
+        # stripe its batch covers, so stripe count bounds the per-sweep
+        # Python lock traffic (a 1k-word claim is <=128 acquires, not
+        # ~1k) — while scalar CAS contention, which stripes exist to
+        # spread, stays negligible at this port's thread counts
+        self._stripes = Striped(128)
 
     # -- storage ops -------------------------------------------------------
     def read(self, idx: int) -> LockState:
@@ -228,3 +262,95 @@ class ArrayLockTable(LockTable):
         w = self._words
         mask = ((w & 2) != 0) & ((((w >> 2) & _TID_MASK) - _TID_BIAS) == tid)
         return np.nonzero(mask)[0]
+
+    def try_lock_bulk(self, idxs: np.ndarray, tid: int,
+                      max_version: Optional[int] = None
+                      ) -> Optional[np.ndarray]:
+        """All-or-nothing bulk claim: one CAS sweep over many indices.
+
+        Deduplicates ``idxs`` (colliding addresses share a lock word,
+        exactly like the scalar acquire loop's ``if idx not in locked``),
+        then — holding every covering stripe, acquired in ascending
+        order — checks the whole batch with ONE gather and, only if
+        every word is claimable, claims the free ones with ONE scatter.
+        Claimable means: free and unflagged (a word locked or flagged by
+        someone else conflicts; a word locked by ``tid`` passes
+        untouched), and — when ``max_version`` is given — free words
+        must also carry ``version < max_version`` (the encounter-time
+        write's validate-then-lock, atomically: the version is checked
+        under the same stripes the claim holds, so it cannot advance in
+        between like a separate gather would allow).
+
+        On ANY conflict nothing is mutated and ``None`` returns (the
+        scalar loop releases what it had acquired; the bulk sweep never
+        acquires in the first place — same end state, no partial-hold
+        window for other writers to conflict on).
+
+        Returns the NEWLY-ACQUIRED unique indices (ascending int64[n]) —
+        words already held by ``tid`` are excluded, so an unwinding
+        caller can release exactly what this call took without touching
+        locks earlier writes legitimately hold.  Per-word claim
+        semantics match ``try_lock``: version preserved, flag cleared.
+        """
+        uniq = np.unique(np.asarray(idxs, np.int64))
+
+        def conflicts(w):
+            locked = (w & 2) != 0
+            flagged = (w & 1) != 0
+            own = locked & ((((w >> 2) & _TID_MASK) - _TID_BIAS) == tid)
+            c = (locked | flagged) & ~own
+            if max_version is not None:
+                c |= ~locked & ((w >> _VER_SHIFT) >= max_version)
+            return c
+
+        # test-and-test-and-set: a conflict visible in a plain gather is
+        # authoritative for FAILING (the caller retries/aborts either
+        # way), so the common doomed sweep skips the stripe dance
+        if bool(conflicts(self._words[uniq]).any()):
+            return None
+        stripes = self._stripes.for_indices(uniq)
+        for s in stripes:
+            s.acquire()
+        try:
+            w = self._words[uniq]
+            if bool(conflicts(w).any()):
+                return None
+            locked = (w & 2) != 0
+            free = ~locked
+            new = ((w >> _VER_SHIFT) << _VER_SHIFT) \
+                | (((tid + _TID_BIAS) & _TID_MASK) << 2) | 2
+            self._words[uniq[free]] = new[free]
+            return uniq[free]
+        finally:
+            for s in stripes:
+                s.release()
+
+    def unlock_bulk(self, idxs: np.ndarray,
+                    version: Optional[int] = None) -> None:
+        """Release many locks in one sweep (commit publish / rollback).
+
+        ``version`` republishes every word at that clock (the commit /
+        deferred-clock-abort paths); ``None`` preserves each word's
+        current version (the failed-acquire cleanup path).  Duplicate
+        indices are safe WITHIN the sweep — every occurrence stores the
+        same unlocked word while the stripes are held, so no explicit
+        dedup pass is needed (unlike repeated scalar ``unlock`` calls,
+        where a second release could stomp a lock another thread
+        acquired in between — the hazard ``engine/commit.py``'s index
+        normalization exists for).
+        """
+        arr = np.asarray(idxs, np.int64)
+        stripes = self._stripes.for_indices(arr)
+        for s in stripes:
+            s.acquire()
+        try:
+            if version is None:
+                w = self._words[arr]
+                self._words[arr] = ((w >> _VER_SHIFT) << _VER_SHIFT) \
+                    | _UNLOCKED_WORD
+            else:
+                self._words[arr] = (version << _VER_SHIFT) \
+                    | _UNLOCKED_WORD
+        finally:
+            for s in stripes:
+                s.release()

@@ -141,7 +141,22 @@ def bulk_read_lockver(eng, d, addrs: np.ndarray, *, inclusive: bool,
     if track:
         accept = ok if own_mask is None else (ok & ~own_mask)
         sel = np.nonzero(accept)[0]
-        d.read_set.extend(zip(idxs[sel].tolist(), ver1[sel].tolist()))
+        pairs = zip(idxs[sel].tolist(), ver1[sel].tolist())
+        if d.dedup_read_set:
+            # traversal-level dedup (engine/traverse.py sets the flag):
+            # a repeated frontier visit re-proves the same (idx, version)
+            # pair — appending it again only inflates commit-time
+            # revalidation.  Pairs are deduped, not bare indices: the
+            # same index at a DIFFERENT version must still be tracked
+            # (V_EQ revalidates against the version seen).
+            seen = d.read_set_seen
+            rs = d.read_set
+            for p in pairs:
+                if p not in seen:
+                    seen.add(p)
+                    rs.append(p)
+        else:
+            d.read_set.extend(pairs)
     return vals, ok
 
 

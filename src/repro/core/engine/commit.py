@@ -1,4 +1,4 @@
-"""Commit pipeline helpers: lock-acquire, write-back, version-publish.
+"""Commit pipeline: batched lock-acquire, write-back, version-publish.
 
 The begin/read/write/commit scaffolding the backends used to copy-paste
 lives here as policy-agnostic steps over an engine:
@@ -11,6 +11,33 @@ lives here as policy-agnostic steps over an engine:
     releases the held locks at a bumped clock (the deferred-clock abort
     increment that keeps readers from missing the rollback).
 
+Since PR 5 every step is BATCHED at write sets >= ``BULK_MIN``,
+mirroring the ``read_bulk`` architecture: the lock claims become one
+``ArrayLockTable.try_lock_bulk`` CAS sweep (all-or-nothing — on
+conflict NOTHING was acquired, so there is no partial-hold window),
+write-back and undo-restore become one heap ``scatter`` (a fancy-index
+assignment on the in-place numpy heaps; the
+``kernels/scatter_write.py`` Pallas kernel serves the FUNCTIONAL rows
+via ``scatter_row`` — the MVStore commit's device-side block), and
+lock release becomes one
+``unlock_bulk`` sweep.  Below the threshold the exact historical scalar
+loops run; the batch is an optimization of the common update-heavy
+case, never a semantic change (``tests/test_commit_bulk.py`` pins
+bulk == scalar on every backend).
+
+LOCK-INDEX NORMALIZATION: every release path here deals in DEDUPED lock
+indices, never raw heap addresses.  Two addresses can collide into one
+lock word (the tables are hash-indexed), and releasing per-address
+unlocks that word TWICE — after the first release another thread can
+legitimately claim it, and the second release stomps their lock.
+``held_write_indices`` is the single home of the address->index
+normalization: the undo log's addresses through ``locks.index`` plus
+the policy's explicit encounter-time index set (``d.locked_idxs`` —
+irrevocable read-locks ride there), deduplicated.  ``rollback_inplace``
+historically iterated ``d.write_map`` instead, which only worked
+because the DCTL family happened to key it by index; the contract is
+now explicit and collision-safe for any policy.
+
 Every helper takes the engine explicitly — policies stay ~50-line
 stateless-ish objects and the engine stays the single owner of heap,
 clock and lock table.
@@ -19,14 +46,171 @@ from __future__ import annotations
 
 from typing import Iterable, List, Optional
 
+import numpy as np
 
-def acquire_write_locks(eng, d) -> List[int]:
+from repro.core.engine.validation import BULK_MIN
+
+
+# ---------------------------------------------------------------------------
+# shared vector helpers
+# ---------------------------------------------------------------------------
+
+
+def addr_lock_indices(eng, addrs: Iterable[int]) -> np.ndarray:
+    """Heap addresses -> DEDUPED ascending lock indices.
+
+    The normalization every bulk acquire/release shares: vectorized
+    through ``index_bulk`` when the lock table has it, the scalar
+    ``index`` loop otherwise; ``np.unique`` collapses colliding
+    addresses to one claim/release per lock word.
+    """
+    a = np.fromiter((int(x) for x in addrs), np.int64,
+                    len(addrs))  # type: ignore[arg-type]
+    index_bulk = getattr(eng.locks, "index_bulk", None)
+    if index_bulk is not None:
+        return np.unique(index_bulk(a))
+    return np.unique(np.fromiter((eng.locks.index(int(x)) for x in a),
+                                 np.int64, a.size))
+
+
+def held_write_indices(eng, d) -> np.ndarray:
+    """Every lock index this attempt's writes hold, deduplicated.
+
+    Union of the undo log's addresses (normalized via ``locks.index``)
+    and the policy's explicit encounter-time index set — DCTL's
+    irrevocable mode read-locks indices that never enter the undo log,
+    so both sources are needed.
+    """
+    idxs = set(int(i) for i in getattr(d, "locked_idxs", ()))
+    if d.undo:
+        idxs.update(int(i) for i in addr_lock_indices(eng, d.undo))
+    return np.fromiter(sorted(idxs), np.int64, len(idxs))
+
+
+def dedup_last_wins(addrs: np.ndarray, values):
+    """Collapse duplicate addresses in a write batch, LAST write winning.
+
+    ``Txn.write_bulk`` promises ``for a, v: write(a, v)`` semantics;
+    buffered backends get last-write-wins for free from their dict
+    update, but a heap ``scatter`` with duplicate indices keeps an
+    UNSPECIFIED writer (numpy) or a nondeterministic one (jax scatter).
+    The encounter-time bulk paths route through here first; the common
+    duplicate-free batch pays one vectorized uniqueness check.
+    """
+    if np.unique(addrs).size == addrs.size:
+        return addrs, values
+    m = dict(zip(addrs.tolist(), list(values)))
+    return np.fromiter(m.keys(), np.int64, len(m)), list(m.values())
+
+
+def extend_and_relock(eng, d, idxs: np.ndarray):
+    """Snapshot extension for a version-blocked bulk write claim.
+
+    Under the deferred clock, a writer's own previous commit leaves its
+    lock words at version == the CURRENT clock, so the next
+    transaction's claim (which requires ``version < r_clock``) fails
+    even though nothing conflicts — the scalar path eats an abort and a
+    full replay for it.  TinySTM's snapshot-extension argument applies
+    instead: if no word is foreign-locked or flagged and the read set
+    still revalidates RIGHT NOW, the transaction can serialize at a
+    later snapshot — an abort-and-replay would re-read exactly the
+    values it already holds (that is what revalidation proves).  So:
+    revalidate, advance the snapshot past the current clock (bumping
+    the deferred clock, exactly as the abort it replaces would have),
+    and retry the claim once.  Returns the newly-claimed indices or
+    ``None`` (caller aborts / falls back).
+    """
+    ver, own, meta = eng.locks.gather(idxs)
+    foreign = ((meta & 1) != 0) & (own != d.tid)
+    flagged = (meta & 2) != 0
+    if bool((foreign | flagged).any()) or not eng.revalidate(d):
+        return None
+    d.r_clock = eng.clock.increment()
+    return eng.locks.try_lock_bulk(idxs, d.tid, max_version=d.r_clock)
+
+
+def merge_undo(eng, d, addrs: np.ndarray) -> None:
+    """Record pre-images for a write batch in one heap gather.
+
+    First write wins: entries already in the undo log are the true
+    pre-images (an earlier write in this transaction put them there), so
+    the fresh gather only fills the gaps — ``merged.update(d.undo)``
+    keeps every existing entry.  The encounter-time ``write_bulk``
+    paths call this after their lock sweep and before their scatter.
+    """
+    from repro.core.engine.bulkread import heap_gather
+    olds = heap_gather(eng.heap, addrs)
+    if isinstance(olds, np.ndarray):
+        olds = olds.tolist()
+    merged = dict(zip(addrs.tolist(), olds))
+    merged.update(d.undo)
+    d.undo = merged
+
+
+def heap_scatter(heap, addrs, values) -> None:
+    """``heap[addrs] = values`` in one pass (the write-back twin of
+    ``bulkread.heap_gather``).
+
+    ``ArrayHeap`` takes a single fancy-index assignment under its lock;
+    ``ObjectHeap`` takes one list pass; anything else falls back to
+    scalar stores.  No kernel dispatch here: the in-place numpy heap IS
+    the CPU-production representation, and gathering the whole live row
+    out just to scatter the same values back would be an O(heap) round
+    trip per commit — the ``scatter_write`` kernel serves the
+    FUNCTIONAL rows (``scatter_row`` below, the MVStore commit's
+    device-side block), which is where a TPU deployment's heap lives.
+    """
+    sc = getattr(heap, "scatter", None)
+    if sc is None:
+        for a, v in zip(addrs, values):
+            heap[int(a)] = v
+        return
+    sc(addrs, values)
+
+
+def scatter_row(row, addrs, values):
+    """Functional ``row.at[addrs].set(values)`` with the kernel dispatch.
+
+    The write-back analogue of ``bulkread.gather_row`` for immutable
+    (jax) rows: one ``ops.write_back`` launch when ``KERNEL_INTERPRET=0``,
+    the jnp scatter otherwise.  The single home of the bounds contract
+    on the kernel path (jax scatter silently DROPS an out-of-range
+    address where numpy raises).  Serves the MVStore commit's live-block
+    update.
+    """
+    from repro.kernels import ops
+    a = np.asarray(addrs, np.int64)
+    if a.size and int(a.max(initial=0)) >= row.shape[0]:
+        raise IndexError(int(a.max()))
+    if not ops.INTERPRET:
+        import jax.numpy as jnp
+        return jnp.asarray(ops.write_back(row, a, values), row.dtype)
+    return row.at[a].set(values)
+
+
+# ---------------------------------------------------------------------------
+# pipeline steps
+# ---------------------------------------------------------------------------
+
+
+def acquire_write_locks(eng, d,
+                        bulk_min: Optional[int] = None) -> List[int]:
     """Claim every buffered write's lock (commit-time locking).
 
-    On conflict, releases whatever was acquired (versions untouched) and
-    aborts the transaction.  Returns the locked indices in acquisition
-    order, deduplicated.
+    On conflict, aborts the transaction with no locks held: the scalar
+    loop releases whatever it had acquired (versions untouched); the
+    bulk sweep (write sets >= ``bulk_min``, default ``BULK_MIN``) is
+    all-or-nothing and never acquired in the first place.  Returns the
+    locked indices, deduplicated (ascending on the bulk path,
+    acquisition order on the scalar path).
     """
+    bm = BULK_MIN if bulk_min is None else bulk_min
+    try_bulk = getattr(eng.locks, "try_lock_bulk", None)
+    if try_bulk is not None and len(d.write_map) >= bm:
+        locked = try_bulk(addr_lock_indices(eng, d.write_map), d.tid)
+        if locked is None:
+            eng.abort_txn(d)
+        return locked.tolist()
     locked: List[int] = []
     for addr in d.write_map:
         idx = eng.locks.index(addr)
@@ -39,26 +223,62 @@ def acquire_write_locks(eng, d) -> List[int]:
     return locked
 
 
-def write_back(eng, d) -> None:
-    """Publish buffered writes to the heap (caller holds the locks)."""
-    for addr, value in d.write_map.items():
+def write_back(eng, d, bulk_min: Optional[int] = None) -> None:
+    """Publish buffered writes to the heap (caller holds the locks).
+
+    One heap ``scatter`` at write sets >= ``bulk_min`` (write maps are
+    dict-keyed, so the addresses are unique — the scatter contract);
+    the scalar store loop below it.
+    """
+    bm = BULK_MIN if bulk_min is None else bulk_min
+    wm = d.write_map
+    if len(wm) >= bm and getattr(eng.heap, "scatter", None) is not None:
+        addrs = np.fromiter(wm.keys(), np.int64, len(wm))
+        heap_scatter(eng.heap, addrs, list(wm.values()))
+        return
+    for addr, value in wm.items():
         eng.heap[addr] = value
 
 
 def release_locks(eng, idxs: Iterable[int],
-                  version: Optional[int] = None) -> None:
+                  version: Optional[int] = None,
+                  bulk_min: Optional[int] = None) -> None:
+    """Release lock INDICES (never raw addresses), optionally publishing
+    ``version``; one ``unlock_bulk`` sweep at batches >= ``bulk_min``."""
+    bm = BULK_MIN if bulk_min is None else bulk_min
+    arr = idxs if isinstance(idxs, np.ndarray) else None
+    n = arr.size if arr is not None else len(idxs)  # type: ignore[arg-type]
+    unlock_bulk = getattr(eng.locks, "unlock_bulk", None)
+    if unlock_bulk is not None and n >= bm:
+        if arr is None:
+            # no int() per element: callers pass int/np-int indices and
+            # fromiter's dtype cast covers both at C speed
+            arr = np.fromiter(idxs, np.int64, n)
+        unlock_bulk(arr, version)
+        return
     for idx in idxs:
-        eng.locks.unlock(idx, version)
+        eng.locks.unlock(int(idx), version)
 
 
-def rollback_inplace(eng, d, bump_clock: bool = True) -> None:
+def rollback_inplace(eng, d, bump_clock: bool = True,
+                     bulk_min: Optional[int] = None) -> None:
     """Undo encounter-time in-place writes and release the held locks.
 
     ``bump_clock`` implements the deferred clock's abort increment: the
     released locks are republished at a FRESH version so any reader that
     validated against the uncommitted value must revalidate and abort.
+    The undo restore is one heap ``scatter`` at >= ``bulk_min`` entries,
+    and the release set is ``held_write_indices`` — deduped lock
+    indices, never per-address unlocks (see the module docstring's
+    normalization note).
     """
-    for addr, old in d.undo.items():
-        eng.heap[addr] = old
+    bm = BULK_MIN if bulk_min is None else bulk_min
+    undo = d.undo
+    if len(undo) >= bm and getattr(eng.heap, "scatter", None) is not None:
+        addrs = np.fromiter(undo.keys(), np.int64, len(undo))
+        heap_scatter(eng.heap, addrs, list(undo.values()))
+    else:
+        for addr, old in undo.items():
+            eng.heap[addr] = old
     nxt = eng.clock.increment() if bump_clock else None
-    release_locks(eng, d.write_map, nxt)
+    release_locks(eng, held_write_indices(eng, d), nxt, bulk_min=bm)

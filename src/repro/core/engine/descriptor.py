@@ -7,9 +7,13 @@ the same state under different names.  ``TxnDescriptor`` is their union:
   * ``read_set``   — ``(lock_idx, version_seen)`` pairs for commit-time
                      revalidation (lock-version backends);
   * ``read_vals``  — ``(addr, value)`` pairs for value validation (NOrec);
-  * ``write_map``  — buffered writes (TL2/NOrec: addr -> new value) or the
-                     set of encounter-time-locked indices (DCTL family:
-                     idx -> True);
+  * ``write_map``  — buffered writes (addr -> new value; TL2/NOrec);
+  * ``locked_idxs``— the set of encounter-time-locked LOCK INDICES (DCTL
+                     family; irrevocable read-locks land here too) —
+                     kept separate from ``write_map`` so the commit
+                     pipeline's release paths always deal in deduped
+                     indices, never raw addresses (``engine/commit.py``
+                     normalization note);
   * ``undo``       — in-place write undo log (addr -> old value) for
                      encounter-time backends, including Multiverse;
   * ``versioned_write_set`` — addr -> (vlist, node) for TBD-version
@@ -37,8 +41,9 @@ class TxnDescriptor:
         "tid", "attempts", "active", "stats",
         # per-attempt
         "r_clock", "read_only", "read_cnt", "read_set", "read_vals",
-        "write_map", "undo", "versioned_write_set", "alloc_log",
-        "local_mode_counter", "local_mode",
+        "write_map", "locked_idxs", "undo", "versioned_write_set",
+        "alloc_log", "local_mode_counter", "local_mode",
+        "dedup_read_set", "read_set_seen",
         # per-operation (survive retries)
         "versioned", "no_versioning", "initial_versioned_ts", "irrevocable")
 
@@ -63,9 +68,16 @@ class TxnDescriptor:
         self.read_set: List[tuple] = []
         self.read_vals: List[tuple] = []
         self.write_map: Dict[int, Any] = {}
+        self.locked_idxs: set = set()
         self.undo: Dict[int, Any] = {}
         self.versioned_write_set: Dict[int, tuple] = {}
         self.alloc_log: List[tuple] = []
+        # traversal-level read-set dedup (engine/traverse.py): while set,
+        # the bulk read path skips (lock_idx, version) pairs already
+        # tracked — repeated frontier visits stop inflating commit-time
+        # revalidation
+        self.dedup_read_set = False
+        self.read_set_seen: set = set()
 
     def reset_operation(self) -> None:
         """Per-operation reset (a NEW logical operation, not a retry)."""
@@ -76,4 +88,5 @@ class TxnDescriptor:
 
     @property
     def has_writes(self) -> bool:
-        return bool(self.write_map or self.undo or self.versioned_write_set)
+        return bool(self.write_map or self.locked_idxs or self.undo
+                    or self.versioned_write_set)

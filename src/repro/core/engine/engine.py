@@ -89,6 +89,9 @@ class _Tx:
     def write(self, addr: int, value: Any) -> None:
         self._tm.tm_write(self._ctx, addr, value)
 
+    def write_bulk(self, addrs, values) -> None:
+        self._tm.tm_write_bulk(self._ctx, addrs, values)
+
     def alloc(self, n: int, init: Any = None) -> int:
         return self._tm.tx_alloc(self._ctx, n, init)
 
@@ -176,6 +179,13 @@ class TransactionEngine(TMBase):
 
     def tm_write(self, d: TxnDescriptor, addr: int, value: Any) -> None:
         self.policy.write(self, d, addr, value)
+
+    def tm_write_bulk(self, d: TxnDescriptor, addrs, values) -> None:
+        """Batched write: the whole (addrs, values) batch in one policy
+        call — buffered policies fold it into the write map in one dict
+        update; encounter-time policies claim the locks in one
+        ``try_lock_bulk`` sweep (see each policy's ``write_bulk``)."""
+        self.policy.write_bulk(self, d, B.as_addr_array(addrs), values)
 
     def tx_alloc(self, d: TxnDescriptor, n: int, init: Any = None) -> int:
         base = self.alloc(n, init)

@@ -96,6 +96,18 @@ class PolicyBase:
     def write(self, eng, d, addr: int, value: Any) -> None:
         raise NotImplementedError
 
+    def write_bulk(self, eng, d, addrs, values) -> None:
+        """Batched write (``Txn.write_bulk``): default is the scalar loop.
+
+        Buffered policies override with one write-map update;
+        encounter-time policies with one ``try_lock_bulk`` claim sweep +
+        one undo gather + one heap scatter (``core/baselines.py``,
+        ``core/stm.py``).  The default keeps every third-party policy
+        correct.  ``addrs`` arrives as an int64 ndarray.
+        """
+        for a, v in zip(addrs, values):
+            self.write(eng, d, int(a), v)
+
     # -- validation ------------------------------------------------------
     def validate(self, eng, d) -> bool:
         """Is the read set still valid right now?  (``Txn.validate_bulk``)"""

@@ -65,6 +65,34 @@ _EMIT = True
 _PEND = False
 
 
+class _dedup_read_set:
+    """Context manager: dedup read-set tracking for a traversal's reads.
+
+    A traversal revisits lock indices across rounds (sibling nodes
+    sharing a lock bucket, chains re-walked by nested queries); while
+    the flag is set, ``bulk_read_lockver`` skips (idx, version) pairs
+    already tracked, so commit-time revalidation stays proportional to
+    the DISTINCT footprint, not the visit count.  Restores the previous
+    flag on exit, so nested traversals compose; contexts without the
+    flag (MVStore's ``_MVCtx`` — no read set to dedup) are a no-op.
+    """
+
+    __slots__ = ("_ctx", "_prev")
+
+    def __init__(self, tx):
+        ctx = getattr(tx, "_ctx", None)
+        self._ctx = ctx if hasattr(ctx, "dedup_read_set") else None
+
+    def __enter__(self):
+        if self._ctx is not None:
+            self._prev = self._ctx.dedup_read_set
+            self._ctx.dedup_read_set = True
+
+    def __exit__(self, *exc):
+        if self._ctx is not None:
+            self._ctx.dedup_read_set = self._prev
+
+
 def frontier_addrs(bases: np.ndarray, spans: np.ndarray):
     """Flatten ``[(base, span), ...]`` into one address vector.
 
@@ -95,6 +123,12 @@ def traverse_bulk(tx, roots: Iterable[Sequence], expand: Callable,
         work.append((_PEND, int(r[0]), int(r[1]),
                      r[2] if len(r) > 2 else None))
     out: List[Any] = []
+    with _dedup_read_set(tx):
+        return _traverse_loop(tx, work, out, expand, limit)
+
+
+def _traverse_loop(tx, work: List[tuple], out: List[Any],
+                   expand: Callable, limit: Optional[int]) -> List[Any]:
     while work:
         # drain the resolved prefix (everything left of the first
         # pending item is final — this is what preserves DFS order)
@@ -149,11 +183,12 @@ def chase_bulk(tx, cursors, advance: Callable) -> int:
     """
     cur = np.asarray(cursors, dtype=np.int64)
     rounds = 0
-    while cur.size:
-        vals = tx.read_bulk(cur)
-        rounds += 1
-        nxt = advance(cur, vals)
-        if nxt is None:
-            break
-        cur = np.asarray(nxt, dtype=np.int64)
+    with _dedup_read_set(tx):
+        while cur.size:
+            vals = tx.read_bulk(cur)
+            rounds += 1
+            nxt = advance(cur, vals)
+            if nxt is None:
+                break
+            cur = np.asarray(nxt, dtype=np.int64)
     return rounds

@@ -38,9 +38,11 @@ from repro.core import modes as M
 from repro.core.bloom import BloomTable
 from repro.core.clock import AtomicInt
 from repro.core.engine import bulkread as B
+from repro.core.engine import commit as C
 from repro.core.ebr import EBR, TxRetireBuffer
 from repro.core.engine import (
     AbortTx,
+    BULK_MIN,
     MaxRetriesExceeded,
     PolicyBase,
     TMBase,
@@ -131,18 +133,38 @@ class MultiversePolicy(PolicyBase):
         if not eng.revalidate(d):
             eng.abort_txn(d)
         commit_clock = eng.clock.load()
-        # remove TBD marks (publish versions at the commit clock), and
-        # mirror each now-committed version into the packed VLT while the
-        # address lock is still held (the mirror's writer discipline)
-        for addr, (vlist, node) in d.versioned_write_set.items():
+        if d.versioned_write_set:
+            self._publish_versions(eng, d, commit_clock)
+        # release write locks at the commit clock: the DEDUPED index set
+        # both write paths maintain (two addresses colliding into one
+        # lock word must release it exactly once — a second per-address
+        # unlock could stomp a lock another writer claimed in between),
+        # one bulk sweep at large write sets (engine/commit.py
+        # normalization note)
+        C.release_locks(eng, d.locked_idxs, commit_clock)
+        self._retire_bufs[d.tid].commit()
+
+    def _publish_versions(self, eng, d, commit_clock: int) -> None:
+        """Remove TBD marks (publishing versions at the commit clock) and
+        refresh the packed-VLT mirror while the address locks are still
+        held (the mirror's writer discipline).  Large versioned write
+        sets refresh the mirror in ONE ``publish_bulk`` sweep — per
+        unique row a single seqlock bracket around a vectorized slot
+        shift — instead of a per-address publish dance."""
+        vws = d.versioned_write_set
+        for addr, (vlist, node) in vws.items():
             node.timestamp = commit_clock
             node.tbd = False
-            self.vlt.mirror.publish(eng.locks.index(addr), addr,
-                                    commit_clock, node.data)
-        # release write locks at the commit clock
-        for addr in d.undo:
-            eng.locks.unlock(eng.locks.index(addr), commit_clock)
-        self._retire_bufs[d.tid].commit()
+        if len(vws) >= BULK_MIN and \
+                getattr(eng.locks, "index_bulk", None) is not None:
+            addrs = np.fromiter(vws.keys(), np.int64, len(vws))
+            self.vlt.mirror.publish_bulk(
+                eng.locks.index_bulk(addrs), addrs, commit_clock,
+                [node.data for (_vl, node) in vws.values()])
+        else:
+            for addr, (vlist, node) in vws.items():
+                self.vlt.mirror.publish(eng.locks.index(addr), addr,
+                                        commit_clock, node.data)
 
     def on_finish(self, eng, d) -> None:
         d.attempts = 0
@@ -151,9 +173,6 @@ class MultiversePolicy(PolicyBase):
         self.ebr.unpin(d.tid)
 
     def rollback(self, eng, d) -> None:
-        # roll back in-place writes
-        for addr, old in d.undo.items():
-            eng.heap[addr] = old
         # roll back versioned writes: deleted timestamp, UNLINK, retire.
         # We hold the address lock, and our node is necessarily still the
         # head (no one else can prepend), so unlinking is safe; without it
@@ -168,9 +187,10 @@ class MultiversePolicy(PolicyBase):
                 vlist.head = node.older
             buf.retire_on_abort(node)
         buf.abort()
-        nxt = eng.clock.increment()
-        for addr in d.undo:
-            eng.locks.unlock(eng.locks.index(addr), nxt)
+        # then the in-place writes: the shared encounter-time rollback —
+        # one heap scatter at large undo logs, deduped-index release at
+        # the bumped (deferred-clock) abort version
+        C.rollback_inplace(eng, d)
 
     def on_abort(self, eng, d) -> None:
         if d.read_only:
@@ -227,6 +247,7 @@ class MultiversePolicy(PolicyBase):
             eng.abort_txn(d)
         if not eng.locks.try_lock(idx, st, d.tid):
             eng.abort_txn(d)
+        d.locked_idxs.add(idx)
         if addr not in d.undo:
             d.undo[addr] = eng.heap[addr]
         # ORDER MATTERS (paper SS4.1 TEXT, not Alg. 3's line order): the
@@ -253,6 +274,69 @@ class MultiversePolicy(PolicyBase):
                 self.bloom.add(idx, addr)
             self._append_version(d, addr, vlist, value)
         eng.heap[addr] = value                    # in-place (encounter-time)
+
+    def write_bulk(self, eng, d, addrs, values) -> None:
+        """Batched encounter-time write for the Mode-Q unversioned case.
+
+        One ``try_lock_bulk`` sweep (validate + claim, atomic under the
+        stripes), one undo gather, one heap scatter — the update-heavy
+        hot path the paper's SS5 throughput comparison measures.  The
+        batch only stays batched when NO claimed bucket holds a version
+        list: our locks freeze those buckets (versioning an address
+        requires its lock), so bucket-empty checked after the sweep is
+        exact, and skipping the per-address version logic is then the
+        same decision the scalar Mode-Q write makes on a bloom miss.
+        The paper's version-before-in-place ordering (SS4.1) is not in
+        play here: lock-freeze readers only exist in Mode U, and the
+        mode machinery never overlaps a Mode-U reader with a local-
+        Mode-Q writer (QtoU waits for us).  Everything else — versioned
+        modes, version-list buckets, flagged/conflicted batches,
+        sub-``BULK_MIN`` batches — takes the exact scalar loop.
+        """
+        if addrs.size == 0:
+            return
+        if d.versioned:
+            self.write(eng, d, int(addrs[0]), values[0])  # restart path
+        try_bulk = getattr(eng.locks, "try_lock_bulk", None)
+        if d.local_mode != M.MODE_Q or try_bulk is None or \
+                addrs.size < BULK_MIN:
+            for a, v in zip(addrs, values):
+                self.write(eng, d, int(a), v)
+            return
+        d.read_only = False
+        addrs, values = C.dedup_last_wins(addrs, values)
+        idxs = eng.locks.index_bulk(addrs)
+        new = try_bulk(idxs, d.tid, max_version=d.r_clock)
+        if new is None:
+            # version-blocked but conflict-free batch: snapshot-extend
+            # past the deferred clock instead of aborting (the abort
+            # would replay to exactly this state — commit.py note)
+            new = C.extend_and_relock(eng, d, idxs)
+        if new is None:
+            # a FLAG means a Mode-Q reader is mid-versioning and the
+            # scalar loop's wait-on-flag owns that window; any other
+            # conflict (foreign lock, stale version with a stale read
+            # set) aborts the scalar write too — skip straight to the
+            # abort instead of replaying the batch word by word
+            _, _, meta = eng.locks.gather(idxs)
+            if bool(((meta & 2) != 0).any()):
+                for a, v in zip(addrs, values):
+                    self.write(eng, d, int(a), v)
+                return
+            eng.abort_txn(d)
+        if self.vlt.nonempty_count and any(
+                self.vlt._buckets[int(i)] is not None
+                for i in np.unique(idxs)):
+            # a claimed bucket holds version lists: unwind OUR new claims
+            # (never locks earlier writes hold) and take the per-address
+            # version-append path
+            eng.locks.unlock_bulk(new)
+            for a, v in zip(addrs, values):
+                self.write(eng, d, int(a), v)
+            return
+        d.locked_idxs.update(new.tolist())
+        C.merge_undo(eng, d, addrs)
+        C.heap_scatter(eng.heap, addrs, values)
 
     def _get_vlist(self, idx: int, addr: int) -> Optional[VersionList]:
         if not self.bloom.contains(idx, addr):
@@ -555,8 +639,11 @@ class MultiversePolicy(PolicyBase):
         out["unversioned_buckets"] = self.stats_unversioned_buckets
         out["ebr_freed"] = self.ebr.freed_count
         # raw-engine stats only (the normalized substrate schema drops
-        # it): words a versioned bulk read resolved via PackedVLT.select
+        # them): words a versioned bulk read resolved via PackedVLT.select,
+        # and how many of those a non-primary mirror way served (bucket
+        # collisions the multi-way row layout kept vectorizable)
         out["version_gather_hits"] = self.stats_version_gather_hits
+        out["mirror_way2_hits"] = sum(self.vlt.mirror.way_hits[1:])
 
     def stop(self, eng) -> None:
         self._stop.set()

@@ -26,6 +26,7 @@ common case, never a semantic change.
 """
 from __future__ import annotations
 
+import threading
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -94,15 +95,21 @@ def _packable(data) -> bool:
 class PackedVLT:
     """Gather-friendly mirror of each bucket's newest committed versions.
 
-    Four arrays indexed by lock-table index: ``seq`` (per-row seqlock),
-    ``addr`` (the single address the row tracks, or a sentinel), and the
-    newest-first ``ts``/``data`` version slots.  WRITERS mutate a row
-    only while holding the row's address lock, bumping ``seq`` odd
-    before and even after, so the scalar path's lock discipline also
-    serializes mirror updates.  READERS hold nothing: ``select`` brackets
-    its gathers with two ``seq`` gathers and accepts only rows that were
-    stable and even across the window — a torn row just falls back to
-    the scalar version-list walk.
+    Arrays indexed by lock-table index: ``seq`` (per-row seqlock),
+    ``addr`` ([size, ways] — WHICH addresses each row tracks, or a
+    sentinel per way), and the newest-first ``ts``/``data`` version
+    slots ([size, ways, depth]).  A bucket collision no longer poisons
+    the row: the second address hashing into a bucket claims the second
+    WAY and both stay vectorizable (``way_hits[w]`` counts reads each
+    way served); only when every way is taken does a further colliding
+    address go unmirrored — it simply never matches ``select`` and
+    falls back to the scalar walk.  WRITERS mutate a row only while
+    holding the row's address lock, bumping ``seq`` odd before and even
+    after, so the scalar path's lock discipline also serializes mirror
+    updates.  READERS hold nothing: ``select`` brackets its gathers
+    with two ``seq`` gathers and accepts only rows that were stable and
+    even across the window — a torn row just falls back to the scalar
+    version-list walk.
 
     TBD (uncommitted) versions are never mirrored, so callers MUST gate
     acceptance on the address lock being free, gathered BEFORE the row
@@ -116,51 +123,98 @@ class PackedVLT:
     the same versions the scalar traverse waits on and then skips.
     """
 
-    NO_ADDR = -1       # row empty (bucket has no versioned address)
-    UNPACKABLE = -2    # colliding addresses or non-int payload: always
-    #                    fails the select match -> scalar fallback
+    NO_ADDR = -1       # way empty (tracks no versioned address)
+    UNPACKABLE = -2    # way poisoned (non-int payload reached a tracked
+    #                    address): never matches select -> scalar fallback
 
-    def __init__(self, size: int, depth: int = 4):
+    def __init__(self, size: int, depth: int = 4, ways: int = 2):
         self.size = size
         self.depth = depth
+        self.ways = ways
         self._seq = np.zeros(size, np.int64)
-        self._addr = np.full(size, self.NO_ADDR, np.int64)
-        self._ts = np.full((size, depth), EMPTY_TS, np.int64)
-        self._data = np.zeros((size, depth), np.int64)
+        self._addr = np.full((size, ways), self.NO_ADDR, np.int64)
+        self._ts = np.full((size, ways, depth), EMPTY_TS, np.int64)
+        self._data = np.zeros((size, ways, depth), np.int64)
+        #: reads served per way (way_hits[1:] are the collision wins the
+        #: multi-way layout buys — exposed as stats_mirror_way2_hits)
+        self.way_hits = [0] * ways
+
+    def _way_of(self, bucket: int, addr: int) -> Optional[int]:
+        w = np.nonzero(self._addr[bucket] == addr)[0]
+        return int(w[0]) if w.size else None
 
     # -- writer side (caller holds the address lock for ``bucket``) ------
     def seed(self, bucket: int, addr: int, head: VListNode) -> None:
-        """A version list was inserted for ``addr`` in ``bucket``."""
-        self._seq[bucket] += 1
-        if self._addr[bucket] != self.NO_ADDR:
-            # second address hashing into this bucket: one row cannot
-            # serve two version lists — poison until unversioned
-            self._addr[bucket] = self.UNPACKABLE
-        elif head is None or head.tbd or head.timestamp == DELETED_TS \
+        """A version list was inserted for ``addr`` in ``bucket``: claim
+        the first free way.  Unrepresentable heads (TBD, deleted,
+        non-int payloads) and way overflow claim NOTHING — an unmirrored
+        address never matches ``select``, which is already the safe
+        fail-closed answer."""
+        if head is None or head.tbd or head.timestamp == DELETED_TS \
                 or not _packable(head.data):
-            self._addr[bucket] = self.UNPACKABLE
-        else:
-            self._addr[bucket] = addr
-            self._ts[bucket, 0] = head.timestamp
-            self._ts[bucket, 1:] = EMPTY_TS
-            self._data[bucket, 0] = int(head.data)
+            return
+        free = np.nonzero(self._addr[bucket] == self.NO_ADDR)[0]
+        if not free.size:
+            return                     # all ways busy: not mirrored
+        w = int(free[0])
+        self._seq[bucket] += 1
+        self._addr[bucket, w] = addr
+        self._ts[bucket, w, 0] = head.timestamp
+        self._ts[bucket, w, 1:] = EMPTY_TS
+        self._data[bucket, w, 0] = int(head.data)
         self._seq[bucket] += 1
 
     def publish(self, bucket: int, addr: int, ts: int, data) -> None:
         """A commit published a NEW newest version for ``addr``."""
-        if self._addr[bucket] != addr:
-            return                     # empty/poisoned/other addr: no-op
+        w = self._way_of(bucket, addr)
+        if w is None:
+            return                     # unmirrored/poisoned: no-op
         self._seq[bucket] += 1
         if _packable(data):
-            self._ts[bucket, 1:] = self._ts[bucket, :-1]
-            self._data[bucket, 1:] = self._data[bucket, :-1]
-            self._ts[bucket, 0] = ts
-            self._data[bucket, 0] = int(data)
+            self._ts[bucket, w, 1:] = self._ts[bucket, w, :-1]
+            self._data[bucket, w, 1:] = self._data[bucket, w, :-1]
+            self._ts[bucket, w, 0] = ts
+            self._data[bucket, w, 0] = int(data)
         else:
             # the newest version is unrepresentable; serving older slots
-            # would time-travel, so the whole row must fall back
-            self._addr[bucket] = self.UNPACKABLE
+            # would time-travel, so the way must fall back until cleared
+            self._addr[bucket, w] = self.UNPACKABLE
         self._seq[bucket] += 1
+
+    def publish_bulk(self, buckets: np.ndarray, addrs: np.ndarray,
+                     ts: int, datas) -> None:
+        """One batched mirror refresh for a whole commit's version set
+        (caller holds every address lock; ``MultiversePolicy``'s batched
+        ``commit_update``).  Per UNIQUE bucket a single seqlock bracket
+        — NOT one per entry: two ways of one bucket bumped separately
+        would pass through an even mid-update ``seq`` and a reader could
+        accept a half-refreshed row.  The slot shift itself is one
+        vectorized assignment over all matched (bucket, way) pairs;
+        unpackable payloads take the scalar ``publish`` (which poisons
+        their way) after the sweep.
+        """
+        b = np.asarray(buckets, np.int64)
+        a = np.asarray(addrs, np.int64)
+        packable = np.fromiter((_packable(x) for x in datas), bool, a.size)
+        vals = np.fromiter((int(x) if ok else 0
+                            for x, ok in zip(datas, packable)),
+                           np.int64, a.size)
+        match = self._addr[b] == a[:, None]            # [M, ways]
+        way = np.argmax(match, axis=1)
+        tracked = match.any(axis=1)
+        hit = tracked & packable
+        if hit.any():
+            hb, hw = b[hit], way[hit]                  # distinct pairs:
+            # a way tracks ONE address and addrs are dict-keyed unique
+            uniq = np.unique(hb)
+            self._seq[uniq] += 1
+            self._ts[hb, hw, 1:] = self._ts[hb, hw, :-1]
+            self._data[hb, hw, 1:] = self._data[hb, hw, :-1]
+            self._ts[hb, hw, 0] = ts
+            self._data[hb, hw, 0] = vals[hit]
+            self._seq[uniq] += 1
+        for i in np.nonzero(tracked & ~packable)[0]:
+            self.publish(int(b[i]), int(a[i]), ts, datas[int(i)])
 
     def clear(self, bucket: int) -> None:
         """The bucket was unversioned (paper SS4.4): forget everything."""
@@ -177,21 +231,31 @@ class PackedVLT:
         ``values[i]`` is the newest committed version of ``addrs[i]``
         strictly below ``r_clock`` wherever ``ok[i]``; everywhere else
         the caller re-reads through the scalar traverse.  One seqlock-
-        bracketed gather of the mirror rows plus one vectorized select
-        (numpy twin on CPU, the Pallas kernel when KERNEL_INTERPRET=0).
+        bracketed gather of the mirror rows, a vectorized way match,
+        then one vectorized select over the matched ways (numpy twin on
+        CPU, the Pallas kernel when KERNEL_INTERPRET=0).
         """
         s1 = self._seq[idxs]
-        rows_addr = self._addr[idxs]
-        ts = self._ts[idxs]
+        rows_addr = self._addr[idxs]                   # [N, ways]
+        ts = self._ts[idxs]                            # [N, ways, depth]
         data = self._data[idxs]
         s2 = self._seq[idxs]
         stable = (s1 == s2) & ((s1 & 1) == 0)
+        match = rows_addr == addrs[:, None]
+        way = np.argmax(match, axis=1)                 # first (only) match
+        rows = np.arange(idxs.shape[0])
+        ts_w, data_w = ts[rows, way], data[rows, way]  # [N, depth]
         from repro.kernels import ops
         if not ops.INTERPRET:
-            vals, found = ops.version_select(ts, data, r_clock)
+            vals, found = ops.version_select(ts_w, data_w, r_clock)
         else:
-            vals, found = np_version_select(ts, data, r_clock)
-        return vals, stable & (rows_addr == addrs) & found
+            vals, found = np_version_select(ts_w, data_w, r_clock)
+        ok = stable & match.any(axis=1) & found
+        for w in range(1, self.ways):
+            n = int((ok & (way == w)).sum())
+            if n:
+                self.way_hits[w] += n
+        return vals, ok
 
 
 class VLT:
@@ -199,6 +263,19 @@ class VLT:
         self.size = 1 << buckets_bits
         self._buckets: List[Optional[VLTNode]] = [None] * self.size
         self.mirror = PackedVLT(self.size, depth=mirror_depth)
+        #: live count of nonempty buckets, guarded by ``_count_lock``:
+        #: ``+=`` on an attribute is a preemptible load/add/store, and
+        #: two inserts under DIFFERENT bucket locks could lose an
+        #: increment — after which the count could read 0 with a bucket
+        #: still populated, and the batched Mode-Q write path would skip
+        #: version publication (a silent snapshot violation).  Reads are
+        #: single attribute loads and need no lock.  The gate itself is
+        #: sound: 0 proves every lock-frozen bucket in a write batch is
+        #: empty without walking them (an insert needs the bucket's
+        #: address lock, so a batch's own buckets cannot gain version
+        #: lists while the batch holds their locks).
+        self.nonempty_count = 0
+        self._count_lock = threading.Lock()
 
     def get(self, bucket: int, addr: int) -> Optional[VersionList]:
         """tryGetVList: walk the bucket list (caller saw a bloom hit)."""
@@ -212,12 +289,18 @@ class VLT:
 
     def insert(self, bucket: int, addr: int, vlist: VersionList) -> None:
         """Prepend (caller holds the address lock)."""
+        if self._buckets[bucket] is None:
+            with self._count_lock:
+                self.nonempty_count += 1
         self._buckets[bucket] = VLTNode(vlist, addr, self._buckets[bucket])
         self.mirror.seed(bucket, addr, vlist.head)
 
     def take_bucket(self, bucket: int) -> Optional[VLTNode]:
         """Detach the whole bucket (unversioning; caller holds the lock)."""
         head = self._buckets[bucket]
+        if head is not None:
+            with self._count_lock:
+                self.nonempty_count -= 1
         self._buckets[bucket] = None
         self.mirror.clear(bucket)
         return head

@@ -16,7 +16,7 @@ import argparse
 import sys
 
 from repro.eval.driver import longread_headline, run_eval, \
-    structrq_headline
+    rwmix_headline, structrq_headline
 from repro.eval.workloads import WORKLOADS
 
 
@@ -30,6 +30,11 @@ def _fmt_row(row: dict) -> str:
         extra = (f"rqs/s={row['rqs_per_sec']:7.1f} "
                  f"failed={row['failed_ops']:4d} "
                  f"rq-vs-scan={row.get('rq_vs_scan', 0.0):5.2f}x")
+    elif "write_words" in row:
+        extra = (f"updates/s={row['updates_per_sec']:8.1f} "
+                 f"failed={row['failed_updates']:4d} "
+                 f"checks/s={row['checks_per_sec']:7.1f} "
+                 f"violations={row['violations']:3d}")
     elif "ops_per_sec" in row:
         extra = (f"ops/s={row['ops_per_sec']:8.0f} "
                  f"failed={row['failed_ops']:4d}")
@@ -79,6 +84,18 @@ def main(argv=None) -> int:
             print(f"\nheadline @ scan{h['scan_size']}: multiverse="
                   f"{h['multiverse_scans_per_sec']:.1f} scans/s {verdict} "
                   f"vs [{base}]")
+    if args.workload == "rwmix":
+        h = rwmix_headline(rows)
+        if h:
+            verdict = ("within 2x of the best unversioned baseline"
+                       if h["within_2x"] else
+                       "NOT within 2x of the best unversioned baseline")
+            base = ", ".join(f"{b}={v:.1f}" for b, v in
+                             h["baseline_updates_per_sec"].items())
+            print(f"\nheadline @ w{h['write_words']}: multiverse="
+                  f"{h['multiverse_updates_per_sec']:.1f} updates/s "
+                  f"({h['ratio_vs_best']:.2f}x of best) — {verdict} "
+                  f"[{base}] violations={h['violations']}")
     if args.workload == "structrq":
         h = structrq_headline(rows)
         for struct, d in sorted(h.items()):

@@ -2,5 +2,7 @@
 flash_attention, ssd_scan (Mamba-2 chunk scan), snapshot_select (MVStore
 versioned read), fused_adamw (optimizer + versioned commit), validate
 (bulk read-set revalidation), gather_read (batched snapshot read —
-`Txn.read_bulk`/`snapshot_bulk`).  ops.py holds the jit.d wrappers,
-ref.py the pure-jnp oracles."""
+`Txn.read_bulk`/`snapshot_bulk`), scatter_write (batched commit
+write-back — the scatter half of the commit pipeline), version_select
+(newest-committed-version select over packed VLT mirror rows).  ops.py
+holds the jit.d wrappers, ref.py the pure-jnp oracles."""

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import fused_adamw as _fa
 from repro.kernels import flash_attention as _fl
 from repro.kernels import gather_read as _gr
+from repro.kernels import scatter_write as _sw
 from repro.kernels import snapshot_select as _ss
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import validate as _val
@@ -89,6 +90,49 @@ def snapshot_read(heap, addrs, tile: int = 512):
     out = _gr.gather_read_flat(jnp.asarray(heap), a, tile=t,
                                interpret=INTERPRET)
     return out[:n]
+
+
+def write_back(heap, addrs, values, tile: int = 512):
+    """Batched commit write-back: ``heap[addrs] = values`` in one launch.
+
+    ``heap``: [H] (any numeric dtype); ``addrs``: [N] int (unique —
+    write sets are dict-keyed); ``values``: [N] — returns the [H]
+    updated row as an ndarray.  Adapts ragged batch lengths to the tiled
+    kernel by padding with the one-past-the-end address (dropped by jax
+    scatter semantics, so padding never clobbers a live word) and guards
+    the int64 range per the ``version_select`` pattern: without jax x64
+    the kernel would silently truncate int64 payloads to int32, so such
+    batches take the numpy twin (``scatter_write.np_write_back``, exact
+    at any width) instead.  This is the commit-pipeline hot path on TPU
+    (KERNEL_INTERPRET=0); on CPU the engine scatters through the numpy
+    heap directly (``ArrayHeap.scatter``).
+    """
+    import numpy as np
+
+    heap_np = np.asarray(heap)
+    vals = np.asarray(values)
+    n = int(np.asarray(addrs).shape[0])
+    if n == 0:
+        return np.array(heap_np, copy=True)
+    lo, hi = -(1 << 31) + 1, (1 << 31) - 1
+
+    def _beyond_int32(a):
+        return a.dtype == np.int64 and a.size and \
+            (int(a.max()) > hi or int(a.min()) < lo)
+
+    if _beyond_int32(vals) or _beyond_int32(heap_np):
+        return _sw.np_write_back(heap_np, np.asarray(addrs, np.int64),
+                                 vals)
+    t = min(tile, 1 << (n - 1).bit_length())
+    pad = (-n) % t
+    a = jnp.asarray(np.asarray(addrs), jnp.int32)
+    v = jnp.asarray(vals, jnp.asarray(heap).dtype)
+    if pad:
+        a = jnp.pad(a, (0, pad), constant_values=heap_np.shape[0])
+        v = jnp.pad(v, (0, pad))
+    out = _sw.scatter_write_flat(jnp.asarray(heap), a, v, tile=t,
+                                 interpret=INTERPRET)
+    return np.asarray(out)
 
 
 def validate_readset(ver, own, meta, seen, r_clock, tid, mode,

@@ -1,0 +1,81 @@
+"""Batched commit write-back — the scatter half of the snapshot gather.
+
+``kernels/gather_read.py`` made the long-running READ an array operation
+(``values[i] = heap[addrs[i]]``); this kernel is its commit-side twin.
+An update transaction that buffered (or undo-logged) a large write set
+publishes it to the heap in ONE launch instead of N interpreter
+round-trips:
+
+    out = heap;  out[addrs[i]] = values[i]      for i in [0, N)
+
+Layout mirrors the gather kernel: the heap rides in as one full block
+(KBs..MBs at this repro's scales), the address/value vectors are tiled
+over the grid, and the OUTPUT is the full heap block revisited by every
+grid step (constant index map) — step 0 copies the heap through, each
+step then scatters its tile into the block, so the final block holds
+every update.  Addresses are the caller's responsibility to keep unique
+(write sets are dict-keyed, so they are); an out-of-range address is
+DROPPED by jax scatter semantics, which is exactly what the ragged-batch
+padding relies on (``ops.write_back`` pads with ``heap.size``, one past
+the end).
+
+``interpret=True`` is the CPU fallback path; for CPU *production*
+write-back the engine uses the numpy twin (``np_write_back`` below — a
+single fancy-index assignment, the same split as ``validate.py`` /
+``gather_read.py``); the kernel test pins the two element-for-element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def np_write_back(heap: np.ndarray, addrs: np.ndarray,
+                  values: np.ndarray) -> np.ndarray:
+    """Numpy twin: a copy of ``heap`` with ``out[addrs] = values``.
+
+    Exact at any integer width (the wrapper routes int64-range payloads
+    here instead of letting an x64-less jax truncate them — the
+    ``version_select`` guard pattern).  Addresses must be in range and
+    unique; the in-place engine path (``ArrayHeap.scatter``) shares this
+    contract.
+    """
+    out = np.array(heap, copy=True)
+    out[addrs] = values
+    return out
+
+
+def _scatter_kernel(heap_ref, addr_ref, val_ref, o_ref):
+    # constant-index output block: step 0 seeds it with the heap, every
+    # step scatters its (addr, val) tile into it; out-of-range pad
+    # addresses are dropped by scatter semantics
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        o_ref[...] = heap_ref[...]
+
+    o_ref[...] = o_ref[...].at[addr_ref[...]].set(val_ref[...])
+
+
+def scatter_write_flat(heap, addrs, values, *, tile: int = 512,
+                       interpret: bool = True):
+    """heap: [H]; addrs: [N] int32; values: [N] heap.dtype (N a multiple
+    of ``tile``).  Returns the [H] updated heap row.
+    """
+    (h,) = heap.shape
+    n = addrs.shape[0]
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((h,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((h,), heap.dtype),
+        interpret=interpret,
+    )(heap, addrs, values)

@@ -129,6 +129,44 @@ def test_extbst_range_query_survives_depth_past_recursion_limit():
     tm.stop()
 
 
+def test_traversal_readset_dedup_across_rounds():
+    """Repeated frontier visits must not inflate the read set: a second
+    walk of the same chain re-proves the same (idx, version) pairs and
+    appends NOTHING, while a plain read_bulk outside the traversal
+    keeps the historical append-always behavior (flag restored)."""
+    tm = make_test_tm("tl2", n_threads=1)
+    tm.alloc(1)                              # burn address 0 (NULL)
+    addrs = [tm.alloc(1, 0) for _ in range(5)]
+    for a, b in zip(addrs, addrs[1:]):
+        run(tm, lambda tx, a=a, b=b: tx.write(a, b))
+    head = addrs[0]
+
+    def advance(cur, vals):
+        nxt = np.asarray(vals, np.int64)
+        return nxt[nxt != 0]
+
+    def body(tx):
+        d = tx._ctx
+        chase_bulk(tx, [head], advance)
+        n1 = len(d.read_set)
+        assert n1 > 0
+        chase_bulk(tx, [head], advance)      # SAME chain again
+        assert len(d.read_set) == n1         # deduped across rounds
+        # traverse_bulk dedups too (same walk, span-1 items)
+        out = traverse_bulk(
+            tx, [(head, 1)],
+            lambda s, w, emit, push: (emit(int(w[0])),
+                                      push(int(w[0]), 1)
+                                      if int(w[0]) else None))
+        assert len(out) == 5
+        assert len(d.read_set) == n1
+        assert not d.dedup_read_set          # flag restored on exit
+        tx.read_bulk([head])                 # plain batch: appends again
+        assert len(d.read_set) == n1 + 1
+    run(tm, body)
+    tm.stop()
+
+
 # ---------------------------------------------------------------------------
 # parity: batch traversal == scalar traversal, all six backends
 # ---------------------------------------------------------------------------
@@ -268,8 +306,9 @@ def test_ops_version_select_exact_beyond_int32():
 
 
 def test_packed_vlt_select_fails_closed():
-    """Collisions, non-int payloads and torn rows must all fail select
-    (-> scalar fallback), never return a wrong value."""
+    """Way overflow, non-int payloads and torn rows must all fail select
+    (-> scalar fallback), never return a wrong value; a single bucket
+    collision is now SERVED by the second way (counted in way_hits)."""
     m = PackedVLT(8, depth=2)
     m.seed(3, 100, VListNode(None, 5, 42, False))
     vals, ok = m.select(np.array([3]), np.array([100]), 10)
@@ -281,12 +320,26 @@ def test_packed_vlt_select_fails_closed():
     assert ok.tolist() == [False]
     vals, ok = m.select(np.array([3]), np.array([100]), 8)   # ts=7 -> 43
     assert ok.tolist() == [True] and int(vals[0]) == 43
-    # a second address colliding into the bucket poisons the row
+    # a second address colliding into the bucket claims way 2: BOTH stay
+    # vectorizable (the 2-way satellite), and the stat counts the hit
     m.seed(3, 200, VListNode(None, 6, 1, False))
-    for addr in (100, 200):
-        _, ok = m.select(np.array([3]), np.array([addr]), 100)
-        assert ok.tolist() == [False]
-    # non-int payload poisons at publish time
+    vals, ok = m.select(np.array([3, 3]), np.array([100, 200]), 100)
+    assert ok.tolist() == [True, True]
+    assert vals.tolist() == [44, 1]
+    assert m.way_hits[1] == 1
+    # publishes keep routing to the right way
+    m.publish(3, 200, 12, 2)
+    vals, ok = m.select(np.array([3]), np.array([200]), 100)
+    assert ok.tolist() == [True] and int(vals[0]) == 2
+    assert m.way_hits[1] == 2
+    # a THIRD collider overflows both ways: unmirrored -> fail closed
+    m.seed(3, 300, VListNode(None, 6, 9, False))
+    _, ok = m.select(np.array([3]), np.array([300]), 100)
+    assert ok.tolist() == [False]
+    for addr, want in ((100, 44), (200, 2)):     # existing ways untouched
+        vals, ok = m.select(np.array([3]), np.array([addr]), 100)
+        assert ok.tolist() == [True] and int(vals[0]) == want
+    # non-int payload poisons its way at publish time
     m.seed(4, 300, VListNode(None, 2, 7, False))
     m.publish(4, 300, 6, "not-an-int")
     _, ok = m.select(np.array([4]), np.array([300]), 100)
