@@ -53,6 +53,19 @@ def unpack_lock(word: int) -> LockState:
 _UNLOCKED_WORD = pack_lock(LockState(False, 0, -1, False))
 
 
+def check_addr_bounds(idx: np.ndarray, n: int) -> None:
+    """Raise unless every address lands in ``[0, n)`` — the bounds
+    contract every bulk gather/scatter shares, failing loudly at BOTH
+    ends: past the frontier (matching the scalar accessors) AND
+    negative, which would wrap under numpy/jax fancy indexing and
+    silently hit a word near the end of the buffer."""
+    if not idx.size:
+        return
+    lo, hi = int(idx.min()), int(idx.max())
+    if lo < 0 or hi >= n:
+        raise IndexError(lo if lo < 0 else hi)
+
+
 class ObjectHeap:
     """Plain Python-list heap: any value, no vectorization."""
 
@@ -122,12 +135,14 @@ class ArrayHeap:
             return base
 
     def __getitem__(self, addr: int) -> int:
-        if addr >= self._len:
+        # both ends: a negative address would wrap to the end of the
+        # buffer (numpy indexing), same contract as the bulk paths
+        if addr < 0 or addr >= self._len:
             raise IndexError(addr)
         return int(self._buf[addr])
 
     def __setitem__(self, addr: int, value: Any) -> None:
-        if addr >= self._len:
+        if addr < 0 or addr >= self._len:
             raise IndexError(addr)
         # under the lock: a concurrent alloc() may be copying into a grown
         # buffer, and a write that raced the copy would land in the
@@ -150,8 +165,7 @@ class ArrayHeap:
         """
         idx = np.asarray(addrs, np.int64)
         with self._lock:
-            if idx.size and int(idx.max(initial=0)) >= self._len:
-                raise IndexError(int(idx.max()))
+            check_addr_bounds(idx, self._len)
             return self._buf[idx]
 
     def scatter(self, addrs, values) -> None:
@@ -170,8 +184,7 @@ class ArrayHeap:
             vals = np.fromiter((int(v) for v in values), np.int64,
                                idx.size)
         with self._lock:
-            if idx.size and int(idx.max(initial=0)) >= self._len:
-                raise IndexError(int(idx.max()))
+            check_addr_bounds(idx, self._len)
             self._buf[idx] = vals
 
     def jnp(self):

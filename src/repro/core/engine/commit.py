@@ -115,17 +115,32 @@ def extend_and_relock(eng, d, idxs: np.ndarray):
     still revalidates RIGHT NOW, the transaction can serialize at a
     later snapshot — an abort-and-replay would re-read exactly the
     values it already holds (that is what revalidation proves).  So:
-    revalidate, advance the snapshot past the current clock (bumping
-    the deferred clock, exactly as the abort it replaces would have),
+    advance the snapshot past the current clock (bumping the deferred
+    clock, exactly as the abort it replaces would have), revalidate,
     and retry the claim once.  Returns the newly-claimed indices or
     ``None`` (caller aborts / falls back).
+
+    ORDER MATTERS: the clock is bumped BEFORE revalidating, and the
+    revalidation runs at the OLD ``r_clock``; only on success does the
+    snapshot advance to the bumped value.  Any foreign commit that
+    completes after the bump publishes at >= the new snapshot and fails
+    the final commit's V_LT; any foreign commit before it is caught by
+    the revalidation here (its lock is still held, or its published
+    version is >= the old ``r_clock``).  Revalidate-then-bump had a
+    hole: a foreign commit landing entirely between the two steps
+    publishes at the PRE-bump clock, which the extended snapshot then
+    accepts as valid — a stale read the final revalidation can never
+    catch.
     """
     ver, own, meta = eng.locks.gather(idxs)
     foreign = ((meta & 1) != 0) & (own != d.tid)
     flagged = (meta & 2) != 0
-    if bool((foreign | flagged).any()) or not eng.revalidate(d):
+    if bool((foreign | flagged).any()):
         return None
-    d.r_clock = eng.clock.increment()
+    candidate = eng.clock.increment()
+    if not eng.revalidate(d):
+        return None
+    d.r_clock = candidate
     return eng.locks.try_lock_bulk(idxs, d.tid, max_version=d.r_clock)
 
 
@@ -173,15 +188,15 @@ def scatter_row(row, addrs, values):
 
     The write-back analogue of ``bulkread.gather_row`` for immutable
     (jax) rows: one ``ops.write_back`` launch when ``KERNEL_INTERPRET=0``,
-    the jnp scatter otherwise.  The single home of the bounds contract
-    on the kernel path (jax scatter silently DROPS an out-of-range
-    address where numpy raises).  Serves the MVStore commit's live-block
-    update.
+    the jnp scatter otherwise.  Enforces the shared bounds contract
+    (``check_addr_bounds``) on the kernel path, where jax scatter would
+    silently DROP an out-of-range address and wrap a negative one.
+    Serves the MVStore commit's live-block update.
     """
+    from repro.core.engine.arrayheap import check_addr_bounds
     from repro.kernels import ops
     a = np.asarray(addrs, np.int64)
-    if a.size and int(a.max(initial=0)) >= row.shape[0]:
-        raise IndexError(int(a.max()))
+    check_addr_bounds(a, row.shape[0])
     if not ops.INTERPRET:
         import jax.numpy as jnp
         return jnp.asarray(ops.write_back(row, a, values), row.dtype)

@@ -158,7 +158,11 @@ def rwmix_headline(rows: List[Dict]) -> Dict:
         "best_unversioned": best,
         "ratio_vs_best": ratio,
         "within_2x": bool(baselines) and ratio >= 0.5,
-        "violations": sum(r.get("violations", 0) for r in rows),
+        # the MULTIVERSE claim's own violations — a baseline backend's
+        # torn snapshot must not print as multiverse's; the CLI's global
+        # exit gate still sums every row's violations separately
+        "violations": sum(r.get("violations", 0) for r in rows
+                          if r.get("backend") == "multiverse"),
     }
 
 

@@ -101,37 +101,48 @@ def write_back(heap, addrs, values, tile: int = 512):
     kernel by padding with the one-past-the-end address (dropped by jax
     scatter semantics, so padding never clobbers a live word) and guards
     the int64 range per the ``version_select`` pattern: without jax x64
-    the kernel would silently truncate int64 payloads to int32, so such
-    batches take the numpy twin (``scatter_write.np_write_back``, exact
-    at any width) instead.  This is the commit-pipeline hot path on TPU
-    (KERNEL_INTERPRET=0); on CPU the engine scatters through the numpy
-    heap directly (``ArrayHeap.scatter``).
+    the kernel would silently truncate int64 payloads — AND addresses —
+    to int32, so such batches take the numpy twin
+    (``scatter_write.np_write_back``, exact at any width) instead; an
+    out-of-range address then raises there rather than truncating and
+    scattering to the wrong word.  This is the commit-pipeline hot path
+    on TPU (KERNEL_INTERPRET=0); on CPU the engine scatters through the
+    numpy heap directly (``ArrayHeap.scatter``).
     """
     import numpy as np
 
-    heap_np = np.asarray(heap)
     vals = np.asarray(values)
-    n = int(np.asarray(addrs).shape[0])
+    addrs_np = np.asarray(addrs, np.int64)
+    n = int(addrs_np.shape[0])
     if n == 0:
-        return np.array(heap_np, copy=True)
+        return np.array(np.asarray(heap), copy=True)
     lo, hi = -(1 << 31) + 1, (1 << 31) - 1
 
     def _beyond_int32(a):
         return a.dtype == np.int64 and a.size and \
             (int(a.max()) > hi or int(a.min()) < lo)
 
-    if _beyond_int32(vals) or _beyond_int32(heap_np):
-        return _sw.np_write_back(heap_np, np.asarray(addrs, np.int64),
-                                 vals)
+    # heap CONTENTS are scanned only for host-side heaps: a jax int64
+    # heap can only exist with x64 enabled, where ``jnp.asarray`` cannot
+    # truncate it — so the device hot path (``scatter_row``) never pays
+    # a device->host heap copy or an O(heap) reduction here.  The
+    # addr/value guards stay unconditional: their int32 casts below are
+    # explicit and would truncate regardless of x64.
+    if not isinstance(heap, (np.ndarray, jax.Array)):
+        heap = np.asarray(heap)            # lists/tuples: normalize once
+    heap_np = heap if isinstance(heap, np.ndarray) else None
+    if _beyond_int32(vals) or _beyond_int32(addrs_np) \
+            or (heap_np is not None and _beyond_int32(heap_np)):
+        return _sw.np_write_back(np.asarray(heap), addrs_np, vals)
     t = min(tile, 1 << (n - 1).bit_length())
     pad = (-n) % t
-    a = jnp.asarray(np.asarray(addrs), jnp.int32)
-    v = jnp.asarray(vals, jnp.asarray(heap).dtype)
+    hj = jnp.asarray(heap)
+    a = jnp.asarray(addrs_np, jnp.int32)
+    v = jnp.asarray(vals, hj.dtype)
     if pad:
-        a = jnp.pad(a, (0, pad), constant_values=heap_np.shape[0])
+        a = jnp.pad(a, (0, pad), constant_values=int(hj.shape[0]))
         v = jnp.pad(v, (0, pad))
-    out = _sw.scatter_write_flat(jnp.asarray(heap), a, v, tile=t,
-                                 interpret=INTERPRET)
+    out = _sw.scatter_write_flat(hj, a, v, tile=t, interpret=INTERPRET)
     return np.asarray(out)
 
 

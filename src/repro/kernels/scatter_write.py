@@ -40,10 +40,15 @@ def np_write_back(heap: np.ndarray, addrs: np.ndarray,
     here instead of letting an x64-less jax truncate them — the
     ``version_select`` guard pattern).  Addresses must be in range and
     unique; the in-place engine path (``ArrayHeap.scatter``) shares this
-    contract.
+    contract, and BOTH ends fail loudly — a negative address would wrap
+    under numpy fancy indexing and silently overwrite a word near the
+    end of the heap, so it raises like an out-of-range positive one.
     """
+    a = np.asarray(addrs)
+    if a.size and int(a.min(initial=0)) < 0:
+        raise IndexError(int(a.min()))
     out = np.array(heap, copy=True)
-    out[addrs] = values
+    out[a] = values
     return out
 
 

@@ -98,6 +98,42 @@ def test_ops_write_back_exact_beyond_int32():
     assert out2.tolist() == [big, 7, 2]
 
 
+def test_ops_write_back_rejects_beyond_int32_addresses():
+    """ADDRESSES past int32 must not truncate through the kernel's int32
+    cast and scatter to the wrong word (or vanish): such batches route
+    to the numpy twin, where an out-of-range address raises."""
+    from repro.kernels import ops
+
+    heap = np.arange(16, dtype=np.int64)
+    with pytest.raises(IndexError):
+        ops.write_back(heap, np.array([(1 << 31) + 5], np.int64),
+                       np.array([1], np.int64))
+
+
+def test_scatter_paths_reject_negative_addresses():
+    """A negative address wraps under numpy/jax fancy indexing and would
+    silently overwrite (or read) a word near the end of the heap; every
+    scatter/gather bulk path must raise instead, mutating nothing."""
+    import jax.numpy as jnp
+
+    from repro.core.engine.arrayheap import ArrayHeap
+    from repro.kernels.scatter_write import np_write_back
+
+    h = ArrayHeap(8)
+    h.alloc(8, 5)
+    with pytest.raises(IndexError):
+        h.scatter(np.array([2, -1]), np.array([9, 9]))
+    assert h[2] == 5 and h[7] == 5            # nothing written
+    with pytest.raises(IndexError):
+        h.gather(np.array([0, -3]))
+    with pytest.raises(IndexError):
+        np_write_back(np.zeros(8, np.int64), np.array([-3]),
+                      np.array([1]))
+    with pytest.raises(IndexError):
+        C.scatter_row(jnp.arange(8), np.array([-1]),
+                      np.array([1], np.int64))
+
+
 # ---------------------------------------------------------------------------
 # parity: bulk == scalar commit, all six backends
 # ---------------------------------------------------------------------------
@@ -284,6 +320,63 @@ def test_bulk_rollback_restores_undo_exactly(backend):
             list(range(N))
         assert len(raw.locks.held_by(0)) == 0
         assert raw.clock.load() > clock0           # deferred-clock bump
+    finally:
+        tm.stop()
+
+
+# ---------------------------------------------------------------------------
+# snapshot extension: bump BEFORE revalidate (serializability)
+# ---------------------------------------------------------------------------
+
+
+def test_extension_bumps_clock_before_revalidating():
+    """``extend_and_relock`` must advance the deferred clock FIRST and
+    revalidate at the old ``r_clock`` SECOND.  The reverse order has a
+    serializability hole: a foreign transaction that locks, overwrites a
+    read-set address, and releases at the pre-bump clock — entirely
+    between the revalidation and the bump — publishes at a version the
+    extended snapshot (``r_clock = C+1``) accepts under V_LT, so the
+    stale read is NEVER caught and the commit succeeds.  This test
+    injects exactly that foreign commit inside ``clock.increment`` (the
+    first instant of the extension under the fixed order, the unguarded
+    window under the old one) and requires the transaction to abort.
+    """
+    tm = _word_tm("dctl")
+    try:
+        raw = tm.raw
+        base = tm.alloc(N, 0)
+        x = tm.alloc(1, 42)
+        # leaves every batch word's version == the current clock, so the
+        # next bulk claim is version-blocked and takes the extension
+        run(tm, lambda tx: tx.write_bulk(range(base, base + N),
+                                         [1] * N), tid=0)
+        tx = tm.begin(0)
+        assert int(tx.read(x)) == 42           # x joins the read set
+        orig_inc = raw.clock.increment
+        x_idx = raw.locks.index(x)
+
+        def racing_increment():
+            # foreign tid 1: lock x's word, overwrite it, release at the
+            # CURRENT (pre-bump) clock — the deferred-clock publish
+            raw.clock.increment = orig_inc     # fire exactly once
+            st = raw.locks.read(x_idx)
+            assert raw.locks.try_lock(x_idx, st, tid=1)
+            raw.heap[x] = 99
+            raw.locks.unlock(x_idx, raw.clock.load())
+            return orig_inc()
+
+        raw.clock.increment = racing_increment
+        try:
+            with pytest.raises(AbortTx):
+                tx.write_bulk(range(base, base + N), [2] * N)
+                tm.commit(tx)
+            tm.abort(tx)
+        finally:
+            raw.clock.increment = orig_inc
+        # the foreign write survives; the doomed batch wrote nothing
+        assert int(tm.peek(x)) == 99
+        assert all(int(tm.peek(base + i)) == 1 for i in range(N))
+        assert len(raw.locks.held_by(0)) == 0
     finally:
         tm.stop()
 
