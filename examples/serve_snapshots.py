@@ -7,6 +7,13 @@ abort counter); once the store versions parameters (Mode U ring), every
 request is served from the newest committed snapshot without ever pausing
 training — the long-running-read guarantee of Multiverse.
 
+The server rides the ``repro.serve`` continuous-batching scheduler: all
+requests are submitted up front, the pump loop keeps the slot pool full
+(a freed slot is re-prefilled immediately while the other slots keep
+decoding), and each request records the snapshot clocks it was actually
+served at.  The final line prints the serving counters in the normalized
+TM stats schema — snapshot-read retries show up as ``aborts``.
+
     PYTHONPATH=src python examples/serve_snapshots.py --steps 30
 
 (For the word-granularity spelling of the same begin/commit vocabulary —
@@ -21,9 +28,10 @@ import time
 import numpy as np
 
 from repro.configs import MVStoreConfig, ShapeConfig, smoke_config
-from repro.core import mvcontroller, mvstore
+from repro.core import mvcontroller
 from repro.launch.serve import Server
 from repro.launch.train import Trainer
+from repro.serve import Outcome
 
 
 def main():
@@ -43,22 +51,26 @@ def main():
                     mvcfg=MVStoreConfig(mode="U"), controller=controller,
                     mv_state=trainer.state.mv)
 
-    served = {"n": 0, "clocks": []}
+    rng = np.random.default_rng(0)
+    reqs = [server.submit(rng.integers(0, cfg.vocab_size, size=(16,),
+                                       dtype=np.int32), max_new=8)
+            for _ in range(args.requests)]
     stop = threading.Event()
 
     def serve_loop():
-        rng = np.random.default_rng(0)
-        while not stop.is_set() and served["n"] < args.requests:
-            prompts = rng.integers(0, cfg.vocab_size, size=(2, 16),
-                                   dtype=np.int32)
+        reported = set()
+        while not stop.is_set() and any(
+                r.outcome is Outcome.PENDING for r in reqs):
             server.mv_state = trainer.state.mv       # follow the trainer
-            out = server.serve_batch(prompts, max_new=8)
-            served["n"] += 1
-            served["clocks"].append(int(trainer.state.mv.clock))
-            print(f"  [server] request {served['n']} generated "
-                  f"{out.shape[1]} tokens at clock "
-                  f"{served['clocks'][-1]} (aborts so far: "
-                  f"{server.aborts})", flush=True)
+            if not server.pump():
+                time.sleep(1e-4)
+            for r in reqs:
+                if r.outcome is Outcome.COMPLETED and r.rid not in reported:
+                    reported.add(r.rid)
+                    print(f"  [server] request {r.rid} generated "
+                          f"{len(r.tokens)} tokens at clocks "
+                          f"{r.served_clocks[0]}..{r.served_clocks[-1]} "
+                          f"(aborts so far: {server.aborts})", flush=True)
 
     th = threading.Thread(target=serve_loop)
     th.start()
@@ -70,12 +82,17 @@ def main():
             print(f"[trainer] step {s+1} loss={float(metrics['loss']):.4f}"
                   f" clock={int(state.mv.clock)} "
                   f"rings={len(state.mv.ring)}", flush=True)
+    th.join(timeout=120.0)
     stop.set()
     th.join()
     controller.stop()
-    print(f"done: {args.steps} training steps interleaved with "
-          f"{served['n']} served requests at clocks {served['clocks']}; "
-          f"server aborts={server.aborts}")
+    done = sum(r.outcome is Outcome.COMPLETED for r in reqs)
+    m = server.metrics
+    print(f"done: {args.steps} training steps interleaved with {done} "
+          f"served requests; p50={m.latency.percentile(50) * 1e3:.0f}ms "
+          f"p99={m.latency.percentile(99) * 1e3:.0f}ms "
+          f"occupancy={m.occupancy:.2f}")
+    print(f"stats: {server.stats()}")
 
 
 if __name__ == "__main__":

@@ -150,7 +150,14 @@ class DCTLPolicy(PolicyBase):
         else:
             st = eng.locks.read(idx)
             if not eng.locks.validate(st, d.r_clock, d.tid):
-                eng.abort_txn(d)
+                # version-blocked but conflict-free word: snapshot-extend
+                # past the deferred clock instead of aborting (the abort
+                # would replay to exactly this state — commit.py note)
+                if st.locked or st.flag or not C.extend_snapshot(eng, d):
+                    eng.abort_txn(d)
+                st = eng.locks.read(idx)
+                if not eng.locks.validate(st, d.r_clock, d.tid):
+                    eng.abort_txn(d)
             if not eng.locks.try_lock(idx, st, d.tid):
                 eng.abort_txn(d)
             d.locked_idxs.add(idx)

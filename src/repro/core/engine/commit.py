@@ -144,6 +144,32 @@ def extend_and_relock(eng, d, idxs: np.ndarray):
     return eng.locks.try_lock_bulk(idxs, d.tid, max_version=d.r_clock)
 
 
+def extend_snapshot(eng, d) -> bool:
+    """Scalar twin of ``extend_and_relock``'s clock step.
+
+    The scalar encounter-time write hits the same deferred-clock
+    self-conflict as the bulk claim: a writer's own previous commit left
+    the lock word at version == the current clock, so ``validate``
+    (``version < r_clock``) fails with nothing actually conflicting, and
+    back-to-back commits eat one abort each.  The caller has already
+    established that the word is neither foreign-locked nor flagged;
+    this advances the snapshot and revalidates, after which the caller
+    re-reads the word and retries the claim once.
+
+    Same ordering pin as the bulk path: the clock is bumped BEFORE
+    revalidating (which runs at the OLD ``r_clock``), and only on
+    success does the snapshot advance — a foreign commit racing the
+    extension either publishes at >= the new snapshot (caught by the
+    final commit's V_LT) or is caught by the revalidation here.
+    Returns True iff the snapshot advanced; False means abort.
+    """
+    candidate = eng.clock.increment()
+    if not eng.revalidate(d):
+        return False
+    d.r_clock = candidate
+    return True
+
+
 def merge_undo(eng, d, addrs: np.ndarray) -> None:
     """Record pre-images for a write batch in one heap gather.
 

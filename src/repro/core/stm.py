@@ -244,7 +244,14 @@ class MultiversePolicy(PolicyBase):
         idx = eng.locks.index(addr)
         st = eng.locks.read_wait_unflagged(idx)
         if not eng.locks.validate(st, d.r_clock, d.tid):
-            eng.abort_txn(d)
+            # version-blocked but conflict-free word: snapshot-extend
+            # past the deferred clock instead of aborting (the abort
+            # would replay to exactly this state — commit.py note)
+            if st.locked or not C.extend_snapshot(eng, d):
+                eng.abort_txn(d)
+            st = eng.locks.read_wait_unflagged(idx)
+            if not eng.locks.validate(st, d.r_clock, d.tid):
+                eng.abort_txn(d)
         if not eng.locks.try_lock(idx, st, d.tid):
             eng.abort_txn(d)
         d.locked_idxs.add(idx)

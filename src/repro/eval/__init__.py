@@ -13,7 +13,7 @@ interpreter:
     rows, path = run_eval("longread", seed=3)
 
 Workload families live in ``workloads.py`` (longread / rwmix /
-structrq), the thread/warmup machinery in ``driver.py``, and the
+structrq / serving), the thread/warmup machinery in ``driver.py``, and the
 normalized ``{meta, rows}`` results schema in ``results.py`` — shared
 with ``benchmarks/run.py`` so everything under ``results/`` carries the
 same ``{git_sha, seed, backends, mode_transitions}`` meta block.
@@ -22,6 +22,7 @@ See BENCHMARKS.md for how each experiment maps to a paper figure.
 from repro.eval.driver import (  # noqa: F401
     longread_headline,
     run_eval,
+    serving_headline,
     time_trial,
 )
 from repro.eval.results import save_results  # noqa: F401
@@ -34,5 +35,6 @@ from repro.eval.workloads import (  # noqa: F401
 
 __all__ = [
     "DEFAULT_BACKENDS", "TrialSpec", "UNVERSIONED", "WORKLOADS",
-    "longread_headline", "run_eval", "save_results", "time_trial",
+    "longread_headline", "run_eval", "save_results", "serving_headline",
+    "time_trial",
 ]

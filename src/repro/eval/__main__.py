@@ -16,7 +16,7 @@ import argparse
 import sys
 
 from repro.eval.driver import longread_headline, run_eval, \
-    rwmix_headline, structrq_headline
+    rwmix_headline, serving_headline, structrq_headline
 from repro.eval.workloads import WORKLOADS
 
 
@@ -35,6 +35,11 @@ def _fmt_row(row: dict) -> str:
                  f"failed={row['failed_updates']:4d} "
                  f"checks/s={row['checks_per_sec']:7.1f} "
                  f"violations={row['violations']:3d}")
+    elif "p99_ms" in row:
+        extra = (f"qps={row['qps']:6.1f}/{row['target_qps']:<4.0f}"
+                 f"p50={row['p50_ms']:6.1f}ms p99={row['p99_ms']:7.1f}ms "
+                 f"shed={row['shed']:3d} failed={row['failed_aborts']:3d} "
+                 f"aborts={row['snapshot_aborts']:4d}")
     elif "ops_per_sec" in row:
         extra = (f"ops/s={row['ops_per_sec']:8.0f} "
                  f"failed={row['failed_ops']:4d}")
@@ -96,6 +101,23 @@ def main(argv=None) -> int:
                   f"{h['multiverse_updates_per_sec']:.1f} updates/s "
                   f"({h['ratio_vs_best']:.2f}x of best) — {verdict} "
                   f"[{base}] violations={h['violations']}")
+    if args.workload == "serving":
+        h = serving_headline(rows)
+        if h:
+            verdict = ("SUSTAINS target QPS" if h["multiverse_sustains"]
+                       else "does NOT sustain target QPS")
+            print(f"\nheadline @ qps{h['target_qps']:.0f}: multiverse="
+                  f"{h['multiverse_qps']:.1f} qps "
+                  f"p99={h['multiverse_p99_ms']:.1f}ms {verdict} "
+                  f"(violations={h['violations']})")
+            for b, d in sorted(h["baselines"].items()):
+                tag = "DEGRADED" if d["degraded"] else "not degraded"
+                print(f"  vs {b:<12s} p99={d['p99_ms']:8.1f}ms "
+                      f"({d['p99_ratio']:.2f}x) shed={d['shed']} "
+                      f"failed={d['failed_aborts']} "
+                      f"aborts={d['snapshot_aborts']} "
+                      f"mixed-versions={d['mixed_version_requests']} "
+                      f"-> {tag}")
     if args.workload == "structrq":
         h = structrq_headline(rows)
         for struct, d in sorted(h.items()):

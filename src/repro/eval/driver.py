@@ -32,7 +32,7 @@ from repro.eval.workloads import (
 )
 
 __all__ = ["run_eval", "time_trial", "longread_headline",
-           "rwmix_headline", "structrq_headline"]
+           "rwmix_headline", "structrq_headline", "serving_headline"]
 
 
 def time_trial(workers: Sequence[Callable], spec: TrialSpec,
@@ -163,6 +163,62 @@ def rwmix_headline(rows: List[Dict]) -> Dict:
         # exit gate still sums every row's violations separately
         "violations": sum(r.get("violations", 0) for r in rows
                           if r.get("backend") == "multiverse"),
+    }
+
+
+def serving_headline(rows: List[Dict]) -> Dict:
+    """The SERVING claim, extracted from serving rows.
+
+    At the HIGHEST target QPS: does multiverse (Mode-U ring) sustain
+    the offered load — >=95% of offered requests completed, nothing
+    shed, zero torn reads — while at least one baseline policy shows
+    measurably degraded latency (p99 or p50 inflated vs multiverse)
+    or abort-driven shedding (requests failed after repeated Mode-Q
+    snapshot aborts, or shed by admission control because aborts ate
+    the slot throughput)?  NaN percentiles (a baseline that starved
+    outright, completing nothing) count as degraded via its
+    failed/shed counters, never as a pass.
+    """
+    targets = {r["target_qps"] for r in rows if "target_qps" in r}
+    if not targets:
+        return {}
+    top = max(targets)
+    at = {r["backend"]: r for r in rows if r.get("target_qps") == top}
+    mv = at.get("multiverse")
+    if mv is None:
+        return {}
+    offered = max(mv.get("offered", 0), 1)
+    sustained = (mv["completed"] >= 0.95 * offered
+                 and mv["shed"] == 0 and mv["failed_aborts"] == 0
+                 and mv["violations"] == 0)
+    baselines: Dict[str, Dict] = {}
+    for b, r in at.items():
+        if b == "multiverse":
+            continue
+        p99_ratio = (r["p99_ms"] / mv["p99_ms"]
+                     if mv["p99_ms"] > 0 else float("nan"))
+        p50_ratio = (r["p50_ms"] / mv["p50_ms"]
+                     if mv["p50_ms"] > 0 else float("nan"))
+        degraded = bool(p99_ratio >= 1.25 or p50_ratio >= 1.2
+                        or r["failed_aborts"] > 0 or r["shed"] > 0)
+        baselines[b] = {
+            "qps": r["qps"], "p50_ms": r["p50_ms"],
+            "p99_ms": r["p99_ms"], "p99_ratio": p99_ratio,
+            "snapshot_aborts": r["snapshot_aborts"],
+            "failed_aborts": r["failed_aborts"], "shed": r["shed"],
+            "mixed_version_requests": r["mixed_version_requests"],
+            "degraded": degraded,
+        }
+    return {
+        "target_qps": top,
+        "multiverse_qps": mv["qps"],
+        "multiverse_p50_ms": mv["p50_ms"],
+        "multiverse_p99_ms": mv["p99_ms"],
+        "multiverse_sustains": sustained,
+        "violations": mv["violations"],
+        "baselines": baselines,
+        "baseline_degraded": any(d["degraded"]
+                                 for d in baselines.values()),
     }
 
 

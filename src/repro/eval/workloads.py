@@ -22,6 +22,19 @@ Three families, all runnable on any registered backend through one driver
     update-heavy regime where unversioned TMs are supposed to win; the
     headline asks whether Multiverse's update throughput stays within
     2x of the best unversioned baseline.
+  * ``serving``   — the SERVING headline (the paper's production
+    scenario): the ``repro.serve`` subsystem answers open-loop request
+    traffic from MVStore parameter snapshots while a trainer thread
+    commits every few milliseconds.  "Backends" here are serving
+    policies over the same store — ``multiverse`` (Mode-U ring,
+    per-request pinned clocks), ``modeq`` (Mode-Q validation: a commit
+    since pin aborts the request, which restarts at a fresh clock) and
+    ``unversioned`` (always read live, never abort — requests silently
+    mix parameter versions).  Rows carry qps + p50/p95/p99 latency +
+    shed/abort counts from the serving telemetry; the headline asks
+    whether Mode U sustains target QPS with flat p99 and zero torn
+    reads while Mode Q's abort/restart path inflates tail latency or
+    sheds outright.
   * ``structrq``  — data-structure long reads over ``repro.structs``
     (hashmap / extbst / abtree): reader threads run whole-structure
     range queries (size queries on the hashmap) while a dedicated
@@ -450,5 +463,77 @@ class StructRQWorkload:
         }
 
 
+# ---------------------------------------------------------------------------
+# serving: open-loop request traffic from snapshots under live commits
+# ---------------------------------------------------------------------------
+
+
+class ServingWorkload:
+    """Continuous-batching service vs serving-policy baselines.
+
+    Each trial runs ``repro.serve.SnapshotService.synthetic`` — a
+    committing trainer thread + the slot scheduler answering open-loop
+    traffic — under one serving policy.  The trial's knobs pin the
+    starvation geometry: the commit interval sits just above the
+    request span, so Mode-Q requests usually meet a commit mid-flight
+    and pay the abort/restart tax while Mode-U requests ride the ring.
+    Unlike the word-level workloads there are no worker threads to
+    time here (the service owns its loop), so ``run_trial`` does not
+    go through ``time_trial``.
+    """
+
+    name = "serving"
+    metric = "p99_ms"
+    default_backends = ("multiverse", "modeq", "unversioned")
+    POLICY = {"multiverse": "U", "modeq": "Q", "unversioned": "live"}
+
+    def variants(self, quick: bool = False) -> List[TrialSpec]:
+        # commit interval ABOVE the ~20ms request span = the one-abort
+        # latency-tax regime; BELOW it = the starvation regime where
+        # Mode-Q requests abort until admission fails them (see
+        # serve/service.py).  The headline reads the HIGHEST-qps point,
+        # so quick and full both end on the starvation geometry — the
+        # unambiguous side of the claim.
+        if quick:
+            points = ((50.0, 1.2, 0.012),)
+        else:
+            points = ((60.0, 2.5, 0.028), (120.0, 2.5, 0.012))
+        return [TrialSpec(
+            workload=self.name, variant=f"qps{int(qps)}", n_readers=4,
+            n_updaters=1, duration_s=dur, warmup_s=0.0,
+            params=dict(target_qps=qps, n_slots=4, max_new=12,
+                        work_s=0.0015, commit_interval_s=ci,
+                        queue_depth=64, wait_budget_s=0.5,
+                        max_request_aborts=8),
+        ) for qps, dur, ci in points]
+
+    def run_trial(self, backend: str, spec: TrialSpec, seed: int) -> Dict:
+        from repro.serve import ServiceConfig, SnapshotService
+        try:
+            policy = self.POLICY[backend]
+        except KeyError:
+            raise ValueError(
+                f"serving backend must be one of "
+                f"{sorted(self.POLICY)}, got {backend!r}") from None
+        p = spec.params
+        cfg = ServiceConfig(
+            mode=policy, n_slots=p["n_slots"], max_new=p["max_new"],
+            queue_depth=p["queue_depth"],
+            wait_budget_s=p["wait_budget_s"],
+            max_request_aborts=p["max_request_aborts"],
+            target_qps=p["target_qps"], duration_s=spec.duration_s,
+            commit_interval_s=p["commit_interval_s"],
+            work_s=p["work_s"], seed=seed)
+        svc = SnapshotService.synthetic(cfg)
+        row = svc.run_open_loop()
+        row["stm_stats"]["backend"] = backend
+        row.update({
+            "workload": self.name, "backend": backend, "tm": backend,
+            "variant": spec.variant, "seed": seed,
+            "mode_transitions": 0,
+        })
+        return row
+
+
 WORKLOADS = {w.name: w for w in (LongReadWorkload(), RWMixWorkload(),
-                                 StructRQWorkload())}
+                                 StructRQWorkload(), ServingWorkload())}

@@ -1,0 +1,33 @@
+"""Snapshot-serving subsystem: continuous batching over MVStore snapshots.
+
+The production shape of the paper's long-running-read claim: a request
+queue with admission control (`queue.py`), a continuous-batching
+scheduler that keeps a fixed slot pool full and resolves every decode
+step at a per-request snapshot clock through ``mv_snapshot``
+(`scheduler.py`), streaming tail-latency telemetry (`metrics.py`), and
+the service loop + open-loop load generator tying them together
+(`service.py`).
+
+    from repro.serve import SnapshotService, ServiceConfig
+    svc = SnapshotService.synthetic(ServiceConfig(mode="U"))
+    summary = svc.run_open_loop()
+
+``python -m repro.serve --duration 2 --target-qps 50`` runs the same
+loop from the CLI; the ``serving`` workload in ``repro.eval`` drives it
+across the multiverse / Mode-Q / unversioned serving policies.
+"""
+from repro.serve.metrics import PercentileReservoir, ServeMetrics
+from repro.serve.queue import Admission, Outcome, Request, RequestQueue
+from repro.serve.scheduler import (ContinuousBatchingScheduler, SlotExecutor,
+                                   StepResult)
+from repro.serve.service import (OpenLoopLoadGen, ServiceConfig,
+                                 SnapshotService, StoreExecutor,
+                                 SyntheticTrainer)
+
+__all__ = [
+    "Admission", "Outcome", "Request", "RequestQueue",
+    "PercentileReservoir", "ServeMetrics",
+    "ContinuousBatchingScheduler", "SlotExecutor", "StepResult",
+    "OpenLoopLoadGen", "ServiceConfig", "SnapshotService",
+    "StoreExecutor", "SyntheticTrainer",
+]

@@ -1,0 +1,5 @@
+import sys
+
+from repro.serve.service import main
+
+sys.exit(main())

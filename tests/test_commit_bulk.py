@@ -381,6 +381,82 @@ def test_extension_bumps_clock_before_revalidating():
         tm.stop()
 
 
+@pytest.mark.parametrize("backend", ("dctl", "tinystm", "multiverse"))
+def test_scalar_write_extends_past_own_commit(backend):
+    """Back-to-back SCALAR write transactions must not abort on their own
+    previous commit.  Under the deferred clock a commit leaves its lock
+    words at version == the current clock, so the next transaction's
+    encounter-time validate (``version < r_clock``) fails with nothing
+    conflicting; the scalar path used to eat one abort-and-replay per
+    commit where the bulk path snapshot-extends.  Single-attempt
+    transactions (no retry loop) pin that the extension now serves the
+    scalar path too — any abort surfaces as an uncaught AbortTx."""
+    tm = _word_tm(backend)
+    try:
+        raw = tm.raw
+        a = tm.alloc(1, 0)
+        b = tm.alloc(1, 0)
+        for k, addr in enumerate((a, b, a), start=1):
+            tx = tm.begin(0)
+            tx.write(addr, k)               # must not raise AbortTx
+            tm.commit(tx)
+        assert int(tm.peek(a)) == 3
+        assert int(tm.peek(b)) == 2
+        assert len(raw.locks.held_by(0)) == 0
+    finally:
+        tm.stop()
+
+
+def test_scalar_extension_bumps_clock_before_revalidating():
+    """Scalar twin of ``test_extension_bumps_clock_before_revalidating``:
+    ``extend_snapshot`` must advance the deferred clock FIRST and
+    revalidate at the old ``r_clock`` SECOND, for exactly the bulk
+    path's reason — a foreign commit landing entirely between a
+    revalidate-then-bump pair publishes at the pre-bump clock, which
+    the extended snapshot then accepts as valid forever.  The foreign
+    commit is injected inside ``clock.increment`` (the first instant of
+    the extension under the fixed order) and must force an abort."""
+    tm = _word_tm("dctl")
+    try:
+        raw = tm.raw
+        w = tm.alloc(1, 0)
+        x = tm.alloc(1, 42)
+        # distinct lock words, so w's claim cannot see x's foreign lock
+        assert raw.locks.index(w) != raw.locks.index(x)
+        # leaves w's version == the current clock, so the next scalar
+        # write is version-blocked and takes the extension
+        run(tm, lambda tx: tx.write(w, 1), tid=0)
+        tx = tm.begin(0)
+        assert int(tx.read(x)) == 42           # x joins the read set
+        orig_inc = raw.clock.increment
+        x_idx = raw.locks.index(x)
+
+        def racing_increment():
+            # foreign tid 1: lock x's word, overwrite it, release at the
+            # CURRENT (pre-bump) clock — the deferred-clock publish
+            raw.clock.increment = orig_inc     # fire exactly once
+            st = raw.locks.read(x_idx)
+            assert raw.locks.try_lock(x_idx, st, tid=1)
+            raw.heap[x] = 99
+            raw.locks.unlock(x_idx, raw.clock.load())
+            return orig_inc()
+
+        raw.clock.increment = racing_increment
+        try:
+            with pytest.raises(AbortTx):
+                tx.write(w, 2)
+                tm.commit(tx)
+            tm.abort(tx)
+        finally:
+            raw.clock.increment = orig_inc
+        # the foreign write survives; the doomed write landed nothing
+        assert int(tm.peek(x)) == 99
+        assert int(tm.peek(w)) == 1
+        assert len(raw.locks.held_by(0)) == 0
+    finally:
+        tm.stop()
+
+
 # ---------------------------------------------------------------------------
 # lock-index normalization (the release_locks fix)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,322 @@
+"""The snapshot-serving subsystem (repro.serve).
+
+Layers under test:
+
+  * queue: admission control admits under the depth bound, sheds typed
+    outcomes (depth / wait budget / closed) and keeps exact counters;
+  * reservoir: streaming percentiles are EXACT vs numpy while the
+    sample fits, and sane (bounded, deterministic) once it spills;
+  * scheduler: continuous batching proper — a freed slot is refilled
+    from the queue while the other slot's request keeps decoding (no
+    whole-batch drain), and a Mode-Q abort re-pins / eventually fails
+    the request (abort-driven shedding);
+  * service: the closed-loop occupancy floor the CI smoke job asserts,
+    and the e2e open-loop smoke — a Mode-U service under a live
+    committing trainer completes requests with ZERO torn reads and
+    zero snapshot aborts.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import (Admission, ContinuousBatchingScheduler, Outcome,
+                         PercentileReservoir, Request, RequestQueue,
+                         ServeMetrics, ServiceConfig, SnapshotService,
+                         StepResult, StoreExecutor, SyntheticTrainer)
+
+
+# ---------------------------------------------------------------------------
+# queue admission control
+# ---------------------------------------------------------------------------
+
+
+def test_queue_admits_then_sheds_on_depth():
+    q = RequestQueue(max_depth=2)
+    assert q.offer(Request(1)) is Admission.ADMITTED
+    assert q.offer(Request(2)) is Admission.ADMITTED
+    a = q.offer(Request(3))
+    assert a is Admission.SHED_DEPTH and a.shed
+    assert q.depth == 2
+    assert q.counters == {"offered": 3, "admitted": 2, "shed_depth": 1,
+                          "shed_wait": 0, "closed": 0}
+
+
+def test_queue_sheds_on_wait_budget():
+    # 4 queued * 1s est / 1 server = 4s estimated wait >> 0.1s budget
+    q = RequestQueue(max_depth=64, wait_budget_s=0.1, est_service_s=1.0)
+    assert q.offer(Request(1)) is Admission.ADMITTED  # empty: zero wait
+    for rid in (2, 3, 4, 5):
+        q.offer(Request(rid))
+    assert q.offer(Request(6)) is Admission.SHED_WAIT
+    # scheduler feedback drives the estimate down; admission recovers
+    for _ in range(60):
+        q.note_service_time(0.001)
+    assert q.offer(Request(7)) is Admission.ADMITTED
+
+
+def test_queue_wait_estimate_scales_with_servers():
+    one = RequestQueue(max_depth=64, est_service_s=1.0, n_servers=1)
+    four = RequestQueue(max_depth=64, est_service_s=1.0, n_servers=4)
+    for q in (one, four):
+        for rid in range(4):
+            q.offer(Request(rid))
+    assert one.estimated_wait_s() == pytest.approx(4.0)
+    assert four.estimated_wait_s() == pytest.approx(1.0)
+
+
+def test_queue_close_stops_admission_but_drains():
+    q = RequestQueue()
+    q.offer(Request(1))
+    q.close()
+    assert q.offer(Request(2)) is Admission.CLOSED
+    assert q.counters["closed"] == 1
+    req = q.get()
+    assert req is not None and req.rid == 1   # queued work still drains
+    assert q.get() is None
+
+
+def test_queue_stamps_arrival_and_dequeue_times():
+    q = RequestQueue()
+    req = Request(1)
+    q.offer(req, now=10.0)
+    assert req.t_arrival == 10.0 and req.t_admitted == 10.0
+    out = q.get(now=10.5)
+    assert out is req and req.t_dequeued == 10.5
+    assert req.queue_wait_s == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# percentile reservoir
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_exact_below_capacity():
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(0.0, 1.0, size=1000)
+    r = PercentileReservoir(capacity=4096, seed=0)
+    for x in xs:
+        r.add(float(x))
+    for q in (50, 90, 95, 99):
+        assert r.percentile(q) == pytest.approx(
+            float(np.percentile(xs, q)), rel=1e-12)
+    assert r.mean == pytest.approx(float(xs.mean()), rel=1e-12)
+
+
+def test_reservoir_estimates_past_capacity():
+    # uniform stream, tiny reservoir: estimates stay in-range and the
+    # median lands near the true median (loose — it is a sample)
+    rng = np.random.default_rng(5)
+    xs = rng.uniform(0.0, 100.0, size=20000)
+    r = PercentileReservoir(capacity=512, seed=1)
+    for x in xs:
+        r.add(float(x))
+    assert r.count == 20000
+    p50 = r.percentile(50)
+    assert 0.0 <= p50 <= 100.0
+    assert abs(p50 - 50.0) < 15.0
+    # deterministic under the same seed
+    r2 = PercentileReservoir(capacity=512, seed=1)
+    for x in xs:
+        r2.add(float(x))
+    assert r2.percentile(50) == p50
+
+
+def test_reservoir_empty_is_nan():
+    r = PercentileReservoir()
+    assert np.isnan(r.percentile(99)) and np.isnan(r.mean)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching scheduler (fake executor: no store, no model)
+# ---------------------------------------------------------------------------
+
+
+class FakeExecutor:
+    """Deterministic SlotExecutor: token = request id, never aborts
+    unless an rid is in ``abort_rids`` at decode time."""
+
+    def __init__(self, n_slots=2, clock=0):
+        self.n_slots = n_slots
+        self.clock = clock
+        self.abort_rids = set()
+        self.prefills = []            # (rid, slot, clock) in call order
+        self.decode_calls = []        # list of (slots, clocks) per step
+
+    def current_clock(self):
+        return self.clock
+
+    def prefill(self, slot, req, clock):
+        self.prefills.append((req.rid, slot, clock))
+        return StepResult(True, clock, token=req.rid)
+
+    def decode(self, slots, clocks):
+        self.decode_calls.append((list(slots), list(clocks)))
+        return [StepResult(self._slot_rid(s) not in self.abort_rids,
+                           c, token=self._slot_rid(s))
+                for s, c in zip(slots, clocks)]
+
+    def _slot_rid(self, slot):
+        return self._sched.slots[slot].req.rid
+
+
+def _make_sched(n_slots=2, max_request_aborts=3):
+    q = RequestQueue(max_depth=64)
+    ex = FakeExecutor(n_slots=n_slots)
+    sched = ContinuousBatchingScheduler(
+        q, ex, ServeMetrics(), max_request_aborts=max_request_aborts)
+    ex._sched = sched
+    return q, ex, sched
+
+
+def test_scheduler_refills_freed_slot_without_draining_batch():
+    """The continuous-batching property: request 1 (short) finishes,
+    its slot takes request 3 from the queue on the very next step,
+    while request 2 (long) keeps decoding uninterrupted."""
+    q, ex, sched = _make_sched(n_slots=2)
+    r1 = Request(1, max_new=2)
+    r2 = Request(2, max_new=6)
+    r3 = Request(3, max_new=2)
+    for r in (r1, r2, r3):
+        q.offer(r)
+    sched.step()                      # prefill r1+r2 (r3 queued), decode
+    assert r1.outcome is Outcome.COMPLETED      # 2 tokens: prefill+decode
+    assert r2.outcome is Outcome.PENDING
+    sched.step()                      # r3 prefills INTO r1's freed slot
+    assert (3, 0, 0) in ex.prefills   # rid 3, slot 0
+    assert r2.outcome is Outcome.PENDING        # r2 never drained
+    # r2's decode stream never paused: it is in every decode call
+    assert all(1 in slots for slots, _ in ex.decode_calls)
+    while r2.outcome is Outcome.PENDING or r3.outcome is Outcome.PENDING:
+        sched.step()
+    assert r2.tokens == [2] * 6 and r3.tokens == [3] * 2
+    assert sched.metrics.completed == 3
+
+
+def test_scheduler_pins_clock_at_prefill():
+    q, ex, sched = _make_sched(n_slots=1)
+    r1 = Request(1, max_new=3)
+    q.offer(r1)
+    ex.clock = 7
+    sched.step()
+    ex.clock = 9                      # store moves on; pin must not
+    sched.step()
+    assert r1.pinned_clock == 7
+    assert ex.decode_calls[-1][1] == [7]
+    assert r1.served_clocks == [7, 7, 7][: len(r1.served_clocks)]
+
+
+def test_scheduler_abort_repins_then_fails_request():
+    """A snapshot abort discards progress and re-pins at a fresh clock;
+    max_request_aborts converts persistent aborts into a typed failure
+    (abort-driven shedding)."""
+    q, ex, sched = _make_sched(n_slots=1, max_request_aborts=2)
+    r1 = Request(1, max_new=4)
+    q.offer(r1)
+    ex.clock = 5
+    sched.step()                      # prefill at 5, decode ok
+    assert r1.tokens == [1, 1]
+    ex.abort_rids.add(1)
+    ex.clock = 6
+    sched.step()                      # decode aborts: progress discarded
+    assert r1.aborts == 1 and r1.tokens == [] and r1.pinned_clock == -1
+    sched.step()                      # re-prefill at 6, decode aborts again
+    assert r1.pinned_clock == 6
+    assert r1.outcome is Outcome.FAILED_ABORTS
+    assert sched.metrics.failed_aborts == 1
+    assert sched.metrics.snapshot_aborts == 2
+    assert sched.slots == [None]
+
+
+def test_scheduler_drain_finishes_inflight_and_closes_queue():
+    q, ex, sched = _make_sched(n_slots=2)
+    reqs = [Request(i, max_new=3) for i in range(1, 6)]
+    for r in reqs:
+        q.offer(r)
+    assert sched.run_until_drained(timeout_s=5.0)
+    assert all(r.outcome is Outcome.COMPLETED for r in reqs)
+    assert q.offer(Request(99)) is Admission.CLOSED
+
+
+# ---------------------------------------------------------------------------
+# service: occupancy floor + e2e under a committing trainer
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_occupancy_floor():
+    """With a 4x-slot backlog the scheduler must keep the slot pool
+    busy: occupancy (active slot-steps / total slot-steps) stays above
+    0.5.  The CI smoke job runs this as its scheduler-health assertion."""
+    cfg = ServiceConfig(mode="U", n_slots=4, max_new=6, work_s=0.0,
+                        commit_interval_s=3600.0)  # no commits mid-run
+    svc = SnapshotService.synthetic(cfg)
+    row = svc.serve_requests([None] * (4 * cfg.n_slots))
+    assert row["completed"] == 16
+    assert row["occupancy"] >= 0.5
+    assert row["violations"] == 0
+
+
+def test_e2e_mode_u_zero_torn_reads_under_live_commits():
+    """The subsystem's reason to exist: a Mode-U service completes N
+    requests while the trainer commits every few ms — no torn reads,
+    no snapshot aborts, every request served from one pinned version."""
+    cfg = ServiceConfig(mode="U", n_slots=4, max_new=6, work_s=0.0005,
+                        commit_interval_s=0.002, ring_slots=8,
+                        target_qps=200.0, duration_s=0.4)
+    svc = SnapshotService.synthetic(cfg)
+    row = svc.run_open_loop()
+    assert row["drained"]
+    assert row["completed"] >= 10
+    assert row["violations"] == 0
+    assert row["snapshot_aborts"] == 0 and row["failed_aborts"] == 0
+    assert row["trainer_commits"] > 0
+    assert row["stm_stats"]["commits"] == row["completed"]
+
+
+def test_mode_q_commit_between_steps_aborts_deterministically():
+    """Deterministic Mode-Q abort (no thread races): drive the scheduler
+    by hand and commit between decode steps — the pinned snapshot fails
+    validation and the request restarts at the new clock."""
+    trainer = SyntheticTrainer(mode="Q", commit_interval_s=3600.0)
+    metrics = ServeMetrics()
+    ex = StoreExecutor(lambda: trainer.state, policy="Q", n_slots=1,
+                       work_s=0.0, metrics=metrics)
+    q = RequestQueue()
+    sched = ContinuousBatchingScheduler(q, ex, metrics,
+                                        max_request_aborts=8)
+    r = Request(1, max_new=4)
+    q.offer(r)
+    sched.step()                      # prefill at clock 0, one decode ok
+    pinned0 = r.pinned_clock
+    trainer.commit_once()             # invalidates the pinned snapshot
+    sched.step()                      # decode at stale pin: abort
+    assert r.aborts == 1 and r.pinned_clock == -1
+    sched.step()                      # re-pin at the new clock
+    assert r.pinned_clock == int(trainer.state.clock) > pinned0
+    while r.outcome is Outcome.PENDING:
+        sched.step()
+    assert r.outcome is Outcome.COMPLETED
+    assert metrics.snapshot_aborts == 1
+
+
+def test_unversioned_baseline_mixes_versions_across_steps():
+    """The 'live' policy never aborts — it silently serves different
+    parameter versions across one request's steps (the failure mode
+    ``mixed_version_requests`` reports)."""
+    trainer = SyntheticTrainer(mode="U", commit_interval_s=3600.0)
+    metrics = ServeMetrics()
+    ex = StoreExecutor(lambda: trainer.state, policy="live", n_slots=1,
+                       work_s=0.0, metrics=metrics)
+    q = RequestQueue()
+    sched = ContinuousBatchingScheduler(q, ex, metrics)
+    r = Request(1, max_new=3)
+    q.offer(r)
+    sched.step()
+    trainer.commit_once()
+    while r.outcome is Outcome.PENDING:
+        sched.step()
+    assert r.outcome is Outcome.COMPLETED
+    assert r.mixed_versions
+    assert metrics.mixed_version_requests == 1
+    assert metrics.snapshot_aborts == 0
