@@ -265,6 +265,83 @@ def structrq_microbench(n_keys=4096, n_buckets=1 << 10, repeats=3):
              "speedup": t_scalar / max(t_frontier, 1e-12)}]
 
 
+def groupcommit_microbench(n_txns=(2, 4, 8), words=256, repeats=9,
+                           backend="tl2"):
+    """Group commit: N solo commit pipelines vs ONE fused group window.
+
+    N ready transactions each buffer a disjoint ``words``-word block
+    (consecutive addresses — collision-free under the Fibonacci lock
+    hash at ``lock_table_bits=16``, so the batcher forms one group).
+    Each measurement builds the same N write sets twice on the SAME
+    heap and times only the commit phase: the solo loop (N full batched
+    pipelines, N clock ticks) vs ``CommitBatcher.commit_all`` (one
+    striped verdict+claim window, ONE clock tick, one scatter, one
+    release sweep).  Asserts every commit succeeded, that the batcher
+    really grouped, and that both paths leave the heap exactly at the
+    payload both were asked to write.
+    """
+    import numpy as np
+
+    from repro.core.engine.groupcommit import CommitBatcher
+
+    tm = make_tm(backend, n_threads=max(n_txns) + 1,
+                 params=MultiverseParams(lock_table_bits=16),
+                 array_heap=True)
+    raw = tm.raw
+    base = tm.alloc(max(n_txns) * words, 0)
+    rows = []
+    payload = [0]
+
+    def build(n):
+        payload[0] += 1
+        txs = []
+        for t in range(n):
+            tx = raw.begin(t)
+            lo = base + t * words
+            for i in range(words):
+                tx.write(lo + i, payload[0] * 1000000 + t * words + i)
+            txs.append(tx)
+        return txs
+
+    def check(n):
+        got = np.asarray(raw.heap.gather(
+            np.arange(base, base + n * words, dtype=np.int64)))
+        want = payload[0] * 1000000 + np.arange(n * words)
+        assert (got == want).all(), "commit left the heap wrong"
+
+    for n in n_txns:
+        def solo():
+            txs = build(n)
+            t0 = time.perf_counter()
+            for tx in txs:
+                raw._try_commit(tx._ctx)
+            dt = time.perf_counter() - t0
+            check(n)
+            return dt
+
+        def grouped():
+            txs = build(n)
+            b = CommitBatcher(raw)
+            for tx in txs:
+                b.add(tx)
+            t0 = time.perf_counter()
+            ok = b.commit_all()
+            dt = time.perf_counter() - t0
+            assert all(ok), "group commit aborted a disjoint member"
+            assert b.stats["groups"] == 1 and b.stats["grouped"] == n, \
+                f"disjoint blocks did not form one group: {b.stats}"
+            check(n)
+            return dt
+
+        t_solo = min(solo() for _ in range(repeats))
+        t_grp = min(grouped() for _ in range(repeats))
+        rows.append({"txns": n, "words": words, "solo_us": t_solo * 1e6,
+                     "grouped_us": t_grp * 1e6,
+                     "speedup": t_solo / max(t_grp, 1e-12)})
+    tm.stop()
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--seconds", type=float, default=1.0)
@@ -324,6 +401,19 @@ def main():
             beats_at_1k = row["speedup"] >= 3.0
     assert beats_at_1k, \
         "bulk commit did not beat the scalar pipeline 3x at 1k writes"
+
+    print("\ngroup commit: N solo commit pipelines vs one fused group")
+    print(f"{'txns':>5s} {'words':>6s} {'solo_us':>9s} {'grouped_us':>10s} "
+          f"{'speedup':>8s}")
+    n_txns = (8,) if args.quick else (2, 4, 8)
+    beats_at_8 = None
+    for row in groupcommit_microbench(n_txns=n_txns):
+        print(f"{row['txns']:5d} {row['words']:6d} {row['solo_us']:9.1f} "
+              f"{row['grouped_us']:10.1f} {row['speedup']:7.1f}x")
+        if row["txns"] >= 8 and beats_at_8 is None:
+            beats_at_8 = row["speedup"] >= 3.0
+    assert beats_at_8, \
+        "group commit did not beat the solo loop 3x at 8 txns"
 
     print("\nstruct long read: scalar chain walk vs frontier-at-a-time")
     print(f"{'keys':>7s} {'scalar_us':>10s} {'frontier_us':>11s} "

@@ -38,6 +38,17 @@ __all__ = ["MVStoreHandle"]
 
 _COUNTER_KEYS = ("commits", "aborts", "ro_commits", "versioned_commits")
 
+_RACED = object()   # a device read lost the race against a donating commit
+
+
+def _donation_raced(e: BaseException) -> bool:
+    """True when a device read hit a buffer that ``mv_commit_fused``
+    donated out from under it (jax spells it RuntimeError "Array has
+    been deleted", XLA ValueError "buffer has been deleted or
+    donated")."""
+    msg = str(e)
+    return "deleted" in msg or "donated" in msg
+
 
 def _ring_slot(ring_ts, read_clock: int) -> Optional[int]:
     """Newest ring slot with a timestamp at/below ``read_clock``, or
@@ -102,20 +113,48 @@ class MVStoreHandle(SubstrateBase):
 
     # -- state installation ----------------------------------------------
     def _install(self, state) -> None:
-        """Publish a new MVStoreState plus a host-side numpy snapshot.
+        """Publish a new MVStoreState plus the reader-visible snapshot.
 
         Readers only ever dereference `self._snap` — one immutable tuple
         replaced wholesale, so a read never sees half of a commit (the JAX
-        buffer-immutability analogue of the paper's EBR argument)."""
-        live = np.asarray(state.live[self._key])
+        buffer-immutability analogue of the paper's EBR argument).  The
+        live block and ring stay DEVICE-RESIDENT jax buffers (scalar
+        reads ``.item()`` one element; bulk reads gather on device via
+        ``gather_row``'s jax-row branch) — only the tiny ``ring_ts``
+        vector is materialized host-side, where ``_ring_slot``'s numpy
+        scan wants it.  No per-commit host copy of the heap survives:
+        the commit path hands the previous live/ring buffers to
+        ``mv_commit_fused``, which DONATES them.  A reader pinned on
+        the old ``_snap`` can therefore find its row deleted mid-read;
+        that crash carries exactly the information a seqlock retry
+        does — a commit raced us — so ``_read_device`` turns it into
+        the abort the clock check would have issued an instant later
+        (or a re-snapshot outside a transaction)."""
         ring = state.ring.get(self._path)
         if ring is not None:
-            snap = (int(state.clock), live, np.asarray(ring),
+            snap = (int(state.clock), state.live[self._key], ring,
                     np.asarray(state.ring_ts[self._path]))
         else:
-            snap = (int(state.clock), live, None, None)
+            snap = (int(state.clock), state.live[self._key], None, None)
         self._state = state
         self._snap = snap
+
+    def _read_device(self, fn, ctx: Optional[_MVCtx] = None):
+        """One device read against snapshotted row buffers.
+
+        ``mv_commit_fused`` donates the live/ring buffers it replaces,
+        so a reader holding a pre-commit ``self._snap`` can lose its
+        row mid-gather.  Inside a transaction that race IS the conflict
+        the clock validation exists to catch — abort; outside one,
+        return ``_RACED`` so the caller re-snapshots and retries."""
+        try:
+            return fn()
+        except (RuntimeError, ValueError) as e:
+            if not _donation_raced(e):
+                raise
+            if ctx is not None:
+                self._abort_ctx(ctx)
+            return _RACED
 
     # -- Substrate protocol ----------------------------------------------
     def begin_operation(self, tid: int) -> None:
@@ -149,12 +188,12 @@ class MVStoreHandle(SubstrateBase):
             slot = _ring_slot(ring_ts, ctx.read_clock)
             if slot is None:
                 self._abort_ctx(ctx)       # fell out of the ring window
-            return ring[slot, addr].item()
+            return self._read_device(lambda: ring[slot, addr].item(), ctx)
         # unversioned (Mode-Q reader / writer encounter read): validate
         # that no commit has advanced the clock past our begin snapshot
         if clock > ctx.read_clock:
             self._abort_ctx(ctx)
-        return live[addr].item()
+        return self._read_device(lambda: live[addr].item(), ctx)
 
     def read_bulk(self, ctx: _MVCtx, addrs) -> Any:
         """`Txn.read_bulk` at the store level: one slice per batch.
@@ -182,11 +221,13 @@ class MVStoreHandle(SubstrateBase):
             slot = _ring_slot(ring_ts, ctx.read_clock)
             if slot is None:
                 self._abort_ctx(ctx)       # fell out of the ring window
-            vals = self._gather_row(ring[slot], a)
+            vals = self._read_device(
+                lambda: self._gather_row(ring[slot], a), ctx)
         else:
             if clock > ctx.read_clock:
                 self._abort_ctx(ctx)
-            vals = self._gather_row(live, a)
+            vals = self._read_device(
+                lambda: self._gather_row(live, a), ctx)
         if ctx.write_buf:
             return [ctx.write_buf.get(int(x), v)
                     for x, v in zip(a, vals.tolist())]
@@ -259,18 +300,15 @@ class MVStoreHandle(SubstrateBase):
             else:
                 state = self.controller.trainer_tick(state)
                 mode = self.controller.current_local_mode()
-                heap = state.live[self._key]
-                idx = np.array(sorted(ctx.write_buf), dtype=np.int32)
+                idx = np.array(sorted(ctx.write_buf), dtype=np.int64)
                 vals = np.array([ctx.write_buf[int(i)] for i in idx])
-                # the shared commit-pipeline scatter: one jnp scatter on
-                # CPU, one ``kernels/scatter_write.py`` launch on TPU —
-                # the store-level write-back rides the same kernel as
-                # the word engine's bulk commit
-                from repro.core.engine.commit import scatter_row
-                new_heap = scatter_row(
-                    heap, idx, self._jnp.asarray(vals, heap.dtype))
-                state = self._mvstore.mv_commit(
-                    state, {self._key: new_heap}, local_mode=mode,
+                # ONE fused publish under the held commit lock (the
+                # seqlock bracket): scatter into the live row AND the
+                # PackedVLT ring refresh ride a single device-resident
+                # ``ops.commit_fused`` call — no scatter-then-rotate
+                # host round trip (``mvstore.mv_commit_fused``)
+                state = self._mvstore.mv_commit_fused(
+                    state, self._key, idx, vals, local_mode=mode,
                     cfg=self.cfg)
                 self._install(state)
         if conflict:
@@ -337,7 +375,10 @@ class MVStoreHandle(SubstrateBase):
         return base
 
     def peek(self, addr: int) -> Any:
-        return self._snap[1][addr].item()
+        while True:
+            v = self._read_device(lambda: self._snap[1][addr].item())
+            if v is not _RACED:
+                return v
 
     # -- Layer-B extras ----------------------------------------------------
     def snapshot(self, read_clock: Optional[int] = None):
@@ -359,13 +400,18 @@ class MVStoreHandle(SubstrateBase):
         """
         from repro.core.engine.bulkread import as_addr_array
         a = as_addr_array(addrs)
-        clock, live, ring, ring_ts = self._snap
-        if read_clock is None or read_clock >= clock:
-            return self._gather_row(live, a), True
-        slot = _ring_slot(ring_ts, read_clock)
-        if slot is None:
-            return None, False
-        return self._gather_row(ring[slot], a), True
+        while True:
+            clock, live, ring, ring_ts = self._snap
+            if read_clock is None or read_clock >= clock:
+                vals = self._read_device(lambda: self._gather_row(live, a))
+            else:
+                slot = _ring_slot(ring_ts, read_clock)
+                if slot is None:
+                    return None, False
+                vals = self._read_device(
+                    lambda: self._gather_row(ring[slot], a))
+            if vals is not _RACED:
+                return vals, True
 
     @property
     def state(self):

@@ -45,6 +45,7 @@ class TL2Policy(PolicyBase):
 
     name = "tl2"
     validate_mode = V_LE
+    group_commit = "buffered"     # CommitBatcher: claim+validate+scatter+stamp
 
     def read(self, eng, d, addr: int) -> Any:
         if addr in d.write_map:
@@ -103,6 +104,7 @@ class DCTLPolicy(PolicyBase):
 
     name = "dctl"
     validate_mode = V_LT
+    group_commit = "encounter"    # CommitBatcher: fused validate + release
 
     def __init__(self, irrevocable_after: int = 100):
         self.irrevocable_after = irrevocable_after

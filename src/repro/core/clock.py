@@ -64,5 +64,7 @@ class Striped:
         """
         import numpy as np
 
-        ids = np.unique(np.asarray(idxs, np.int64) & self._mask)
-        return [self._locks[int(i)] for i in ids]
+        hit = np.bincount(np.asarray(idxs, np.int64) & self._mask,
+                          minlength=self._mask + 1)
+        locks = self._locks
+        return [locks[int(i)] for i in np.nonzero(hit)[0]]

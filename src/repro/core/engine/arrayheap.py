@@ -338,6 +338,50 @@ class ArrayLockTable(LockTable):
             for s in stripes:
                 s.release()
 
+    def striped(self, idxs: np.ndarray):
+        """Context manager holding every stripe covering ``idxs``
+        (acquired ascending, like the bulk sweeps) — the group-commit
+        batcher's atomicity bracket: gather + verdict + claim run as one
+        hoisted CAS window instead of per-transaction sweeps.  Pair with
+        ``words_at``/``store_words``; do NOT call the self-locking ops
+        (``try_lock_bulk``/``unlock_bulk``/``cas``) inside."""
+        from contextlib import contextmanager
+
+        stripes = self._stripes.for_indices(np.asarray(idxs, np.int64))
+
+        @contextmanager
+        def _hold():
+            for s in stripes:
+                s.acquire()
+            try:
+                yield
+            finally:
+                for s in stripes:
+                    s.release()
+
+        return _hold()
+
+    def words_at(self, idxs: np.ndarray) -> np.ndarray:
+        """Raw packed words, one consistent fancy-index copy — the group
+        commit's gather (fields come from the shared bit math in
+        ``kernels/commit_fused``'s caller)."""
+        return self._words[np.asarray(idxs, np.int64)]
+
+    def store_words(self, idxs: np.ndarray, words: np.ndarray) -> None:
+        """Raw word scatter.  Caller MUST hold ``striped(idxs)`` (or the
+        words must be claim words only this thread may release) — this
+        is the storage primitive under the batcher's claim/stamp steps,
+        with no locking of its own."""
+        self._words[np.asarray(idxs, np.int64)] = words
+
+    def claim_words(self, words: np.ndarray, tids: np.ndarray) -> np.ndarray:
+        """Locked spellings of ``words`` claimed by per-entry ``tids``
+        (version preserved, flag cleared) — vectorized ``try_lock``'s
+        store half for the group claim."""
+        return ((words >> _VER_SHIFT) << _VER_SHIFT) \
+            | (((np.asarray(tids, np.int64) + _TID_BIAS) & _TID_MASK) << 2) \
+            | 2
+
     def unlock_bulk(self, idxs: np.ndarray,
                     version: Optional[int] = None) -> None:
         """Release many locks in one sweep (commit publish / rollback).

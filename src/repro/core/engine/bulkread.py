@@ -80,6 +80,17 @@ def gather_row(row, addrs: np.ndarray) -> np.ndarray:
         if addrs.size and int(addrs.max(initial=0)) >= row.shape[0]:
             raise IndexError(int(addrs.max()))
         return np.asarray(ops.snapshot_read(row, addrs))
+    if isinstance(row, np.ndarray):
+        return row[addrs]
+    if hasattr(row, "shape"):
+        # device-resident (jax) row: gather ON DEVICE and materialize
+        # only the batch — ``np.asarray(row)[addrs]`` would host-copy
+        # the whole row per call.  jnp fancy-indexing CLAMPS instead of
+        # raising, so the bounds contract needs the explicit guard.
+        if addrs.size and (int(addrs.max(initial=0)) >= row.shape[0]
+                           or int(addrs.min(initial=0)) < 0):
+            raise IndexError(int(addrs.max()))
+        return np.asarray(row[addrs])
     return np.asarray(row)[addrs]
 
 

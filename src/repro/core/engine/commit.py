@@ -64,8 +64,11 @@ def addr_lock_indices(eng, addrs: Iterable[int]) -> np.ndarray:
     ``index`` loop otherwise; ``np.unique`` collapses colliding
     addresses to one claim/release per lock word.
     """
-    a = np.fromiter((int(x) for x in addrs), np.int64,
-                    len(addrs))  # type: ignore[arg-type]
+    # materialize first: np.fromiter(..., count=len(...)) needs a sized
+    # iterable, and callers legitimately pass generators
+    if not hasattr(addrs, "__len__"):
+        addrs = list(addrs)
+    a = np.fromiter((int(x) for x in addrs), np.int64, len(addrs))
     index_bulk = getattr(eng.locks, "index_bulk", None)
     if index_bulk is not None:
         return np.unique(index_bulk(a))
@@ -213,20 +216,30 @@ def scatter_row(row, addrs, values):
     """Functional ``row.at[addrs].set(values)`` with the kernel dispatch.
 
     The write-back analogue of ``bulkread.gather_row`` for immutable
-    (jax) rows: one ``ops.write_back`` launch when ``KERNEL_INTERPRET=0``,
-    the jnp scatter otherwise.  Enforces the shared bounds contract
-    (``check_addr_bounds``) on the kernel path, where jax scatter would
-    silently DROP an out-of-range address and wrap a negative one.
-    Serves the MVStore commit's live-block update.
+    (jax) rows: one DONATED ``ops.publish_row`` call — a
+    ``scatter_write`` launch when ``KERNEL_INTERPRET=0``, the jitted
+    jnp scatter otherwise — so the row never round-trips through the
+    host (``write_back`` returns an ndarray, a device->host heap copy
+    per commit, which the device path must not pay).  The caller hands
+    over ownership of ``row`` (donation invalidates it on backends
+    that honor it; readers needing the old row must alias it first).
+    Enforces the shared bounds contract (``check_addr_bounds``), where
+    jax scatter would silently DROP an out-of-range address and wrap a
+    negative one, and keeps the ``write_back`` int64-range guard:
+    beyond-int32 payloads route to the exact numpy twin.  Serves the
+    MVStore commit's live-block update.
     """
     from repro.core.engine.arrayheap import check_addr_bounds
     from repro.kernels import ops
     a = np.asarray(addrs, np.int64)
     check_addr_bounds(a, row.shape[0])
-    if not ops.INTERPRET:
+    vals = np.asarray(values)
+    lo, hi = -(1 << 31) + 1, (1 << 31) - 1
+    if vals.dtype == np.int64 and vals.size and \
+            (int(vals.max()) > hi or int(vals.min()) < lo):
         import jax.numpy as jnp
-        return jnp.asarray(ops.write_back(row, a, values), row.dtype)
-    return row.at[a].set(values)
+        return jnp.asarray(ops.write_back(row, a, vals), row.dtype)
+    return ops.publish_row(row, a, vals)
 
 
 # ---------------------------------------------------------------------------

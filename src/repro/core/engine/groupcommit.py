@@ -1,0 +1,498 @@
+"""Group commit: publish batches of conflict-disjoint transactions at
+one clock tick through the fused commit path.
+
+After PR 5 a single commit is one batched pipeline; this module batches
+ACROSS transactions.  The paper's serialization argument (and the
+multi-version conflict notion it builds on) says transactions whose
+conflict sets are disjoint serialize freely — so N ready commits whose
+footprints do not overlap can share one atomicity bracket, one clock
+tick and one publish sweep instead of N of each:
+
+  * ``CommitBatcher.add`` collects ready transactions (engine ``_Tx``
+    handles, substrate ``Txn`` wrappers or raw descriptors);
+  * ``commit_all`` partitions them into conflict-disjoint groups via
+    vectorized lock-index intersection (``partition_disjoint``).  The
+    conflict rule is ``write_i ∩ (read_j ∪ write_j) = ∅`` for i != j —
+    write-write AND write-read overlaps separate transactions; read-read
+    overlap is harmless.  Write-set-only disjointness would be UNSOUND:
+    two members each reading what the other writes have no serial order
+    at a shared commit version;
+  * each multi-member group publishes through the fused commit math
+    (``kernels/commit_fused``): gather + verdict + claim under ONE
+    hoisted stripe window (``ArrayLockTable.striped`` — the batched
+    spelling of ``try_lock_bulk``'s CAS bracket), ONE
+    ``clock.increment()``, one heap scatter for every surviving
+    member's writes, one release sweep stamping the shared version.
+    On CPU the in-file numpy twin (``np_commit_decide``) is the
+    production verdict and the scatter goes through the in-place heap
+    (the ``heap_scatter`` contract); with ``KERNEL_INTERPRET=0`` the
+    whole publish is one ``ops.commit_fused`` megakernel launch over
+    the device-resident row;
+  * anything it cannot prove safe — colliding footprints, encounter
+    descriptors holding locks mid-undo, irrevocable or versioned
+    transactions, policies that never opted in — falls back to TODAY'S
+    solo pipeline (``eng._try_commit``), so grouping is an optimization
+    of the ready-batch case, never a semantic change
+    (``tests/test_groupcommit.py`` pins group == solo results).
+
+Ordering proof sketch for the buffered (TL2) group: the stripe window
+makes verdict + claim atomic, which is at least as strong as solo TL2's
+acquire-then-revalidate (both observe a state where every write lock is
+held and every read entry validated at the member's own ``r_clock``).
+``wv`` is fetched AFTER the claim — a reader beginning after the
+increment sees either our locks or our released version ``wv <= its
+r_clock`` with the new values, never a torn mix (the same GV4 argument
+as the solo pipeline, hoisted over the group).  Failed members are
+never claimed and never scattered: they abort individually with the
+heap and their group-mates untouched.
+
+Policies opt in via ``group_commit``: ``"buffered"`` (TL2 — full
+claim + validate + scatter + stamp) or ``"encounter"`` (DCTL — locks
+already held, so the group is one fused validation plus one release
+sweep at the deferred clock's current value, the exact solo release).
+"""
+from __future__ import annotations
+
+from itertools import chain
+from typing import Any, List, Optional
+
+import numpy as np
+
+from repro.core.engine import commit as C
+from repro.core.engine.errors import AbortTx
+from repro.kernels.commit_fused import np_commit_decide, pack_segments
+
+__all__ = ["CommitBatcher", "partition_disjoint"]
+
+
+def partition_disjoint(write_sets: List[np.ndarray],
+                       read_sets: List[np.ndarray]) -> List[List[int]]:
+    """Partition into conflict-disjoint groups via one vectorized sweep.
+
+    ``write_sets[i]`` / ``read_sets[i]`` are transaction ``i``'s lock
+    indices (any order, within-transaction duplicates allowed — a hash
+    collision within one transaction is one lock word claimed once).
+    Conflict rule: ``write_i ∩ (read_j ∪ write_j) != ∅`` for ``i != j``
+    — cross-transaction collisions on a lock word count even when the
+    heap addresses differ, because colliding addresses share the word.
+
+    Fast path (the expected batch): lock indices are table slots, so a
+    dense ``bincount`` over the concatenated write indices finds any
+    duplicate in O(batch + table) with no sort at all — zero duplicates
+    means no write-write conflict is possible, and a dense owner map
+    resolves the read probe with one fancy gather.  A batch with ANY
+    repeated write index (cross-owner = a real conflict; within one
+    transaction = a hash collision claiming one word once) or with
+    indices too sparse for a dense table falls to one argsort sweep,
+    and only a genuinely conflicted batch takes the quadratic first-fit
+    fallback.  Singleton groups are committed solo by the batcher, so
+    overlapping transactions degrade to exactly today's pipeline.
+    """
+    n = len(write_sets)
+    if n == 0:
+        return []
+    sizes = np.fromiter((a.size for a in write_sets), np.int64, n)
+    all_w = np.concatenate(write_sets)
+    w_own = np.repeat(np.arange(n), sizes)
+    conflict = None
+    hi = int(all_w.max(initial=-1)) + 1
+    if 0 <= hi <= (1 << 18) and int(all_w.min(initial=0)) >= 0:
+        counts = np.bincount(all_w, minlength=hi)
+        # dup check via a gather back through the batch — O(batch), not
+        # a full-table scan
+        if not (counts[all_w] > 1).any():
+            conflict = False
+            nz = [i for i, r in enumerate(read_sets) if r.size]
+            if nz and all_w.size:
+                # every written index is unique, so a dense last-writer
+                # map IS the owner map
+                own_map = np.empty(hi, np.int64)
+                own_map[all_w] = w_own
+                all_r = np.concatenate([read_sets[i] for i in nz])
+                r_own = np.repeat(
+                    np.asarray(nz, np.int64),
+                    np.fromiter((read_sets[i].size for i in nz),
+                                np.int64, len(nz)))
+                inb = (all_r >= 0) & (all_r < hi)
+                pos = np.where(inb, all_r, 0)
+                hit = inb & (counts[pos] > 0)
+                conflict = bool((hit & (own_map[pos] != r_own)).any())
+    if conflict is None:
+        # sparse or duplicated indices: one sort sweep.  Any equal-value
+        # run spanning two owners yields SOME adjacent cross-owner pair
+        # regardless of sort stability.
+        order = np.argsort(all_w)
+        sw, so = all_w[order], w_own[order]
+        dup = sw[1:] == sw[:-1]
+        conflict = bool((dup & (so[1:] != so[:-1])).any())
+        if not conflict:
+            nz = [i for i, r in enumerate(read_sets) if r.size]
+            if nz and sw.size:
+                all_r = np.concatenate([read_sets[i] for i in nz])
+                r_own = np.repeat(
+                    np.asarray(nz, np.int64),
+                    np.fromiter((read_sets[i].size for i in nz),
+                                np.int64, len(nz)))
+                # no write-write conflict => each written value has one
+                # owner, so any slot of its equal run identifies it
+                pos = np.clip(np.searchsorted(sw, all_r), 0, sw.size - 1)
+                hit = sw[pos] == all_r
+                conflict = bool((hit & (so[pos] != r_own)).any())
+    if not conflict:
+        return [list(range(n))]
+
+    # slow path: first-fit greedy over unique sets (conflicted batch)
+    groups: List[dict] = []
+    for i in range(n):
+        w = np.unique(write_sets[i])
+        rw = np.union1d(w, read_sets[i])
+        placed = False
+        for g in groups:
+            if np.intersect1d(w, g["rw"], assume_unique=True).size:
+                continue
+            if np.intersect1d(rw, g["w"], assume_unique=True).size:
+                continue
+            g["members"].append(i)
+            g["w"] = np.union1d(g["w"], w)
+            g["rw"] = np.union1d(g["rw"], rw)
+            placed = True
+            break
+        if not placed:
+            groups.append({"members": [i], "w": w, "rw": rw})
+    return [g["members"] for g in groups]
+
+
+_EMPTY = np.zeros((0,), np.int64)
+
+
+def _read_arrays(d):
+    rs = d.read_set
+    if not rs:
+        return _EMPTY, _EMPTY
+    idx = np.fromiter((p[0] for p in rs), np.int64, len(rs))
+    seen = np.fromiter((p[1] for p in rs), np.int64, len(rs))
+    return idx, seen
+
+
+class CommitBatcher:
+    """Collects ready transactions and commits them in disjoint groups.
+
+    ``add`` accepts whatever the caller holds — an engine ``_Tx``, a
+    substrate ``Txn`` or a raw descriptor; ``commit_all`` returns one
+    bool per added transaction (add order): True committed, False
+    aborted (the descriptor is rolled back; the caller owns the retry).
+    ``stats`` counts how the batch split: ``grouped`` members published
+    through fused group windows, ``solo`` through the fallback
+    pipeline, ``groups`` fused windows executed, ``failed`` aborts.
+    """
+
+    def __init__(self, eng: Any):
+        self.eng = getattr(eng, "raw", eng)   # unwrap WordSubstrate
+        self._pending: List[Any] = []
+        self.stats = {"grouped": 0, "solo": 0, "groups": 0, "failed": 0}
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def add(self, tx: Any) -> None:
+        self._pending.append(getattr(tx, "_ctx", tx))
+
+    # -- eligibility ----------------------------------------------------
+    def _groupable(self, d) -> Optional[str]:
+        kind = getattr(self.eng.policy, "group_commit", None)
+        if kind is None or not d.active or d.read_only:
+            return None
+        if getattr(d, "irrevocable", False) or d.versioned_write_set:
+            return None
+        if kind == "buffered":
+            # pure buffered: no in-place state, no held locks — and a
+            # lock table with the bulk window primitives (the scalar
+            # table commits solo)
+            if d.write_map and not d.undo and not d.locked_idxs \
+                    and getattr(self.eng.locks, "striped", None) is not None:
+                return kind
+            return None
+        if kind == "encounter":
+            # in-place writes, locks already held; write_map would mean a
+            # policy this module does not know — fall back
+            if d.locked_idxs and not d.write_map \
+                    and getattr(self.eng.locks, "gather", None) is not None:
+                return kind
+        return None
+
+    # -- the entry point ------------------------------------------------
+    def commit_all(self) -> List[bool]:
+        eng = self.eng
+        descs, self._pending = self._pending, []
+        results: List[Optional[bool]] = [None] * len(descs)
+
+        kind = None
+        cand: List[int] = []
+        for i, d in enumerate(descs):
+            k = self._groupable(d)
+            if k is not None and (kind is None or k == kind):
+                kind = k
+                cand.append(i)
+
+        # extract each candidate's footprint ONCE — partition and the
+        # group window share the same arrays (a second per-txn pass
+        # would hand back most of the batching win).  Lock indices hash
+        # in ONE index_bulk call over the whole batch and split back
+        # into per-transaction views.
+        groups: List[List[int]] = []
+        preps: List[tuple] = []
+        l_pack = None
+        if len(cand) >= 2:
+            arrayish = isinstance(getattr(eng.heap, "_buf", None),
+                                  np.ndarray)
+            if kind == "buffered":
+                wms = [descs[i].write_map for i in cand]
+                sizes = np.fromiter((len(wm) for wm in wms),
+                                    np.int64, len(wms))
+                total = int(sizes.sum())
+                offs = [0] * (len(wms) + 1)
+                for k, wm in enumerate(wms):
+                    offs[k + 1] = offs[k] + len(wm)
+                # hand-rolled view slicing: np.split routes through
+                # array_split/swapaxes and costs real time at this size
+                cut = lambda a: [a[offs[k]:offs[k + 1]]          # noqa: E731
+                                 for k in range(len(wms))]
+                # ONE fromiter over the chained dicts, split into
+                # per-transaction views — per-dict fromiter calls cost
+                # about twice as much at typical write-set sizes
+                all_addr = np.fromiter(
+                    chain.from_iterable(wms), np.int64, total)
+                w_addrs = cut(all_addr)
+                if arrayish:
+                    # int64 heap: values as one array now, so the
+                    # publish sweep is one concatenate + one fancy
+                    # scatter (object heaps keep the list form)
+                    w_valss = cut(np.fromiter(
+                        chain.from_iterable(wm.values() for wm in wms),
+                        np.int64, total))
+                else:
+                    w_valss = [list(wm.values()) for wm in wms]
+                all_l = eng.locks.index_bulk(all_addr)
+                l_sets = cut(all_l)
+            else:
+                w_addrs = w_valss = None
+                all_l = sizes = None
+                l_sets = [C.held_write_indices(eng, descs[i])
+                          for i in cand]
+            for k, i in enumerate(cand):
+                d = descs[i]
+                r_idx, r_seen = _read_arrays(d)
+                preps.append((d,
+                              w_addrs[k] if w_addrs is not None else None,
+                              w_valss[k] if w_valss is not None else None,
+                              l_sets[k], r_idx, r_seen))
+            groups = partition_disjoint(
+                [p[3] for p in preps], [p[4] for p in preps])
+            if (all_l is not None and len(groups) == 1
+                    and len(groups[0]) == len(preps)):
+                # the whole batch formed one group: its flat lock batch
+                # is exactly the one we already hashed — skip the repack
+                l_pack = (all_l,
+                          np.repeat(np.arange(len(preps), dtype=np.int64),
+                                    sizes))
+
+        solo = set(range(len(descs)))
+        for members in groups:
+            if len(members) < 2:
+                continue                       # singleton: solo fallback
+            gp = [preps[m] for m in members]
+            ok = (self._commit_group_buffered(gp, l_pack)
+                  if kind == "buffered"
+                  else self._commit_group_encounter(gp))
+            self.stats["grouped"] += len(gp)
+            self.stats["groups"] += 1
+            for m, okd in zip(members, ok):
+                results[cand[m]] = bool(okd)
+                solo.discard(cand[m])
+
+        for i in sorted(solo):
+            d = descs[i]
+            self.stats["solo"] += 1
+            try:
+                eng._try_commit(d)
+                results[i] = True
+            except AbortTx:
+                results[i] = False
+        out = [bool(r) for r in results]
+        self.stats["failed"] += sum(1 for r in out if not r)
+        return out
+
+    # -- buffered (TL2-style) group window ------------------------------
+    def _commit_group_buffered(self, gp, l_pack=None) -> np.ndarray:
+        eng = self.eng
+        locks = eng.locks
+        mode = eng.policy.validate_mode
+        group = [p[0] for p in gp]
+        w_addrs = [p[1] for p in gp]
+        w_vals = [p[2] for p in gp]
+        if l_pack is not None:
+            l_flat, l_seg = l_pack
+        else:
+            l_flat, l_seg, _ = pack_segments([p[3] for p in gp])
+        r_flat, r_seg, _ = pack_segments([p[4] for p in gp])
+        tids = np.fromiter((d.tid for d in group), np.int64, len(group))
+
+        from repro.core.engine.arrayheap import (_TID_BIAS, _TID_MASK,
+                                                 _UNLOCKED_WORD,
+                                                 _VER_SHIFT)
+
+        # ONE hoisted CAS window for verdict + claim + tick + publish +
+        # release: the group analogue of try_lock_bulk's
+        # gather/check/scatter under held stripes.  Solo TL2 pays two
+        # stripe sweeps (acquire, release-at-wv); the group window pays
+        # ONE and holds it through the heap scatter instead.  That is a
+        # concurrency trade, not a correctness one — the claim words
+        # already serialize every conflicting commit for the same span,
+        # so the longer hold only delays transactions that merely share
+        # a stripe, and buys back a full for_indices + acquire sweep.
+        with locks.striped(l_flat):
+            l_words = locks.words_at(l_flat)
+            r_seen = None
+            if r_flat.size == 0 and not (l_words & 3).any():
+                # fast verdict: no reads to validate and every write
+                # word free + unflagged means claimable for ANY owner —
+                # algebraically the same answer np_commit_decide gives
+                # (claimable = ~((locked|flagged) & ~own) with
+                # locked = flagged = False), minus the field unpack
+                ok = np.ones(len(group), bool)
+                all_ok = any_ok = True
+            else:
+                def fields(words):
+                    ver = words >> _VER_SHIFT
+                    own = (((words >> 2) & _TID_MASK)
+                           - _TID_BIAS).astype(np.int32)
+                    meta = (((words >> 1) & 1)
+                            | ((words & 1) << 1)).astype(np.int32)
+                    return ver, own, meta
+
+                r_seen = (np.concatenate([p[5] for p in gp]) if gp
+                          else np.zeros((0,), np.int64))
+                rcs = np.fromiter((d.r_clock for d in group),
+                                  np.int64, len(group))
+                r_words = locks.words_at(r_flat)
+                lv, lo, lm = fields(l_words)
+                rv, ro, rm = fields(r_words)
+                ok = np_commit_decide(lv, lo, lm, l_seg, rv, ro, rm,
+                                      r_seen, r_seg, tids, rcs,
+                                      len(group), mode)
+                all_ok = bool(ok.all())
+                any_ok = all_ok or bool(ok[l_seg].any())
+            if any_ok:
+                if all_ok:
+                    claim = l_flat
+                    locks.store_words(
+                        claim, locks.claim_words(l_words, tids[l_seg]))
+                else:
+                    sel = ok[l_seg]
+                    claim = l_flat[sel]
+                    locks.store_words(
+                        claim,
+                        locks.claim_words(l_words[sel], tids[l_seg[sel]]))
+            # ONE tick for the whole group — fetched AFTER the claim,
+            # the same GV4 ordering the solo pipeline pins (module
+            # docstring)
+            wv = eng.clock.increment()
+            if any_ok:
+                self._publish(group, ok, all_ok, w_addrs, w_vals,
+                              l_flat, l_seg, r_flat, r_seg, r_seen,
+                              tids, None, wv, mode)
+                # release-at-wv is a raw scatter: the stripes are still
+                # held and every claimed word is ours
+                locks.store_words(
+                    claim,
+                    np.int64((wv << _VER_SHIFT) | _UNLOCKED_WORD))
+        self._bookkeep(group, ok)
+        return ok
+
+    def _publish(self, group, ok, all_ok, w_addrs, w_vals, l_flat, l_seg,
+                 r_flat, r_seg, r_seen, tids, rcs, wv, mode) -> None:
+        """Scatter every surviving member's writes in one sweep.
+
+        CPU production: one in-place ``heap_scatter`` (the heap IS the
+        numpy buffer — ``engine/commit.heap_scatter``'s contract).
+        ``KERNEL_INTERPRET=0``: the full ``ops.commit_fused`` megakernel
+        over the device row — validate + claim-check + scatter + stamp
+        in one launch (the claim words read as locked-by-owner, so the
+        in-kernel verdict reproduces ``ok`` exactly), then only the
+        touched addresses copy back into the host mirror.
+        """
+        eng = self.eng
+        from repro.kernels import ops
+        sel_addrs = (w_addrs if all_ok
+                     else [a for a, okd in zip(w_addrs, ok) if okd])
+        addrs = (np.concatenate(sel_addrs) if sel_addrs
+                 else np.zeros((0,), np.int64))
+        if not addrs.size:
+            return
+        if not ops.INTERPRET and getattr(eng.heap, "jnp", None) is not None:
+            w_flat, w_seg, _ = pack_segments(w_addrs)
+            vals = np.concatenate(
+                [np.asarray(v, np.int64) for v in w_vals])
+            locks = eng.locks
+            if r_seen is None:          # fast-verdict window: no reads
+                r_seen = np.zeros((0,), np.int64)
+            if rcs is None:
+                rcs = np.fromiter((d.r_clock for d in group),
+                                  np.int64, len(group))
+            new_row, k_ok, _ = ops.commit_fused(
+                eng.heap.jnp(), w_flat, vals, w_seg,
+                locks.words_at(l_flat), l_seg,
+                locks.words_at(r_flat), r_seen, r_seg,
+                tids, rcs, wv, len(group), mode=mode)
+            eng.heap.scatter(addrs, np.asarray(new_row)[addrs])
+            return
+        sel_vals = (w_vals if all_ok
+                    else [v for v, okd in zip(w_vals, ok) if okd])
+        if isinstance(sel_vals[0], np.ndarray):
+            vals = np.concatenate(sel_vals)
+        else:
+            vals = []
+            for vs in sel_vals:
+                vals.extend(vs)
+        C.heap_scatter(eng.heap, addrs, vals)
+
+    # -- encounter (DCTL-style) group window ----------------------------
+    def _commit_group_encounter(self, gp) -> np.ndarray:
+        """Locks are already held, writes already in place: the group is
+        one fused read-set validation plus one release sweep at the
+        deferred clock's CURRENT value — exactly the solo release
+        (``DCTLPolicy.commit_update``), batched.  Failed members roll
+        back individually (undo restore + deferred-clock bump) with
+        their disjoint group-mates' words untouched."""
+        eng = self.eng
+        mode = eng.policy.validate_mode
+        group = [p[0] for p in gp]
+        l_sets = [p[3] for p in gp]
+        r_flat, r_seg, _ = pack_segments([p[4] for p in gp])
+        r_seen = (np.concatenate([p[5] for p in gp]) if gp
+                  else np.zeros((0,), np.int64))
+        tids = np.fromiter((d.tid for d in group), np.int64, len(group))
+        rcs = np.fromiter((d.r_clock for d in group), np.int64, len(group))
+        ver, own, meta = eng.locks.gather(r_flat)
+        z = np.zeros((0,), np.int64)
+        ok = np_commit_decide(z, z, z, z, ver, own, meta, r_seen, r_seg,
+                              tids, rcs, len(group), mode)
+        sel_l = [ls for ls, okd in zip(l_sets, ok) if okd]
+        if sel_l:
+            eng.locks.unlock_bulk(np.concatenate(sel_l), eng.clock.load())
+        self._bookkeep(group, ok, clear_locked=True)
+        return ok
+
+    # -- shared epilogue ------------------------------------------------
+    def _bookkeep(self, group, ok: np.ndarray,
+                  clear_locked: bool = False) -> None:
+        eng = self.eng
+        for d, okd in zip(group, ok):
+            if okd:
+                if clear_locked:
+                    d.locked_idxs.clear()
+                d.stats["commits"] += 1
+                d.active = False
+                eng.policy.on_finish(eng, d)
+            else:
+                eng._abort(d)

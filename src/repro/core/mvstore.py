@@ -129,6 +129,64 @@ def mv_commit(state: MVStoreState, new_params, *, local_mode: str,
                         clock=new_clock)
 
 
+def mv_commit_fused(state: MVStoreState, key: str, addrs, values, *,
+                    local_mode: str, cfg: MVStoreConfig) -> MVStoreState:
+    """Sparse single-block publish: ``mv_commit`` where the new value is
+    the live block with ``values`` scattered at ``addrs``, fused into
+    ONE device-resident call.
+
+    This is the `MVStoreHandle.commit` hot path: instead of
+    scatter-then-rotate (a ``scatter_row`` launch, then ``mv_commit``'s
+    ring ``dynamic_update_index_in_dim`` — with the live row crossing
+    host between them), the whole publish — scatter into the live row
+    AND the PackedVLT ring-row refresh — rides one ``ops.commit_fused``
+    call under the caller's held commit lock (the seqlock bracket).
+    The live and ring buffers are DONATED: the caller must alias the
+    previous state for still-pinned snapshot readers before calling
+    (``MVStoreHandle._install`` publishes the replacement wholesale).
+    Mode/versioning semantics are exactly ``mv_commit``'s; only the
+    single-block sparse-update spelling differs.
+    """
+    import numpy as np
+
+    from repro.kernels import ops
+
+    new_clock = state.clock + 1
+    live = state.live[key]
+    flat, _ = jax.tree_util.tree_flatten_with_path({key: live})
+    path = jax.tree_util.keystr(flat[0][0])
+    must_version = local_mode in ("U", "QtoU", "UtoQ")
+    if must_version and path not in state.ring:
+        raise ValueError(
+            f"Mode {local_mode} commit with unversioned blocks "
+            f"[{path!r}]... — controller must version first")
+    a = np.asarray(addrs, np.int64)
+    if a.size:
+        lo, hi = int(a.min()), int(a.max())
+        if lo < 0 or hi >= int(live.shape[0]):
+            raise IndexError(lo if lo < 0 else hi)
+    empty = np.zeros((0,), np.int64)
+    ring = state.ring.get(path)
+    kw = {}
+    if ring is not None:
+        kw = dict(ring=ring, ring_ts=state.ring_ts[path],
+                  ring_slot=int(new_clock % cfg.ring_slots))
+    out = ops.commit_fused(
+        live, a, np.asarray(values), np.zeros(a.shape[0], np.int64),
+        empty, empty, empty, empty, empty,
+        np.zeros(1, np.int64), np.zeros(1, np.int64),
+        int(new_clock), 1, **kw)
+    new_live = dict(state.live)
+    new_live[key] = out[0]
+    if ring is not None:
+        ring_d, ts_d = dict(state.ring), dict(state.ring_ts)
+        ring_d[path], ts_d[path] = out[3], out[4]
+        return MVStoreState(live=new_live, ring=ring_d, ring_ts=ts_d,
+                            clock=new_clock)
+    return MVStoreState(live=new_live, ring=state.ring,
+                        ring_ts=state.ring_ts, clock=new_clock)
+
+
 # ---------------------------------------------------------------------------
 # snapshot read (the versioned read-only transaction)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,239 @@
+"""Fused commit megakernel — one launch per batch of disjoint transactions.
+
+``scatter_write.py`` made the WRITE-BACK of one commit a single launch;
+this kernel fuses the whole commit decision for a GROUP of
+conflict-disjoint transactions:
+
+    validate each member's read-set lock words        (validate.py math)
+  + check each member's write locks are claimable      (try_lock_bulk math)
+  + scatter every surviving member's values            (scatter_write math)
+  + stamp the release versions for the claimed words
+
+in ONE launch over a segment-offset layout: ragged per-transaction
+read/write sets are packed into flat ``(addrs, values, txn_id)`` /
+``(lock fields, txn_id)`` batches (``pack_segments`` below), and a
+per-transaction verdict is accumulated with a scatter-min into a
+constant-index ``ok`` block — a member is publishable iff EVERY one of
+its read entries validates and EVERY one of its write locks is free.
+
+Layout mirrors the gather/scatter kernels: the heap rides in as one
+full block, the write batch is tiled over the grid, the (small)
+read/lock/txn vectors are full constant-index blocks.  Grid step 0
+computes the verdict, seeds the output heap and stamps the release
+versions; every step then scatters its write tile, with the addresses
+of FAILED members redirected to one-past-the-end (dropped by jax
+scatter semantics — the same ragged-padding trick ``ops.write_back``
+uses, so a failed member's writes never touch the heap).
+
+The caller owns atomicity: on the CPU engine the covering lock stripes
+are held around the decision + claim (``groupcommit.py``); at the
+MVStore layer the commit lock (the seqlock analogue) brackets the call.
+Versions ride in REBASED to the commit version and clipped to int32
+(the ``validate.py`` treatment — only deltas matter to the predicates);
+``ops.commit_fused`` reconstructs exact int64 release words host-side.
+
+``np_commit_fused`` is the in-file numpy twin (exact at any width, the
+CPU-production path); ``np_commit_decide`` is its verdict half, shared
+with the engine's group-commit pipeline, which scatters through the
+in-place heap instead of the functional row.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# validation predicate selectors — same encoding as engine/validation.py
+# (kernels stay engine-import-free, so the constants are mirrored here
+# and pinned equal by tests/test_groupcommit.py)
+MODE_LT = 0      # version <  r_clock   (Multiverse / DCTL deferred clock)
+MODE_LE = 1      # version <= r_clock   (TL2-style commit-bumped clock)
+MODE_EQ = 2      # version == seen      (TinySTM timestamp extension)
+
+
+def pack_segments(per_txn) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Ragged per-transaction vectors -> one flat batch + segment ids.
+
+    ``per_txn`` is a list of 1-D arrays (one per transaction, any
+    lengths including zero).  Returns ``(flat, seg, offsets)`` where
+    ``flat`` is the concatenation, ``seg[i]`` is the transaction index
+    owning ``flat[i]``, and ``offsets`` is the int64[T+1] segment-offset
+    vector (``flat[offsets[t]:offsets[t+1]]`` is transaction ``t``'s
+    slice — the round-trip ``tests/test_groupcommit.py`` pins).
+    """
+    arrs = [np.asarray(a) for a in per_txn]
+    lens = np.fromiter((a.shape[0] for a in arrs), np.int64, len(arrs))
+    offsets = np.zeros(len(arrs) + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    flat = (np.concatenate(arrs) if arrs
+            else np.zeros((0,), np.int64))
+    seg = np.repeat(np.arange(len(arrs), dtype=np.int64), lens)
+    return flat, seg, offsets
+
+
+def np_commit_decide(l_ver, l_own, l_meta, l_seg,
+                     r_ver, r_own, r_meta, r_seen, r_seg,
+                     tids, r_clocks, n_txn: int, mode: int) -> np.ndarray:
+    """Per-transaction verdict: bool[n_txn], True iff every read entry
+    validates (at the member's OWN ``r_clock``/mode) and every write
+    lock is claimable (free and unflagged, or already held by the
+    member — ``try_lock_bulk``'s conflict rule).  Field layout matches
+    ``ArrayLockTable.gather``: meta bit0 = locked, bit1 = flag.
+    """
+    tids = np.asarray(tids, np.int64)
+    r_clocks = np.asarray(r_clocks, np.int64)
+    ok = np.ones(n_txn, bool)
+    r_seg = np.asarray(r_seg, np.int64)
+    if r_seg.size:
+        ver = np.asarray(r_ver, np.int64)
+        meta = np.asarray(r_meta)
+        locked = (meta & 1) != 0
+        flagged = (meta & 2) != 0
+        mine = locked & (np.asarray(r_own) == tids[r_seg])
+        rc = r_clocks[r_seg]
+        if mode == MODE_LT:
+            valid = mine | (~locked & ~flagged & (ver < rc))
+        elif mode == MODE_LE:
+            valid = (~locked | mine) & (ver <= rc)
+        else:
+            valid = (~locked | mine) & (ver == np.asarray(r_seen, np.int64))
+        # scatter-AND via a bincount of FAILURES: the common all-valid
+        # batch reduces an empty array (ufunc.at would walk every entry)
+        ok &= np.bincount(r_seg[~valid], minlength=n_txn) == 0
+    l_seg = np.asarray(l_seg, np.int64)
+    if l_seg.size:
+        meta = np.asarray(l_meta)
+        locked = (meta & 1) != 0
+        flagged = (meta & 2) != 0
+        own = locked & (np.asarray(l_own) == tids[l_seg])
+        claimable = ~((locked | flagged) & ~own)
+        ok &= np.bincount(l_seg[~claimable], minlength=n_txn) == 0
+    return ok
+
+
+def np_commit_fused(heap, w_addr, w_val, w_seg,
+                    l_ver, l_own, l_meta, l_seg,
+                    r_ver, r_own, r_meta, r_seen, r_seg,
+                    tids, r_clocks, commit_ver: int, n_txn: int,
+                    mode: int = MODE_LE):
+    """Numpy twin: ``(new_heap, txn_ok, new_l_ver)`` — exact at any
+    integer width (the wrapper routes int64-range batches here, the
+    ``write_back`` guard pattern).
+
+    ``new_heap`` is a copy with every SURVIVING member's ``(addr, val)``
+    entries applied; failed members leave no trace.  ``new_l_ver[e]`` is
+    the release version for write-lock entry ``e``: ``commit_ver`` where
+    the owning member survived, the entry's original version otherwise.
+    Addresses must be in range; a negative one raises (it would wrap
+    under fancy indexing) exactly like ``np_write_back``.
+    """
+    ok = np_commit_decide(l_ver, l_own, l_meta, l_seg,
+                          r_ver, r_own, r_meta, r_seen, r_seg,
+                          tids, r_clocks, n_txn, mode)
+    l_seg = np.asarray(l_seg, np.int64)
+    new_l_ver = np.where(ok[l_seg] if l_seg.size else
+                         np.zeros((0,), bool),
+                         np.int64(commit_ver), np.asarray(l_ver, np.int64))
+    out = np.array(heap, copy=True)
+    w_seg = np.asarray(w_seg, np.int64)
+    if w_seg.size:
+        sel = ok[w_seg]
+        a = np.asarray(w_addr, np.int64)[sel]
+        if a.size and int(a.min(initial=0)) < 0:
+            raise IndexError(int(a.min()))
+        out[a] = np.asarray(w_val)[sel]
+    return out, ok, new_l_ver
+
+
+def _fused_kernel(mode, n_heap,
+                  heap_ref, wa_ref, wv_ref, ws_ref,
+                  lv_ref, lo_ref, lm_ref, ls_ref,
+                  rv_ref, ro_ref, rm_ref, rn_ref, rs_ref,
+                  tid_ref, rc_ref, cv_ref,
+                  o_heap, o_ok, o_lver):
+    # step 0: the whole verdict in one pass over the constant-index
+    # read/lock blocks (scatter-min accumulates per-member AND), then
+    # seed the heap and stamp the release versions
+    @pl.when(pl.program_id(0) == 0)
+    def _decide():
+        tids = tid_ref[...]
+        rcs = rc_ref[...]
+        ok = jnp.ones(o_ok.shape, jnp.int32)
+        rm = rm_ref[...]
+        locked = (rm & 1) != 0
+        flagged = (rm & 2) != 0
+        seg = rs_ref[...]
+        mine = locked & (ro_ref[...] == tids[seg])
+        ver = rv_ref[...]
+        rc = rcs[seg]
+        if mode == MODE_LT:
+            valid = mine | ((~locked) & (~flagged) & (ver < rc))
+        elif mode == MODE_LE:
+            valid = ((~locked) | mine) & (ver <= rc)
+        else:
+            valid = ((~locked) | mine) & (ver == rn_ref[...])
+        ok = ok.at[seg].min(valid.astype(jnp.int32))
+        lm = lm_ref[...]
+        llocked = (lm & 1) != 0
+        lflag = (lm & 2) != 0
+        lseg = ls_ref[...]
+        lown = llocked & (lo_ref[...] == tids[lseg])
+        claim = jnp.logical_not((llocked | lflag) & (~lown))
+        ok = ok.at[lseg].min(claim.astype(jnp.int32))
+        o_ok[...] = ok
+        o_lver[...] = jnp.where(ok[lseg] == 1, cv_ref[0], lv_ref[...])
+        o_heap[...] = heap_ref[...]
+
+    # every step (incl. 0, after the decide above): scatter this write
+    # tile — failed members' addresses redirect one past the end, which
+    # jax scatter drops, so their values never land
+    okv = o_ok[...][ws_ref[...]]
+    addr = jnp.where(okv == 1, wa_ref[...], n_heap)
+    o_heap[...] = o_heap[...].at[addr].set(wv_ref[...])
+
+
+def commit_fused_flat(heap, w_addr, w_val, w_seg,
+                      l_ver, l_own, l_meta, l_seg,
+                      r_ver, r_own, r_meta, r_seen, r_seg,
+                      tids, r_clocks, commit_ver, *, mode: int = MODE_LE,
+                      tile: int = 512, interpret: bool = True):
+    """heap: [H]; write batch [N] (N a multiple of ``tile``, int32 addrs
+    and segs, values heap.dtype); lock batch [L]; read batch [M]; txn
+    vectors [T] (int32); commit_ver: [1] int32 (REBASED — 0 by the
+    wrapper's convention).  Returns ``(heap' [H], ok [T] int32,
+    lver' [L] int32)``.  Pad rows must point their seg at a dummy txn
+    slot (read/lock batches) or carry an out-of-range address (write
+    batch) — ``ops.commit_fused`` owns those conventions.
+    """
+    (h,) = heap.shape
+    n = w_addr.shape[0]
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    t = tids.shape[0]
+    L = l_ver.shape[0]
+    m = r_ver.shape[0]
+    const = lambda s: pl.BlockSpec((s,), lambda i: (0,))   # noqa: E731
+    tiled = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        lambda *refs: _fused_kernel(mode, h, *refs),
+        grid=grid,
+        in_specs=[
+            const(h),                      # heap
+            tiled, tiled, tiled,           # w_addr, w_val, w_seg
+            const(L), const(L), const(L), const(L),   # l_*
+            const(m), const(m), const(m), const(m), const(m),  # r_*
+            const(t), const(t),            # tids, r_clocks
+            const(1),                      # commit_ver
+        ],
+        out_specs=[const(h), const(t), const(L)],
+        out_shape=[
+            jax.ShapeDtypeStruct((h,), heap.dtype),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((L,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(heap, w_addr, w_val, w_seg, l_ver, l_own, l_meta, l_seg,
+      r_ver, r_own, r_meta, r_seen, r_seg, tids, r_clocks, commit_ver)

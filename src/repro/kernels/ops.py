@@ -8,10 +8,12 @@ from __future__ import annotations
 
 import functools
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import commit_fused as _cf
 from repro.kernels import fused_adamw as _fa
 from repro.kernels import flash_attention as _fl
 from repro.kernels import gather_read as _gr
@@ -22,6 +24,12 @@ from repro.kernels import validate as _val
 from repro.kernels import version_select as _vs
 
 INTERPRET = os.environ.get("KERNEL_INTERPRET", "1") != "0"
+
+# the donated publish paths below request buffer donation unconditionally
+# (on TPU it makes the heap/ring update in-place); the CPU backend cannot
+# honor it and warns per call — scope the filter to exactly that message
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 
 def flash_attention(q, k, v, *, causal: bool, block_q: int = 128,
@@ -144,6 +152,207 @@ def write_back(heap, addrs, values, tile: int = 512):
         v = jnp.pad(v, (0, pad))
     out = _sw.scatter_write_flat(hj, a, v, tile=t, interpret=INTERPRET)
     return np.asarray(out)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _publish_row_xla(row, addrs, values):
+    return row.at[addrs].set(values)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("tile",))
+def _publish_row_pallas(row, addrs, values, *, tile):
+    return _sw.scatter_write_flat(row, addrs, values, tile=tile,
+                                  interpret=INTERPRET)
+
+
+def publish_row(row, addrs, values, tile: int = 512):
+    """Device-resident row publish: ``row.at[addrs].set(values)`` with
+    the input row DONATED.
+
+    The donation contract ``write_back`` cannot offer: that wrapper
+    returns an ndarray (a device->host heap copy per call), which is
+    fine for the in-place numpy engine heap but wrong for a commit path
+    whose row should never leave the device.  Here the result stays a
+    jax array, the jit requests donation of the row buffer (in-place on
+    backends that honor it; the CPU backend ignores the request), and
+    no host materialization of the row happens at any width the caller
+    admits.  The caller owns the bounds check and the int64-range guard
+    (``scatter_row`` / ``commit_fused`` route guarded batches to the
+    numpy twins) — and, on device runtimes, ownership of ``row``: a
+    donated buffer is invalidated, so snapshot-pinned readers must be
+    handed a fresh alias first (see ``MVStoreHandle._install``).
+    """
+    import numpy as np
+
+    a_np = np.asarray(addrs, np.int64)
+    n = int(a_np.shape[0])
+    rj = jnp.asarray(row)
+    if n == 0:
+        return rj
+    if not INTERPRET:
+        t = min(tile, 1 << (n - 1).bit_length())
+        pad = (-n) % t
+        a = jnp.asarray(a_np, jnp.int32)
+        v = jnp.asarray(values, rj.dtype)
+        if pad:
+            a = jnp.pad(a, (0, pad), constant_values=int(rj.shape[0]))
+            v = jnp.pad(v, (0, pad))
+        return _publish_row_pallas(rj, a, v, tile=t)
+    return _publish_row_xla(rj, jnp.asarray(a_np),
+                            jnp.asarray(values, rj.dtype))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("mode", "tile"))
+def _commit_fused_jit(heap, wa, wv, ws, lv, lo, lm, ls,
+                      rv, ro, rm, rn, rs, tids, rcs, cv, *, mode, tile):
+    return _cf.commit_fused_flat(
+        heap, wa, wv, ws, lv, lo, lm, ls, rv, ro, rm, rn, rs,
+        tids, rcs, cv, mode=mode, tile=tile, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _ring_refresh(ring, ring_ts, row, slot, ts):
+    new_ring = jax.lax.dynamic_update_index_in_dim(
+        ring, row.astype(ring.dtype), slot, 0)
+    new_ts = jax.lax.dynamic_update_index_in_dim(
+        ring_ts, ts.astype(ring_ts.dtype), slot, 0)
+    return new_ring, new_ts
+
+
+def commit_fused(heap, w_addr, w_val, w_seg,
+                 l_words, l_seg, r_words, r_seen, r_seg,
+                 tids, r_clocks, commit_ver, n_txn, *,
+                 mode=None, tile: int = 512,
+                 ring=None, ring_ts=None, ring_slot=None):
+    """Group-commit megakernel: validate + claim-check + scatter + stamp
+    for a batch of conflict-disjoint transactions in ONE launch.
+
+    ``heap``: [H]; write batch ``(w_addr, w_val, w_seg)``: [N] flat
+    segment layout (``commit_fused.pack_segments``); ``l_words``/
+    ``r_words``: raw packed int64 lock words for the write-lock and
+    read-set entries (gathered by the caller under its atomicity
+    bracket), with ``l_seg``/``r_seg`` owner segments and ``r_seen``
+    the versions recorded at read time; ``tids``/``r_clocks``: [T]
+    per-member identity and snapshot.  Returns ``(new_heap, txn_ok,
+    new_l_words)`` — ``new_heap`` a jax array (device-resident, heap
+    buffer donated; never materialized to host here; the exact ndarray
+    when the batch routes to the numpy twin), ``txn_ok`` a
+    bool[n_txn] ndarray, ``new_l_words`` exact int64 release words:
+    ``commit_ver`` stamped unlocked where the member survived, the
+    original word otherwise.  With ``ring``/``ring_ts``/``ring_slot``
+    given, the version-ring row refresh rides the same call (donated;
+    the MVStore publish path — its commit lock is the held seqlock) and
+    two more values ``(new_ring, new_ring_ts)`` are returned.
+
+    Versions are REBASED to ``commit_ver`` before the int32 cast (the
+    ``validate_readset`` treatment — the predicates only compare
+    deltas) and the release words are reconstructed host-side at full
+    width; batches whose payloads/addresses exceed int32 route to the
+    in-file numpy twin (``np_commit_fused``) exactly like
+    ``write_back``, as does an int64-range host heap.
+    """
+    import numpy as np
+
+    from repro.core.engine.arrayheap import (_TID_BIAS, _TID_MASK,
+                                             _UNLOCKED_WORD, _VER_SHIFT)
+
+    if mode is None:
+        mode = _cf.MODE_LE
+    base = int(commit_ver)
+    lo32, hi32 = -(1 << 31) + 1, (1 << 31) - 1
+
+    def unpack(words):
+        w = np.asarray(words, np.int64)
+        ver = w >> _VER_SHIFT
+        own = (((w >> 2) & _TID_MASK) - _TID_BIAS).astype(np.int32)
+        meta = (((w >> 1) & 1) | ((w & 1) << 1)).astype(np.int32)
+        return ver, own, meta
+
+    l_ver, l_own, l_meta = unpack(l_words)
+    r_ver, r_own, r_meta = unpack(r_words)
+    w_addr = np.asarray(w_addr, np.int64)
+    w_seg = np.asarray(w_seg, np.int64)
+    l_seg = np.asarray(l_seg, np.int64)
+    r_seg = np.asarray(r_seg, np.int64)
+    r_seen = np.asarray(r_seen, np.int64)
+    vals = np.asarray(w_val)
+
+    def stamp(ok):
+        return np.where(ok[l_seg] if l_seg.size else np.zeros((0,), bool),
+                        (np.int64(base) << _VER_SHIFT)
+                        | np.int64(_UNLOCKED_WORD),
+                        np.asarray(l_words, np.int64))
+
+    def _beyond_int32(a):
+        return a.dtype == np.int64 and a.size and \
+            (int(a.max()) > hi32 or int(a.min()) < lo32)
+
+    if not isinstance(heap, (np.ndarray, jax.Array)):
+        heap = np.asarray(heap)
+    heap_np = heap if isinstance(heap, np.ndarray) else None
+    if _beyond_int32(vals) or _beyond_int32(w_addr) \
+            or (heap_np is not None and _beyond_int32(heap_np)):
+        new_heap, ok, _ = _cf.np_commit_fused(
+            np.asarray(heap), w_addr, vals, w_seg,
+            l_ver, l_own, l_meta, l_seg,
+            r_ver, r_own, r_meta, r_seen, r_seg,
+            tids, r_clocks, base, n_txn, mode)
+        # stay numpy on this route: jnp.asarray without x64 would
+        # truncate the very int64 payloads that routed us here
+        out = (new_heap, ok, stamp(ok))
+    else:
+        hj = jnp.asarray(heap)
+        h = int(hj.shape[0])
+        n = int(w_addr.shape[0])
+        t = min(tile, 1 << (max(n, 1) - 1).bit_length())
+        pad = (-n) % t if n else t        # >=1 grid step runs the verdict
+        a32 = np.concatenate([w_addr, np.full(pad, h, np.int64)])
+        s32 = np.concatenate([w_seg, np.zeros(pad, np.int64)])
+        v = jnp.concatenate([jnp.asarray(vals, hj.dtype),
+                             jnp.zeros((pad,), hj.dtype)]) if pad \
+            else jnp.asarray(vals, hj.dtype)
+
+        def rel(x):
+            return np.clip(np.asarray(x, np.int64) - base, lo32, hi32)
+
+        # dummy txn slot T absorbs the pad rows of empty side batches
+        tids_p = np.concatenate([np.asarray(tids, np.int64), [0]])
+        rcs_p = np.concatenate([rel(r_clocks), [0]])
+        dummy = len(tids_p) - 1
+
+        def side(ver_rel, own, meta, seen_rel, seg):
+            if seg.size:
+                return ver_rel, own, meta, seen_rel, seg
+            z = np.zeros(1, np.int64)
+            return z, z.astype(np.int32), z.astype(np.int32), z, \
+                np.full(1, dummy, np.int64)
+
+        lv, lo_, lm, _, ls = side(rel(l_ver), l_own, l_meta,
+                                  np.zeros_like(l_ver), l_seg)
+        rv, ro, rm, rn, rs = side(rel(r_ver), r_own, r_meta,
+                                  rel(r_seen), r_seg)
+
+        def i32(x):
+            return jnp.asarray(np.asarray(x), jnp.int32)
+
+        new_heap, ok32, _ = _commit_fused_jit(
+            hj, i32(a32), v, i32(s32),
+            i32(lv), i32(lo_), i32(lm), i32(ls),
+            i32(rv), i32(ro), i32(rm), i32(rn), i32(rs),
+            i32(tids_p), i32(rcs_p), jnp.zeros((1,), jnp.int32),
+            mode=int(mode), tile=t)
+        ok = np.asarray(ok32[:n_txn]) != 0
+        out = (new_heap, ok, stamp(ok))
+    if ring is None:
+        return out
+    new_heap, ok, new_l = out
+    new_ring, new_ts = _ring_refresh(
+        jnp.asarray(ring), jnp.asarray(ring_ts), jnp.asarray(new_heap),
+        jnp.asarray(int(ring_slot), jnp.int32),
+        jnp.asarray(np.int64(base) if ring_ts.dtype == np.int64
+                    else np.int32(base)))
+    return new_heap, ok, new_l, new_ring, new_ts
 
 
 def validate_readset(ver, own, meta, seen, r_clock, tid, mode,

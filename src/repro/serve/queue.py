@@ -10,9 +10,18 @@ letting latency run away unbounded.  Shedding is a typed outcome
 Admission rejects when either bound trips:
   * depth:  queued requests >= ``max_depth``
   * wait:   estimated queue wait exceeds ``wait_budget_s``, where the
-    estimate is ``depth * ema_service_time / n_servers`` — the classic
-    M/M/c eyeball using an EMA of observed per-request service time fed
-    back by the scheduler (``note_service_time``).
+    estimate is ``depth * service_time / n_servers`` — the classic
+    M/M/c eyeball using observed per-request service time fed back by
+    the scheduler (``note_service_time``).
+
+With ``autotune=True`` (the default when a budget is set) the wait
+estimate uses ``max(EMA, rolling p99)`` of observed service times
+instead of the EMA alone: an EMA is mean-seeking, so a bimodal service
+distribution (fast cache-hit decodes + occasional Mode-Q abort storms)
+lets the mean admit a queue whose TAIL blows the budget.  Tracking the
+p99 reservoir effectively TIGHTENS the budget under slow-tail service —
+``effective_wait_budget_s`` reports the equivalent fixed budget — and
+relaxes back as the tail drains, with no operator knob.
 
 Thread-safe: the load generator and the scheduler loop may live on
 different threads (examples/serve_snapshots.py does exactly that).
@@ -111,12 +120,16 @@ class RequestQueue:
     def __init__(self, max_depth: int = 64,
                  wait_budget_s: Optional[float] = None,
                  n_servers: int = 1, est_service_s: float = 0.05,
-                 ema_alpha: float = 0.2):
+                 ema_alpha: float = 0.2, autotune: bool = True,
+                 reservoir_capacity: int = 512):
+        from repro.serve.metrics import PercentileReservoir
         self.max_depth = max_depth
         self.wait_budget_s = wait_budget_s
         self.n_servers = max(1, n_servers)
         self.ema_alpha = ema_alpha
+        self.autotune = autotune
         self._service_ema = est_service_s
+        self._service_p99 = PercentileReservoir(capacity=reservoir_capacity)
         self._q: deque = deque()
         self._lock = threading.Lock()
         self._closed = False
@@ -162,10 +175,21 @@ class RequestQueue:
         with self._lock:
             a = self.ema_alpha
             self._service_ema = (1 - a) * self._service_ema + a * dt
+            self._service_p99.add(dt)
+
+    def _per_request_s(self) -> float:
+        # caller holds the lock.  Autotune: plan for the TAIL, not the
+        # mean — max(EMA, p99) so a slow-tail service distribution
+        # tightens admission while a uniform one degrades to the EMA.
+        if self.autotune and self._service_p99.count:
+            p99 = self._service_p99.percentile(99)
+            if p99 == p99:                  # not NaN
+                return max(self._service_ema, p99)
+        return self._service_ema
 
     def _estimated_wait(self) -> float:
         # caller holds the lock
-        return len(self._q) * self._service_ema / self.n_servers
+        return len(self._q) * self._per_request_s() / self.n_servers
 
     def estimated_wait_s(self) -> float:
         with self._lock:
@@ -180,6 +204,25 @@ class RequestQueue:
     def service_ema_s(self) -> float:
         with self._lock:
             return self._service_ema
+
+    @property
+    def service_p99_s(self) -> float:
+        with self._lock:
+            return self._service_p99.percentile(99)
+
+    @property
+    def effective_wait_budget_s(self) -> Optional[float]:
+        """The fixed budget this queue currently behaves like: the
+        configured budget scaled by ``ema / max(ema, p99)``.  Equal to
+        ``wait_budget_s`` when autotune is off or the tail is no slower
+        than the mean; TIGHTER (smaller) under a slow tail."""
+        with self._lock:
+            if self.wait_budget_s is None:
+                return None
+            per = self._per_request_s()
+            if per <= 0:
+                return self.wait_budget_s
+            return self.wait_budget_s * self._service_ema / per
 
     # -- drain ----------------------------------------------------------
     def close(self) -> None:

@@ -62,6 +62,10 @@ class ServiceConfig:
     max_new: int = 12                 # tokens per request (incl. prefill)
     queue_depth: int = 64
     wait_budget_s: Optional[float] = 0.5
+    # wait-budget autotune: admission plans for max(EMA, p99) of
+    # observed service times, tightening the budget under a slow tail
+    # (see RequestQueue); False pins the PR-6 fixed-budget behavior
+    autotune_wait_budget: bool = True
     max_request_aborts: int = 8
     target_qps: float = 60.0
     duration_s: float = 2.0
@@ -295,7 +299,8 @@ class SnapshotService:
             max_depth=self.cfg.queue_depth,
             wait_budget_s=self.cfg.wait_budget_s,
             n_servers=self.cfg.n_slots,
-            est_service_s=self.cfg.max_new * max(self.cfg.work_s, 1e-4))
+            est_service_s=self.cfg.max_new * max(self.cfg.work_s, 1e-4),
+            autotune=self.cfg.autotune_wait_budget)
         self.executor = executor
         if getattr(executor, "metrics", None) is None \
                 and hasattr(executor, "metrics"):

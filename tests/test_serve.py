@@ -56,6 +56,41 @@ def test_queue_sheds_on_wait_budget():
     assert q.offer(Request(7)) is Admission.ADMITTED
 
 
+def test_queue_autotune_tightens_budget_under_slow_tail():
+    """Injected slow-tail service times must TIGHTEN the effective wait
+    budget: a bimodal distribution keeps the EMA low (mean-seeking),
+    but the p99 reservoir sees the tail, so the autotuned queue sheds
+    an offer a fixed-budget twin would admit."""
+    mk = lambda auto: RequestQueue(  # noqa: E731
+        max_depth=64, wait_budget_s=0.5, est_service_s=0.01,
+        autotune=auto)
+    tuned, fixed = mk(True), mk(False)
+    for q in (tuned, fixed):
+        # fast decodes with mid-stream slow-tail stalls (Mode-Q abort
+        # storms); more fast traffic follows, so the mean-seeking EMA
+        # forgets the tail while the reservoir keeps it
+        for _ in range(60):
+            q.note_service_time(0.01)
+        for _ in range(5):
+            q.note_service_time(2.0)
+        for _ in range(60):
+            q.note_service_time(0.01)
+        for rid in range(3):
+            q.offer(Request(rid))
+    # EMA forgot the tail; the p99 reservoir did not
+    assert tuned.service_ema_s < 0.5 < tuned.service_p99_s
+    assert tuned.effective_wait_budget_s < fixed.effective_wait_budget_s
+    assert fixed.effective_wait_budget_s == pytest.approx(0.5)
+    # depth 3 * p99 2s >> 0.5s budget: autotune sheds, fixed admits
+    assert fixed.offer(Request(10)) is Admission.ADMITTED
+    assert tuned.offer(Request(10)) is Admission.SHED_WAIT
+    # tail drains: fast observations refill the reservoir and the
+    # budget relaxes back toward the configured value
+    for _ in range(4000):
+        tuned.note_service_time(0.01)
+    assert tuned.offer(Request(11)) is Admission.ADMITTED
+
+
 def test_queue_wait_estimate_scales_with_servers():
     one = RequestQueue(max_depth=64, est_service_s=1.0, n_servers=1)
     four = RequestQueue(max_depth=64, est_service_s=1.0, n_servers=4)
