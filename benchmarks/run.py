@@ -331,6 +331,28 @@ def bench_rwmix():
     return rows
 
 
+def bench_reliability():
+    """Crash-recovery eval headline re-saved under the bench_ prefix:
+    rwmix rotations under a seeded kill schedule, recovery after every
+    kill, zero-violation gate (CI's results artifact wants
+    bench_reliability.json next to the other bench_*.json)."""
+    from repro.eval.driver import reliability_headline, run_eval
+    from repro.eval.results import save_results
+
+    rows, _ = run_eval("reliability", seed=SEED, quick=True, save=False)
+    head = reliability_headline(rows)
+    for r in rows:
+        _emit(f"reliability/{r.get('variant', '?')}/{r['backend']}",
+              1e6 / max(r.get("updates_per_sec", 0.0), 1e-9),
+              f"upd/s={r.get('updates_per_sec', 0.0):.0f};"
+              f"kills={r.get('kills', 0)};"
+              f"recovered={r.get('recoveries', 0)};"
+              f"violations={r.get('violations', 0)}")
+    save_results("reliability", rows, SEED, out_dir=RESULTS_DIR,
+                 extra_meta={"headline": head}, prefix="bench")
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Roofline report (reads the dry-run sweep results)
 # ---------------------------------------------------------------------------
@@ -361,6 +383,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "groupcommit": bench_groupcommit,
     "rwmix": bench_rwmix,
+    "reliability": bench_reliability,
     "roofline": bench_roofline_report,
 }
 

@@ -33,6 +33,7 @@ from repro.api.substrate import SubstrateBase, Txn
 from repro.core import modes as M
 from repro.core.engine import AbortTx
 from repro.core.stats_schema import base_stats
+from repro.reliability import faultpoints as FP
 
 __all__ = ["MVStoreHandle"]
 
@@ -103,6 +104,12 @@ class MVStoreHandle(SubstrateBase):
         live = {self._key: jnp.zeros((0,), jnp.int32)}
         self._path = mvstore.block_paths(live)[0]
         self._commit_lock = threading.Lock()
+        # crash-recovery slot (reliability/recovery.recover_handle): the
+        # fused commit DONATES the old live/ring buffers, so between the
+        # fused call and _install the ONLY reachable copy of the store is
+        # this in-flight state — a crash there strands readers on deleted
+        # buffers until recovery completes the install
+        self._inflight = None
         self._readers = [self.controller.reader() for _ in range(n_threads)]
         self._counters = [{k: 0 for k in _COUNTER_KEYS}
                          for _ in range(n_threads)]
@@ -298,6 +305,8 @@ class MVStoreHandle(SubstrateBase):
             if int(state.clock) != ctx.read_clock:
                 conflict = True            # another step committed first
             else:
+                if FP.ACTIVE is not None:
+                    FP.fire("pre_clock_tick", ctx.tid)
                 state = self.controller.trainer_tick(state)
                 mode = self.controller.current_local_mode()
                 idx = np.array(sorted(ctx.write_buf), dtype=np.int64)
@@ -306,11 +315,19 @@ class MVStoreHandle(SubstrateBase):
                 # seqlock bracket): scatter into the live row AND the
                 # PackedVLT ring refresh ride a single device-resident
                 # ``ops.commit_fused`` call — no scatter-then-rotate
-                # host round trip (``mvstore.mv_commit_fused``)
+                # host round trip (``mvstore.mv_commit_fused``).  The
+                # fused call fires pre_scatter itself (before donation);
+                # from the call's return until _install the new state is
+                # parked in _inflight so recovery can finish the publish
                 state = self._mvstore.mv_commit_fused(
                     state, self._key, idx, vals, local_mode=mode,
                     cfg=self.cfg)
+                self._inflight = state
+                if FP.ACTIVE is not None:
+                    FP.fire("post_scatter", ctx.tid)
+                    FP.fire("pre_release", ctx.tid)
                 self._install(state)
+                self._inflight = None
         if conflict:
             self._abort_ctx(ctx)
         c["commits"] += 1

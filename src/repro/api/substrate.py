@@ -212,7 +212,11 @@ class _TxnScope:
         # AbortTx from inside the body: the backend already rolled back
         # (abort() is idempotent, so a voluntary user-raised AbortTx is
         # unwound here too); other exceptions must roll back before
-        # propagating.
+        # propagating.  A simulated crash (reliability/faultpoints) is
+        # the one exception that must NOT roll back: a real crash never
+        # runs this frame, and recovery needs the crash image intact.
+        if getattr(exc, "simulated_crash", False):
+            return False
         self._sub.abort(self._txn)
         return False
 
@@ -331,10 +335,14 @@ def run(tm: Any, fn: Callable[[Txn], Any], tid: int = 0,
             if backoff_s:
                 delay = min(_BACKOFF_CAP_S, backoff_s * (1 << min(tries, 10)))
                 time.sleep(delay * random.random())
-        except BaseException:
+        except BaseException as e:
             # user-code exception mid-attempt: roll back so the TM is not
-            # poisoned (locks held / writes unrolled), then propagate
-            sub.abort(txn)
+            # poisoned (locks held / writes unrolled), then propagate —
+            # unless it's a simulated crash (reliability/faultpoints),
+            # whose whole point is that no cleanup frame ever runs and
+            # recovery must reconstruct consistency from the wreckage
+            if not getattr(e, "simulated_crash", False):
+                sub.abort(txn)
             raise
 
 

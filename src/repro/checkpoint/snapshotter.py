@@ -15,6 +15,7 @@ pipeline resumes from the recorded step (bitwise-deterministic stream).
 from __future__ import annotations
 
 import dataclasses
+import enum
 import json
 import os
 import queue
@@ -26,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.core import mvstore
+from repro.reliability import faultpoints as FP
 
 
 def _flatten(tree):
@@ -53,6 +55,10 @@ def save_checkpoint(directory: str, step: int, state, *,
              "dtype": logical_dtype})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    if FP.ACTIVE is not None:
+        # a crash here leaves only the .tmp directory — restore_checkpoint
+        # skips it and recovery replays from the previous manifest
+        FP.fire("pre_manifest_publish")
     os.replace(tmp, d)          # atomic publish (restart-crash safe)
     return d
 
@@ -79,6 +85,23 @@ def restore_checkpoint(directory: str, template) -> Tuple[int, Any, Dict]:
     return manifest["step"], state, manifest.get("extra", {})
 
 
+class SubmitOutcome(enum.Enum):
+    """Typed result of ``CheckpointManager.submit``.
+
+    Truthiness preserves the historical bool contract (only SAVED is
+    truthy), but callers can now tell a snapshot-read conflict (ABORTED —
+    retry next step, the reader's K-heuristics saw the abort) from a
+    DROPPED snapshot (QUEUE_FULL — the serializer is behind; the read
+    succeeded but nothing will reach disk)."""
+
+    SAVED = "saved"
+    QUEUE_FULL = "queue_full"
+    ABORTED = "aborted"
+
+    def __bool__(self) -> bool:
+        return self is SubmitOutcome.SAVED
+
+
 class CheckpointManager:
     """Async checkpointer: a snapshot-reader thread that serializes
     consistent views while training proceeds."""
@@ -96,12 +119,19 @@ class CheckpointManager:
         self._worker.start()
         self.saved = []
         self.errors = []
+        self.dropped = 0
 
     def submit(self, step: int, mv_state: mvstore.MVStoreState, opt_state,
-               *, extra=None) -> bool:
+               *, extra=None) -> SubmitOutcome:
         """Take a consistent snapshot NOW (versioned read at the current
-        clock) and enqueue serialization.  Returns False if the snapshot
-        aborted (caller may retry next step — the reader retry loop)."""
+        clock) and enqueue serialization.
+
+        ABORTED: the snapshot read conflicted (caller may retry next step
+        — the reader retry loop).  QUEUE_FULL: the snapshot was read
+        consistently but DROPPED because the serializer is behind; the
+        drop is counted in ``stats()`` and the reader does NOT record a
+        commit for it (historically it did, silently skewing the
+        K-heuristics toward a checkpoint that never existed)."""
         read_clock = int(mv_state.clock)
         if self.reader is not None:
             self.reader.begin(read_clock)
@@ -110,9 +140,7 @@ class CheckpointManager:
         if not bool(ok):
             if self.reader is not None:
                 self.reader.on_abort(n_reads)
-            return False
-        if self.reader is not None:
-            self.reader.on_commit(n_reads, read_clock)
+            return SubmitOutcome.ABORTED
         # materialize on host before the trainer donates the buffers
         host_view = jax.tree.map(np.asarray, view)
         host_opt = jax.tree.map(np.asarray, opt_state)
@@ -120,9 +148,21 @@ class CheckpointManager:
             try:
                 self._q.put_nowait((step, host_view, host_opt, extra))
             except queue.Full:
-                return False
+                self.dropped += 1
+                if self.reader is not None:
+                    # the read was consistent but nothing durable came of
+                    # it — an abort, as far as the heuristics go
+                    self.reader.on_abort(n_reads)
+                return SubmitOutcome.QUEUE_FULL
             self._inflight += 1
-        return True
+        # on_commit only after the snapshot is durably enqueued
+        if self.reader is not None:
+            self.reader.on_commit(n_reads, read_clock)
+        return SubmitOutcome.SAVED
+
+    def stats(self) -> Dict[str, Any]:
+        return {"saved": len(self.saved), "dropped": self.dropped,
+                "errors": len(self.errors), "inflight": self._inflight}
 
     def _loop(self):
         while True:

@@ -33,6 +33,7 @@ from repro.core.engine import (
 from repro.core.engine import bulkread as B
 from repro.core.engine import commit as C
 from repro.core.engine import validation as V
+from repro.reliability import faultpoints as FP
 
 
 # ---------------------------------------------------------------------------
@@ -78,18 +79,38 @@ class TL2Policy(PolicyBase):
 
     def commit_update(self, eng, d) -> None:
         locked = C.acquire_write_locks(eng, d)    # aborts on conflict
-        wv = eng.clock.increment()                # GV4-ish: one fetch-add
         try:
+            # inside the guard: an injected FaultError here must release
+            # the claim like any other mid-commit exception
+            if FP.ACTIVE is not None:
+                FP.fire("pre_clock_tick", d.tid)
+            wv = eng.clock.increment()            # GV4-ish: one fetch-add
             if not eng.revalidate(d):
                 eng.abort_txn(d)
             C.write_back(eng, d)
+            if FP.ACTIVE is not None:
+                FP.fire("pre_release", d.tid)
             C.release_locks(eng, locked, wv)
             locked.clear()
-        finally:
+        except BaseException as e:
             # abort or ANY mid-commit exception: commit-time locks are
             # invisible to rollback (TL2 holds none at encounter time),
-            # so they must be released here or they leak forever
-            C.release_locks(eng, locked)
+            # so they must be released here or they leak forever — EXCEPT
+            # a simulated crash, which must leave the crash image (held
+            # locks, partial heap) intact for recovery to find
+            if not FP.is_simulated_crash(e):
+                if d.publish_started:
+                    # the commit record is written and the buffered data
+                    # already scattered (no undo exists to take it back):
+                    # the decision stands, so finish publication at wv
+                    # before letting the fault propagate
+                    C.release_locks(eng, locked, wv)
+                    d.stats["commits"] += 1
+                    d.active = False
+                    self.on_finish(eng, d)
+                else:
+                    C.release_locks(eng, locked)
+            raise
 
 
 # ---------------------------------------------------------------------------
@@ -187,14 +208,22 @@ class DCTLPolicy(PolicyBase):
         d.read_only = False
         addrs, values = C.dedup_last_wins(addrs, values)
         idxs = eng.locks.index_bulk(addrs)
+        if FP.ACTIVE is not None:
+            FP.fire("pre_claim", d.tid)
         new = try_bulk(idxs, d.tid, max_version=d.r_clock)
         if new is None:
             new = C.extend_and_relock(eng, d, idxs)
         if new is None:
             eng.abort_txn(d)
         d.locked_idxs.update(new.tolist())
+        if FP.ACTIVE is not None:
+            FP.fire("post_claim", d.tid)
         C.merge_undo(eng, d, addrs)
+        if FP.ACTIVE is not None:
+            FP.fire("pre_scatter", d.tid)
         C.heap_scatter(eng.heap, addrs, values)
+        if FP.ACTIVE is not None:
+            FP.fire("post_scatter", d.tid)
 
     def rollback(self, eng, d) -> None:
         C.rollback_inplace(eng, d)               # undo + deferred-clock bump
@@ -202,7 +231,29 @@ class DCTLPolicy(PolicyBase):
     def commit_update(self, eng, d) -> None:
         if not d.irrevocable and not eng.revalidate(d):
             eng.abort_txn(d)
-        C.release_locks(eng, d.locked_idxs, eng.clock.load())
+        if FP.ACTIVE is not None:
+            FP.fire("pre_clock_tick", d.tid)
+        cv = eng.clock.load()
+        # encounter-time commit record: the heap already holds the final
+        # values, so past this point recovery rolls FORWARD (release at a
+        # fresh tick) rather than restoring the undo log
+        d.publish_started = True
+        if FP.ACTIVE is not None:
+            try:
+                FP.fire("pre_release", d.tid)
+            except BaseException as e:
+                if not FP.is_simulated_crash(e):
+                    # decided: an injected recoverable error cannot abort
+                    # any more — finish the release so the outer abort
+                    # path (a no-op on an inactive descriptor) cannot
+                    # restore the undo log over committed data
+                    C.release_locks(eng, d.locked_idxs, cv)
+                    d.undo.clear()
+                    d.stats["commits"] += 1
+                    d.active = False
+                    self.on_finish(eng, d)
+                raise
+        C.release_locks(eng, d.locked_idxs, cv)
 
     def on_finish(self, eng, d) -> None:
         if d.irrevocable:
@@ -363,7 +414,23 @@ class TinySTMPolicy(DCTLPolicy):
     def commit_update(self, eng, d) -> None:
         if not eng.revalidate(d):
             eng.abort_txn(d)
-        C.release_locks(eng, d.locked_idxs, eng.clock.increment())
+        if FP.ACTIVE is not None:
+            FP.fire("pre_clock_tick", d.tid)
+        wv = eng.clock.increment()
+        d.publish_started = True
+        if FP.ACTIVE is not None:
+            try:
+                FP.fire("pre_release", d.tid)
+            except BaseException as e:
+                if not FP.is_simulated_crash(e):
+                    # decided: roll forward (see DCTL.commit_update)
+                    C.release_locks(eng, d.locked_idxs, wv)
+                    d.undo.clear()
+                    d.stats["commits"] += 1
+                    d.active = False
+                    self.on_finish(eng, d)
+                raise
+        C.release_locks(eng, d.locked_idxs, wv)
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,7 @@ from typing import Iterable, List, Optional
 import numpy as np
 
 from repro.core.engine.validation import BULK_MIN
+from repro.reliability import faultpoints as FP
 
 
 # ---------------------------------------------------------------------------
@@ -259,21 +260,33 @@ def acquire_write_locks(eng, d,
     acquisition order on the scalar path).
     """
     bm = BULK_MIN if bulk_min is None else bulk_min
+    if FP.ACTIVE is not None:
+        FP.fire("pre_claim", d.tid)
     try_bulk = getattr(eng.locks, "try_lock_bulk", None)
     if try_bulk is not None and len(d.write_map) >= bm:
-        locked = try_bulk(addr_lock_indices(eng, d.write_map), d.tid)
-        if locked is None:
+        claimed = try_bulk(addr_lock_indices(eng, d.write_map), d.tid)
+        if claimed is None:
             eng.abort_txn(d)
-        return locked.tolist()
-    locked: List[int] = []
-    for addr in d.write_map:
-        idx = eng.locks.index(addr)
-        st = eng.locks.read(idx)
-        if not eng.locks.try_lock(idx, st, d.tid):
-            release_locks(eng, locked)
-            eng.abort_txn(d)
-        if idx not in locked:
-            locked.append(idx)
+        locked = claimed.tolist()
+    else:
+        locked: List[int] = []
+        for addr in d.write_map:
+            idx = eng.locks.index(addr)
+            st = eng.locks.read(idx)
+            if not eng.locks.try_lock(idx, st, d.tid):
+                release_locks(eng, locked)
+                eng.abort_txn(d)
+            if idx not in locked:
+                locked.append(idx)
+    if FP.ACTIVE is not None:
+        try:
+            FP.fire("post_claim", d.tid)
+        except BaseException as e:
+            # an injected recoverable error must not leak the claim the
+            # caller never saw; a simulated crash must leave it held
+            if not FP.is_simulated_crash(e):
+                release_locks(eng, locked)
+            raise
     return locked
 
 
@@ -286,12 +299,21 @@ def write_back(eng, d, bulk_min: Optional[int] = None) -> None:
     """
     bm = BULK_MIN if bulk_min is None else bulk_min
     wm = d.write_map
+    if FP.ACTIVE is not None:
+        FP.fire("pre_scatter", d.tid)
+    # commit record: from here the decision is publish — a crash below
+    # rolls FORWARD from write_map (recovery.recover_engine)
+    d.publish_started = True
     if len(wm) >= bm and getattr(eng.heap, "scatter", None) is not None:
         addrs = np.fromiter(wm.keys(), np.int64, len(wm))
         heap_scatter(eng.heap, addrs, list(wm.values()))
+        if FP.ACTIVE is not None:
+            FP.fire("post_scatter", d.tid)
         return
     for addr, value in wm.items():
         eng.heap[addr] = value
+    if FP.ACTIVE is not None:
+        FP.fire("post_scatter", d.tid)
 
 
 def release_locks(eng, idxs: Iterable[int],

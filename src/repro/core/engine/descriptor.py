@@ -43,7 +43,7 @@ class TxnDescriptor:
         "r_clock", "read_only", "read_cnt", "read_set", "read_vals",
         "write_map", "locked_idxs", "undo", "versioned_write_set",
         "alloc_log", "local_mode_counter", "local_mode",
-        "dedup_read_set", "read_set_seen",
+        "dedup_read_set", "read_set_seen", "publish_started",
         # per-operation (survive retries)
         "versioned", "no_versioning", "initial_versioned_ts", "irrevocable")
 
@@ -78,6 +78,11 @@ class TxnDescriptor:
         # revalidation
         self.dedup_read_set = False
         self.read_set_seen: set = set()
+        # commit record for crash recovery (reliability/): set once the
+        # commit DECIDED and heap publication is about to begin — after a
+        # crash, True means roll FORWARD from write_map, False means roll
+        # back from undo
+        self.publish_started = False
 
     def reset_operation(self) -> None:
         """Per-operation reset (a NEW logical operation, not a retry)."""

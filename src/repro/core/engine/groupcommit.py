@@ -61,6 +61,7 @@ import numpy as np
 from repro.core.engine import commit as C
 from repro.core.engine.errors import AbortTx
 from repro.kernels.commit_fused import np_commit_decide, pack_segments
+from repro.reliability import faultpoints as FP
 
 __all__ = ["CommitBatcher", "partition_disjoint"]
 
@@ -383,6 +384,8 @@ class CommitBatcher:
                 all_ok = bool(ok.all())
                 any_ok = all_ok or bool(ok[l_seg].any())
             if any_ok:
+                if FP.ACTIVE is not None:
+                    FP.fire("pre_claim", int(tids[0]))
                 if all_ok:
                     claim = l_flat
                     locks.store_words(
@@ -393,14 +396,28 @@ class CommitBatcher:
                     locks.store_words(
                         claim,
                         locks.claim_words(l_words[sel], tids[l_seg[sel]]))
+                if FP.ACTIVE is not None:
+                    FP.fire("post_claim", int(tids[0]))
+                    FP.fire("pre_clock_tick", int(tids[0]))
             # ONE tick for the whole group — fetched AFTER the claim,
             # the same GV4 ordering the solo pipeline pins (module
             # docstring)
             wv = eng.clock.increment()
             if any_ok:
+                if FP.ACTIVE is not None:
+                    FP.fire("pre_scatter", int(tids[0]))
+                # group commit record: every surviving member is decided
+                # and about to publish — a crash from here rolls them
+                # all FORWARD (recovery.recover_engine)
+                for d, okd in zip(group, ok):
+                    if okd:
+                        d.publish_started = True
                 self._publish(group, ok, all_ok, w_addrs, w_vals,
                               l_flat, l_seg, r_flat, r_seg, r_seen,
                               tids, None, wv, mode)
+                if FP.ACTIVE is not None:
+                    FP.fire("post_scatter", int(tids[0]))
+                    FP.fire("pre_release", int(tids[0]))
                 # release-at-wv is a raw scatter: the stripes are still
                 # held and every claimed word is ours
                 locks.store_words(
@@ -479,7 +496,17 @@ class CommitBatcher:
                               tids, rcs, len(group), mode)
         sel_l = [ls for ls, okd in zip(l_sets, ok) if okd]
         if sel_l:
-            eng.locks.unlock_bulk(np.concatenate(sel_l), eng.clock.load())
+            if FP.ACTIVE is not None:
+                FP.fire("pre_clock_tick", int(tids[0]))
+            cv = eng.clock.load()
+            # encounter group commit record: the heap already holds the
+            # surviving members' values — crash from here rolls forward
+            for d, okd in zip(group, ok):
+                if okd:
+                    d.publish_started = True
+            if FP.ACTIVE is not None:
+                FP.fire("pre_release", int(tids[0]))
+            eng.locks.unlock_bulk(np.concatenate(sel_l), cv)
         self._bookkeep(group, ok, clear_locked=True)
         return ok
 

@@ -196,23 +196,33 @@ class MVController:
     def _any_sticky(self) -> bool:
         return any(r.ann.sticky_mode_u for r in self._readers)
 
+    def step_once(self) -> None:
+        """One controller decision round — the body of the poll loop.
+
+        Public so tests (and recovery drills) can drive the mode state
+        machine SYNCHRONOUSLY with ``start_bg=False`` instead of
+        sleeping until a background poller happens to observe the same
+        announcements — the decision depends only on the announcement
+        state, never on wall-clock timing."""
+        cnt = self.mode_counter
+        mode = M.get_mode(cnt)
+        if mode == M.MODE_QTOU:
+            if self._participants_caught_up(cnt):
+                self._advance()                       # -> U
+                self.first_obs_mode_u_ts = self._trainer_clock
+        elif mode == M.MODE_U:
+            if not self._any_sticky():
+                self._advance()                       # -> UtoQ
+        elif mode == M.MODE_UTOQ:
+            if self._participants_caught_up(cnt):
+                self.first_obs_mode_u_ts = None
+                self._advance()                       # -> Q
+        else:  # Mode Q: unversioning rounds (paper SS4.4)
+            self._unversion_round()
+
     def _bg_loop(self) -> None:
         while not self._stop.is_set():
-            cnt = self.mode_counter
-            mode = M.get_mode(cnt)
-            if mode == M.MODE_QTOU:
-                if self._participants_caught_up(cnt):
-                    self._advance()                       # -> U
-                    self.first_obs_mode_u_ts = self._trainer_clock
-            elif mode == M.MODE_U:
-                if not self._any_sticky():
-                    self._advance()                       # -> UtoQ
-            elif mode == M.MODE_UTOQ:
-                if self._participants_caught_up(cnt):
-                    self.first_obs_mode_u_ts = None
-                    self._advance()                       # -> Q
-            else:  # Mode Q: unversioning rounds (paper SS4.4)
-                self._unversion_round()
+            self.step_once()
             time.sleep(self._poll)
 
     def _unversion_round(self) -> None:

@@ -101,6 +101,9 @@ def mv_commit(state: MVStoreState, new_params, *, local_mode: str,
               cfg: MVStoreConfig) -> MVStoreState:
     """Publish an optimizer step.  Rings rotate: the new value lands in slot
     ``clock' % R`` — a bounded version list ordered by timestamp."""
+    from repro.reliability import faultpoints as FP
+    if FP.ACTIVE is not None:
+        FP.fire("pre_scatter")
     new_clock = state.clock + 1
     ring, ring_ts = state.ring, state.ring_ts
     must_version = local_mode in ("U", "QtoU", "UtoQ")
@@ -150,6 +153,14 @@ def mv_commit_fused(state: MVStoreState, key: str, addrs, values, *,
     import numpy as np
 
     from repro.kernels import ops
+    from repro.reliability import faultpoints as FP
+
+    # fired BEFORE the donating call: past this point the old buffers
+    # are gone and the only copy of the store is the return value, which
+    # the caller must park somewhere recovery can find
+    # (MVStoreHandle._inflight)
+    if FP.ACTIVE is not None:
+        FP.fire("pre_scatter")
 
     new_clock = state.clock + 1
     live = state.live[key]

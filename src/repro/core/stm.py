@@ -50,6 +50,7 @@ from repro.core.engine import (
 )
 from repro.core.engine.engine import _Tx  # noqa: F401 (historical export)
 from repro.core.vlt import DELETED_TS, VLT, VersionList, VListNode
+from repro.reliability import faultpoints as FP
 
 __all__ = ["AbortTx", "MaxRetriesExceeded", "Multiverse",
            "MultiversePolicy", "TMBase", "run"]
@@ -132,9 +133,32 @@ class MultiversePolicy(PolicyBase):
         # vectorized bulk path (one lock-table gather) for large ones
         if not eng.revalidate(d):
             eng.abort_txn(d)
+        if FP.ACTIVE is not None:
+            FP.fire("pre_clock_tick", d.tid)
         commit_clock = eng.clock.load()
+        # commit record: versioned readers can observe cleared-TBD
+        # versions the instant _publish_versions runs, and the in-place
+        # heap already holds the final values — from here a crash must
+        # roll FORWARD (finish publish + release), never back
+        d.publish_started = True
         if d.versioned_write_set:
             self._publish_versions(eng, d, commit_clock)
+        if FP.ACTIVE is not None:
+            try:
+                FP.fire("pre_release", d.tid)
+            except BaseException as e:
+                if not FP.is_simulated_crash(e):
+                    # decided: versions are published, so an injected
+                    # recoverable error must complete the commit — an
+                    # undo-log rollback here would fork heap vs. VLT
+                    C.release_locks(eng, d.locked_idxs, commit_clock)
+                    self._retire_bufs[d.tid].commit()
+                    d.undo.clear()
+                    d.versioned_write_set.clear()
+                    d.stats["commits"] += 1
+                    d.active = False
+                    self.on_finish(eng, d)
+                raise
         # release write locks at the commit clock: the DEDUPED index set
         # both write paths maintain (two addresses colliding into one
         # lock word must release it exactly once — a second per-address
@@ -313,6 +337,8 @@ class MultiversePolicy(PolicyBase):
         d.read_only = False
         addrs, values = C.dedup_last_wins(addrs, values)
         idxs = eng.locks.index_bulk(addrs)
+        if FP.ACTIVE is not None:
+            FP.fire("pre_claim", d.tid)
         new = try_bulk(idxs, d.tid, max_version=d.r_clock)
         if new is None:
             # version-blocked but conflict-free batch: snapshot-extend
@@ -342,8 +368,14 @@ class MultiversePolicy(PolicyBase):
                 self.write(eng, d, int(a), v)
             return
         d.locked_idxs.update(new.tolist())
+        if FP.ACTIVE is not None:
+            FP.fire("post_claim", d.tid)
         C.merge_undo(eng, d, addrs)
+        if FP.ACTIVE is not None:
+            FP.fire("pre_scatter", d.tid)
         C.heap_scatter(eng.heap, addrs, values)
+        if FP.ACTIVE is not None:
+            FP.fire("post_scatter", d.tid)
 
     def _get_vlist(self, idx: int, addr: int) -> Optional[VersionList]:
         if not self.bloom.contains(idx, addr):

@@ -15,8 +15,8 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.eval.driver import longread_headline, run_eval, \
-    rwmix_headline, serving_headline, structrq_headline
+from repro.eval.driver import longread_headline, reliability_headline, \
+    run_eval, rwmix_headline, serving_headline, structrq_headline
 from repro.eval.workloads import WORKLOADS
 
 
@@ -30,6 +30,13 @@ def _fmt_row(row: dict) -> str:
         extra = (f"rqs/s={row['rqs_per_sec']:7.1f} "
                  f"failed={row['failed_ops']:4d} "
                  f"rq-vs-scan={row.get('rq_vs_scan', 0.0):5.2f}x")
+    elif "kills" in row:
+        extra = (f"updates/s={row['updates_per_sec']:8.1f} "
+                 f"kills={row['kills']:3d} "
+                 f"recovered={row['recoveries']:3d} "
+                 f"fwd={row['rolled_forward']:3d} "
+                 f"back={row['rolled_back']:3d} "
+                 f"violations={row['violations']:3d}")
     elif "write_words" in row:
         extra = (f"updates/s={row['updates_per_sec']:8.1f} "
                  f"failed={row['failed_updates']:4d} "
@@ -118,6 +125,18 @@ def main(argv=None) -> int:
                       f"aborts={d['snapshot_aborts']} "
                       f"mixed-versions={d['mixed_version_requests']} "
                       f"-> {tag}")
+    if args.workload == "reliability":
+        h = reliability_headline(rows)
+        for backend, d in sorted(h.items()):
+            verdict = ("recovers within 2x of fault-free" if d["holds"]
+                       else "does NOT hold")
+            print(f"\nheadline @ kill{d['kill_every']}: {backend} "
+                  f"faulted={d['faulted_updates_per_sec']:.1f} vs "
+                  f"nofault={d['nofault_updates_per_sec']:.1f} updates/s "
+                  f"({d['ratio_vs_nofault']:.2f}x) kills={d['kills']} "
+                  f"recovered={d['recoveries']} "
+                  f"(fwd={d['rolled_forward']} back={d['rolled_back']}) "
+                  f"violations={d['violations']} -> {verdict}")
     if args.workload == "structrq":
         h = structrq_headline(rows)
         for struct, d in sorted(h.items()):

@@ -32,7 +32,8 @@ from repro.eval.workloads import (
 )
 
 __all__ = ["run_eval", "time_trial", "longread_headline",
-           "rwmix_headline", "structrq_headline", "serving_headline"]
+           "rwmix_headline", "structrq_headline", "serving_headline",
+           "reliability_headline"]
 
 
 def time_trial(workers: Sequence[Callable], spec: TrialSpec,
@@ -220,6 +221,49 @@ def serving_headline(rows: List[Dict]) -> Dict:
         "baseline_degraded": any(d["degraded"]
                                  for d in baselines.values()),
     }
+
+
+def reliability_headline(rows: List[Dict]) -> Dict:
+    """The crash-recovery claim, extracted from reliability rows.
+
+    Per backend, compare the faulted variant (a worker killed
+    mid-publish every ~kill_every commits, recovered, re-admitted)
+    against the fault-free twin: recovery must actually have run
+    (kills > 0, every kill recovered), the trial must stay within 2x of
+    fault-free throughput (ratio >= 0.5), and violations — torn checker
+    reads AND post-trial invariant failures — must be zero.  The CLI
+    exits non-zero on any violation; ``holds`` summarizes the rest.
+    """
+    per: Dict[str, Dict] = {}
+    for r in rows:
+        if "kill_every" not in r:
+            continue
+        slot = per.setdefault(r["backend"], {})
+        key = "faulted" if r["kill_every"] else "nofault"
+        slot[key] = r
+    out: Dict[str, Dict] = {}
+    for backend, slot in per.items():
+        nf, f = slot.get("nofault"), slot.get("faulted")
+        if nf is None or f is None:
+            continue
+        base = nf["updates_per_sec"]
+        ratio = f["updates_per_sec"] / base if base > 0 else 0.0
+        violations = nf["violations"] + f["violations"]
+        out[backend] = {
+            "kill_every": f["kill_every"],
+            "kills": f["kills"],
+            "recoveries": f["recoveries"],
+            "rolled_forward": f["rolled_forward"],
+            "rolled_back": f["rolled_back"],
+            "nofault_updates_per_sec": base,
+            "faulted_updates_per_sec": f["updates_per_sec"],
+            "ratio_vs_nofault": ratio,
+            "violations": violations,
+            "holds": bool(f["kills"] > 0
+                          and f["recoveries"] == f["kills"]
+                          and ratio >= 0.5 and violations == 0),
+        }
+    return out
 
 
 def structrq_headline(rows: List[Dict]) -> Dict:

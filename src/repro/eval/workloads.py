@@ -535,5 +535,158 @@ class ServingWorkload:
         return row
 
 
+# ---------------------------------------------------------------------------
+# reliability: rwmix under a seeded kill schedule + crash recovery
+# ---------------------------------------------------------------------------
+
+
+class ReliabilityWorkload:
+    """rwmix's sum-preserving rotations while a seeded ``FaultSchedule``
+    kills an updater roughly every ``kill_every`` commits mid-publish.
+
+    Each kill leaves the crash image intact (held locks, a possibly
+    half-published commit); the dying worker's slot runs recovery
+    (``recover_engine`` — roll the decided commit forward or the
+    undecided one back, sweep orphaned locks, repair torn mirror rows),
+    consults ``runtime/elastic.rescale_plan`` for the degraded and
+    re-admitted fleet shapes, and rejoins under the same tid — the
+    supervisor restart loop collapsed into the worker thread.
+
+    Correctness is the rwmix checker (any completed read whose block sum
+    is off is a torn snapshot) PLUS a post-trial invariant sweep: lock
+    table empty, no torn mirror rows, clock monotone, every block sum
+    conserved.  Both land in ``violations`` so the CLI's exit gate sees
+    them.  The ``nofault`` variant is the same trial without a schedule:
+    the headline asks what fraction of fault-free throughput survives
+    the kill/recover cycle.
+    """
+
+    name = "reliability"
+    metric = "updates_per_sec"
+    default_backends = ("multiverse", "tl2", "dctl")
+
+    def variants(self, quick: bool = False) -> List[TrialSpec]:
+        dur, warm = (0.6, 0.2) if quick else (1.2, 0.3)
+        kill_every = 60 if quick else 200   # quick trials are short:
+        #                                     keep several kills in frame
+        return [TrialSpec(
+            workload=self.name, variant=v, n_readers=1, n_updaters=2,
+            duration_s=dur, warmup_s=warm,
+            params=dict(write_words=256, n_blocks=8, max_retries=2000,
+                        kill_every=k),
+        ) for v, k in (("nofault", 0), (f"kill{kill_every}", kill_every))]
+
+    def run_trial(self, backend: str, spec: TrialSpec, seed: int) -> Dict:
+        from repro.eval.driver import time_trial
+        from repro.reliability import faultpoints as FP
+        from repro.reliability.recovery import (check_engine_invariants,
+                                                recover_engine)
+        from repro.runtime.elastic import rescale_plan
+        p = spec.params
+        wb, n_blocks = p["write_words"], p["n_blocks"]
+        n_upd = spec.n_updaters
+        # same sizing rationale as rwmix: large lock table, thresholds
+        # that keep the checker unversioned (see RWMixWorkload notes)
+        tm = _make(backend, spec.total_threads,
+                   params=MultiverseParams(k1=30, k2=200, k3=200,
+                                           lock_table_bits=16))
+        base = tm.alloc(wb * n_blocks, INITIAL)
+        block_sum = wb * INITIAL
+        eng = getattr(tm, "raw", tm)
+        clock0 = eng.clock.load()
+        sched = None
+        if p["kill_every"]:
+            # one commit = one pre_claim + one pre_release arrival, so
+            # 2*kill_every arrivals ~= a kill every kill_every commits;
+            # the point mix exercises BOTH recovery directions (pre_claim
+            # kills roll back, pre_release kills roll forward)
+            sched = FP.FaultSchedule(
+                seed=seed, kill_every=2 * p["kill_every"],
+                points=("pre_claim", "pre_release"), action="kill")
+            FP.install(sched)
+
+        def updater(tid, stop, c):
+            r = random.Random(seed * 10007 + 300 + tid)
+            mine = [b for b in range(n_blocks) if b % n_upd == tid]
+
+            def rotate(tx):
+                off = base + wb * mine[r.randrange(len(mine))]
+                vals = np.asarray(tx.read_bulk(range(off, off + wb)),
+                                  np.int64)
+                tx.write_bulk(range(off, off + wb), np.roll(vals, 1))
+            while not stop.is_set():
+                try:
+                    run(tm, rotate, tid=tid,
+                        max_retries=p["max_retries"])
+                    c["updates"] += 1
+                except MaxRetriesExceeded:
+                    c["failed_updates"] += 1
+                except FP.SimulatedCrash:
+                    # worker dies mid-publish: recover its slot, plan the
+                    # degraded + re-admitted fleet, rejoin at the same tid
+                    c["kills"] += 1
+                    rep = recover_engine(tm, [tid])
+                    c["rolled_forward"] += len(rep.rolled_forward)
+                    c["rolled_back"] += len(rep.rolled_back)
+                    rescale_plan(n_devices=max(1, n_upd - 1),
+                                 model_parallel=1, global_batch=n_blocks,
+                                 old_microbatches=1)
+                    rescale_plan(n_devices=n_upd, model_parallel=1,
+                                 global_batch=n_blocks, old_microbatches=1)
+                    c["recoveries"] += 1
+
+        def checker(tid, stop, c):
+            r = random.Random(seed * 10007 + 900 + tid)
+
+            def check(tx):
+                off = base + wb * r.randrange(n_blocks)
+                return _batch_sum(tx.read_bulk(range(off, off + wb)))
+            while not stop.is_set():
+                try:
+                    got = run(tm, check, tid=tid,
+                              max_retries=p["max_retries"])
+                    c["checks"] += 1
+                    if got != block_sum:
+                        c["violations"] += 1
+                except MaxRetriesExceeded:
+                    c["failed_checks"] += 1
+
+        workers = [lambda stop, c, t=t: updater(t, stop, c)
+                   for t in range(n_upd)]
+        workers += [lambda stop, c, t=t: checker(n_upd + t, stop, c)
+                    for t in range(spec.n_readers)]
+        try:
+            counters, dt = time_trial(workers, spec)
+        finally:
+            if sched is not None:
+                FP.uninstall()
+                FP.reset_thread()
+        post = check_engine_invariants(
+            tm, clock_at_least=clock0,
+            expect_sums=[(base + wb * b, wb, block_sum)
+                         for b in range(n_blocks)])
+        stats = tm.stats()
+        tm.stop()
+        return {
+            "workload": self.name, "backend": backend, "tm": backend,
+            "variant": spec.variant, "seed": seed,
+            "write_words": wb, "n_blocks": n_blocks,
+            "kill_every": p["kill_every"],
+            "updates_per_sec": counters["updates"] / dt,
+            "failed_updates": counters["failed_updates"],
+            "checks_per_sec": counters["checks"] / dt,
+            "failed_checks": counters["failed_checks"],
+            "kills": counters["kills"],
+            "recoveries": counters["recoveries"],
+            "rolled_forward": counters["rolled_forward"],
+            "rolled_back": counters["rolled_back"],
+            "violations": counters["violations"] + len(post),
+            "post_invariant_failures": post,
+            "mode_transitions": stats.get("mode_transitions", 0),
+            "stm_stats": stats,
+        }
+
+
 WORKLOADS = {w.name: w for w in (LongReadWorkload(), RWMixWorkload(),
-                                 StructRQWorkload(), ServingWorkload())}
+                                 StructRQWorkload(), ServingWorkload(),
+                                 ReliabilityWorkload())}

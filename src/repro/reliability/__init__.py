@@ -1,0 +1,52 @@
+"""repro.reliability — deterministic fault injection + crash recovery.
+
+The paper's consistency claim ("a versioned snapshot is always a
+committed prefix") is exactly the property a crash-recovery path needs,
+so this package makes failure a first-class, replayable scenario:
+
+  * ``faultpoints`` — named injection points threaded through the commit
+    pipelines (solo, group, MVStore fused publish) and the checkpointer.
+    Install a seeded ``FaultSchedule`` and a chosen arrival raises,
+    kills the owning thread mid-commit, or drops a simulated process.
+    With nothing installed every hook is one module-attribute load — the
+    hot paths pay nothing.
+  * ``recovery`` — scans the heap / lock table / MV ring after a
+    simulated crash: releases orphaned locks held by dead owners, rolls
+    encounter-time writes back from undo logs, rolls decided buffered
+    commits FORWARD from their write maps (the ``publish_started``
+    commit record), truncates torn ring rows past the last durable
+    clock, repairs torn PackedVLT mirror rows, and replays training
+    state from the latest checkpoint manifest.
+  * ``workload`` — the ``reliability`` eval: rwmix under a seeded kill
+    schedule with live recovery + worker rejoin (``runtime/elastic``),
+    violation-gated like every other eval headline.
+
+Import ``faultpoints`` directly from hot paths; the heavier modules load
+lazily so the engine never pays for jax.
+"""
+from repro.reliability.faultpoints import (  # noqa: F401
+    FAULT_POINTS,
+    Fault,
+    FaultError,
+    FaultSchedule,
+    ProcessCrashed,
+    SimulatedCrash,
+    ThreadKilled,
+)
+
+__all__ = [
+    "FAULT_POINTS", "Fault", "FaultError", "FaultSchedule",
+    "ProcessCrashed", "SimulatedCrash", "ThreadKilled",
+    "recover_engine", "recover_handle", "RecoveryReport",
+]
+
+
+def __getattr__(name):
+    # recovery pulls in numpy/engine internals; keep the package import
+    # featherweight for the faultpoints hooks in core modules
+    if name in ("recover_engine", "recover_handle", "RecoveryReport",
+                "check_engine_invariants", "check_store_invariants",
+                "replay_from_checkpoint"):
+        from repro.reliability import recovery
+        return getattr(recovery, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

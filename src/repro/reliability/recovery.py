@@ -1,0 +1,337 @@
+"""Crash recovery: reconstruct a consistent heap after a simulated crash.
+
+The recovery rules fall out of where each pipeline's COMMIT RECORD sits
+(``TxnDescriptor.publish_started``, set the instant a decided commit
+starts publishing):
+
+  * ``publish_started`` False — the transaction never decided (or
+    decided to abort): roll BACK.  Buffered writes never touched the
+    heap, so rollback is releasing whatever locks the attempt claimed;
+    encounter-time writes restore from the undo log (the engine's
+    ``_abort`` already knows every policy's rollback, including
+    Multiverse's TBD-version unlink).
+  * ``publish_started`` True — the commit decided and the heap (or the
+    version list, for Multiverse: versioned readers can observe a
+    cleared-TBD version before the locks drop) may already be visible:
+    roll FORWARD.  Buffered pipelines redo the scatter from ``write_map``
+    (idempotent — the locks are still held, nobody else wrote those
+    words), Multiverse finishes publishing its version set, and the
+    held locks release at a fresh clock tick — at/above the tick the
+    crashed commit took, so readers only see a conservative version
+    bump, never a torn value.
+
+Either way the sweep finishes with ``release_thread_locks`` (claims the
+crashed frame never recorded anywhere — TL2's commit-time claim list is
+a lost local — are found by owner scan), a torn-row repair pass over the
+PackedVLT mirror (odd seqlock -> reset the row to fail-closed empty),
+and invariant checks the crash matrix asserts on.
+
+``recover_handle`` is the MVStore twin: complete a crashed install from
+``MVStoreHandle._inflight`` (the fused commit DONATED the old buffers,
+so the in-flight state is the only copy of the store), truncate ring
+timestamps past the durable clock, and verify a snapshot resolves at
+every durable ring timestamp.  ``replay_from_checkpoint`` restores
+training state from the newest manifest (the ``TrainSupervisor``
+restore path lives here now).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.reliability import faultpoints as FP
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    dead_tids: List[int] = dataclasses.field(default_factory=list)
+    rolled_forward: List[int] = dataclasses.field(default_factory=list)
+    rolled_back: List[int] = dataclasses.field(default_factory=list)
+    released_locks: int = 0
+    repaired_mirror_rows: int = 0
+    truncated_ring_slots: int = 0
+    completed_install: bool = False
+    clock_before: int = 0
+    clock_after: int = 0
+
+    def summary(self) -> str:
+        return (f"recovered tids={self.dead_tids} "
+                f"fwd={self.rolled_forward} back={self.rolled_back} "
+                f"locks={self.released_locks} "
+                f"mirror={self.repaired_mirror_rows} "
+                f"ring={self.truncated_ring_slots} "
+                f"clock {self.clock_before}->{self.clock_after}")
+
+
+def _unwrap(tm: Any) -> Any:
+    """Accept an engine, a WordSubstrate, or anything with ``.raw``."""
+    return getattr(tm, "raw", tm)
+
+
+def locked_indices(locks) -> np.ndarray:
+    """Every lock-table index with its locked bit set."""
+    words = getattr(locks, "_words", None)
+    if words is not None:
+        return np.nonzero((words & 2) != 0)[0]
+    return np.fromiter(
+        (i for i in range(locks.size) if locks.read(i).locked),
+        np.int64)
+
+
+def _roll_forward(eng, d, commit_clock: int) -> None:
+    """Finish a decided commit on behalf of a dead owner.
+
+    The owner's locks are still held (that is WHY we can redo), so the
+    scatter/publish below races nobody.
+    """
+    if d.write_map and not d.undo:
+        # buffered: redo the write-back from the redo log (idempotent)
+        from repro.core.engine import commit as C
+        wm = d.write_map
+        addrs = np.fromiter(wm.keys(), np.int64, len(wm))
+        C.heap_scatter(eng.heap, addrs, list(wm.values()))
+    if d.versioned_write_set:
+        # Multiverse: finish clearing TBD marks / refreshing the mirror
+        # at the recovery clock (>= the tick the crashed commit took)
+        eng.policy._publish_versions(eng, d, commit_clock)
+    retire = getattr(eng.policy, "_retire_bufs", None)
+    if retire is not None:
+        retire[d.tid].commit()
+    d.stats["commits"] += 1
+    d.active = False
+    eng.policy.on_finish(eng, d)
+
+
+def recover_engine(tm: Any, dead_tids: Sequence[int]) -> RecoveryReport:
+    """Scan a word-level engine after a crash and restore consistency.
+
+    ``dead_tids`` are the threads that died (every transaction they
+    owned is orphaned).  Safe to call with live threads quiesced — the
+    crash matrix and the reliability workload both stop the world first,
+    exactly like a real restart.
+    """
+    eng = _unwrap(tm)
+    rep = RecoveryReport(dead_tids=sorted(int(t) for t in dead_tids))
+    rep.clock_before = eng.clock.load()
+    for tid in rep.dead_tids:
+        d = eng.ctx(tid)
+        if d.active:
+            if d.publish_started:
+                # one fresh tick serves as the recovered commit version
+                cv = eng.clock.increment()
+                _roll_forward(eng, d, cv)
+                held = eng._held_by(tid)
+                for idx in held:
+                    eng.locks.unlock(int(idx), cv)
+                rep.released_locks += len(held)
+                rep.rolled_forward.append(tid)
+            else:
+                # the engine's abort already knows every policy's
+                # rollback: undo restore, TBD unlink, deferred-clock bump
+                eng._abort(d)
+                rep.rolled_back.append(tid)
+        # claims the descriptor never recorded (TL2's commit-time claim
+        # list is a lost local): owner-scan sweep at a bumped clock
+        rep.released_locks += eng.release_thread_locks(tid)
+    rep.repaired_mirror_rows = repair_mirror(eng)
+    rep.clock_after = eng.clock.load()
+    FP.reset_thread()
+    return rep
+
+
+def repair_mirror(tm: Any) -> int:
+    """Reset torn PackedVLT mirror rows (odd per-row seqlock).
+
+    A writer that died inside a seq bracket leaves the row permanently
+    odd — readers already fail closed (scalar walk), but the row can
+    never serve again.  Repair = empty the row and restore an even seq:
+    fail-closed, and the next publish re-seeds it.
+    Returns the number of rows repaired.
+
+    LIVE-MODE SAFETY: mirror rows are keyed by lock index, and the
+    writer discipline publishes only while holding that address lock —
+    so a row that is odd while its lock word is HELD belongs to a live
+    writer mid-bracket, not to the dead one, and must be skipped.  (The
+    dead thread's locks were already swept before this runs.)
+    """
+    eng = _unwrap(tm)
+    vlt = getattr(eng.policy, "vlt", None) if hasattr(eng, "policy") else None
+    mirror = getattr(vlt, "mirror", None)
+    if mirror is None:
+        return 0
+    from repro.core.vlt import EMPTY_TS
+    torn = np.nonzero((mirror._seq & 1) != 0)[0]
+    words = getattr(eng.locks, "_words", None)
+    if words is not None and torn.size:
+        torn = torn[(words[torn] & 2) == 0]      # skip live brackets
+    for row in torn:
+        mirror._addr[row] = mirror.NO_ADDR
+        mirror._ts[row] = EMPTY_TS
+        mirror._data[row] = 0
+        mirror._seq[row] += 1
+    return int(torn.size)
+
+
+def check_engine_invariants(tm: Any, *,
+                            expect_heap: Optional[np.ndarray] = None,
+                            expect_sums: Optional[Iterable] = None,
+                            clock_at_least: Optional[int] = None
+                            ) -> List[str]:
+    """Post-recovery invariants; returns human-readable violations.
+
+    * lock table empty (no locked bits anywhere);
+    * no torn PackedVLT mirror rows (every per-row seq even);
+    * clock monotone (>= ``clock_at_least``);
+    * heap equality (``expect_heap``) or block-sum conservation
+      (``expect_sums``: iterable of ``(base, n, expected_sum)``).
+    """
+    eng = _unwrap(tm)
+    out: List[str] = []
+    held = locked_indices(eng.locks)
+    if held.size:
+        out.append(f"lock table not empty: {held.size} held "
+                   f"(first {held[:8].tolist()})")
+    vlt = getattr(eng.policy, "vlt", None) if hasattr(eng, "policy") else None
+    mirror = getattr(vlt, "mirror", None)
+    if mirror is not None:
+        torn = int(((mirror._seq & 1) != 0).sum())
+        if torn:
+            out.append(f"{torn} torn PackedVLT mirror rows")
+    if clock_at_least is not None and eng.clock.load() < clock_at_least:
+        out.append(f"clock went backwards: {eng.clock.load()} "
+                   f"< {clock_at_least}")
+    if expect_heap is not None:
+        buf = getattr(eng.heap, "_buf", None)
+        got = (np.asarray(buf[:len(expect_heap)]) if buf is not None
+               else np.array([eng.heap[i]
+                              for i in range(len(expect_heap))]))
+        if not np.array_equal(got, np.asarray(expect_heap)):
+            bad = np.nonzero(got != np.asarray(expect_heap))[0]
+            out.append(f"heap mismatch at {bad.size} addrs "
+                       f"(first {bad[:8].tolist()})")
+    if expect_sums is not None:
+        for base, n, want in expect_sums:
+            got_sum = sum(int(eng.heap[base + i]) for i in range(n))
+            if got_sum != want:
+                out.append(f"block sum at {base}+{n}: {got_sum} != {want}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MVStore handle recovery
+# ---------------------------------------------------------------------------
+
+
+def recover_handle(handle: Any) -> RecoveryReport:
+    """Recover an ``MVStoreHandle`` after a crashed commit.
+
+    Completes a crashed install (``_inflight`` — past the donating fused
+    call the in-flight state is the ONLY copy of the store; readers are
+    stranded on deleted buffers until it lands), then truncates any ring
+    timestamp past the durable clock (a torn row can never satisfy a
+    reader consistently, and the slot's buffer may be garbage).
+    """
+    import jax.numpy as jnp
+
+    rep = RecoveryReport()
+    with handle._commit_lock:
+        rep.clock_before = int(handle._state.clock)
+        inflight = handle._inflight
+        if inflight is not None:
+            handle._install(inflight)
+            handle._inflight = None
+            rep.completed_install = True
+        state = handle._state
+        durable = int(state.clock)
+        if state.ring_ts:
+            new_ts = {}
+            changed = False
+            for path, ts in state.ring_ts.items():
+                host = np.asarray(ts)
+                torn = host > durable
+                if torn.any():
+                    rep.truncated_ring_slots += int(torn.sum())
+                    host = np.where(torn, np.int32(-1), host)
+                    new_ts[path] = jnp.asarray(host, jnp.int32)
+                    changed = True
+                else:
+                    new_ts[path] = ts
+            if changed:
+                state = state._replace(ring_ts=new_ts)
+        handle._install(state)
+        rep.clock_after = int(handle._state.clock)
+    FP.reset_thread()
+    return rep
+
+
+def check_store_invariants(handle: Any, *,
+                           clock_at_least: Optional[int] = None
+                           ) -> List[str]:
+    """Post-recovery MVStore invariants; returns violations.
+
+    * no in-flight (uninstalled) state;
+    * clock monotone;
+    * no ring timestamp past the durable clock;
+    * a snapshot RESOLVES at every durable ring timestamp (the paper's
+      committed-prefix promise, checked slot by slot).
+    """
+    out: List[str] = []
+    if handle._inflight is not None:
+        out.append("uninstalled in-flight commit")
+    clock, live, ring, ring_ts = handle._snap
+    if clock_at_least is not None and clock < clock_at_least:
+        out.append(f"store clock went backwards: {clock} < {clock_at_least}")
+    if ring_ts is not None:
+        past = ring_ts[ring_ts > clock]
+        if past.size:
+            out.append(f"ring timestamps past durable clock: "
+                       f"{past.tolist()}")
+        from repro.core import mvstore
+        for ts in sorted(int(t) for t in ring_ts if int(t) != -1):
+            _view, ok = mvstore.mv_snapshot(handle._state, ts)
+            if not bool(np.all(np.asarray(ok))):
+                out.append(f"snapshot unreadable at durable clock {ts}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# checkpoint replay (TrainSupervisor restore path)
+# ---------------------------------------------------------------------------
+
+
+class _RingCfg:
+    def __init__(self, r: int):
+        self.ring_slots = r
+
+
+def replay_from_checkpoint(ckpt_dir: str, template_state):
+    """Restore (step, state) from the newest manifest under ``ckpt_dir``.
+
+    ``template_state`` supplies the pytree structure (a TrainState with
+    ``.mv``/``.opt``); rings are re-seeded from the restored live values
+    at the restored clock.  Raises FileNotFoundError when no checkpoint
+    has landed (callers decide: cold restart).
+    ``save_checkpoint``'s atomic ``os.replace`` publish means a crash at
+    ``pre_manifest_publish`` leaves only a ``.tmp`` directory, which the
+    restore scan skips — replay always lands on a COMPLETE manifest.
+    """
+    import jax
+
+    from repro.checkpoint.snapshotter import restore_checkpoint
+
+    tmpl = {"params": template_state.mv.live, "opt": template_state.opt}
+    step, restored, _extra = restore_checkpoint(ckpt_dir, tmpl)
+    mv = template_state.mv._replace(
+        live=restored["params"],
+        clock=jax.numpy.asarray(step, jax.numpy.int32))
+    # re-seed rings from the restored live values at the restored clock
+    if mv.ring:
+        from repro.core import mvstore as mvs
+        paths = set(mv.ring)
+        mv = mv._replace(ring={}, ring_ts={})
+        mv = mvs.version_blocks(mv, paths, _RingCfg(
+            next(iter(template_state.mv.ring.values())).shape[0]))
+    state = template_state._replace(mv=mv, opt=restored["opt"])
+    return step, state

@@ -82,31 +82,21 @@ class TrainSupervisor:
         return step, state
 
     def _checkpoint(self, step, state):
-        ok = self.manager.submit(step, state.mv, state.opt,
-                                 extra={"restarts": self.restarts})
-        self.events.append(("checkpoint", step, "ok" if ok else "aborted"))
+        outcome = self.manager.submit(step, state.mv, state.opt,
+                                      extra={"restarts": self.restarts})
+        self.events.append(
+            ("checkpoint", step,
+             "ok" if outcome else getattr(outcome, "value", "aborted")))
 
     def _restore(self, template_state):
-        tmpl = {"params": template_state.mv.live, "opt": template_state.opt}
         self.manager.wait_idle()          # in-flight async save may be ours
+        from repro.reliability.recovery import replay_from_checkpoint
         try:
-            step, restored, extra = restore_checkpoint(self.ckpt_dir, tmpl)
+            return replay_from_checkpoint(self.ckpt_dir, template_state)
         except FileNotFoundError:
             # cold restart: no checkpoint landed yet -> replay from step 0
             self.events.append(("cold_restart", 0, ""))
             return 0, template_state
-        mv = template_state.mv._replace(
-            live=restored["params"],
-            clock=jax.numpy.asarray(step, jax.numpy.int32))
-        # re-seed rings from the restored live values at the restored clock
-        if mv.ring:
-            from repro.core import mvstore as mvs
-            paths = set(mv.ring)
-            mv = mv._replace(ring={}, ring_ts={})
-            mv = mvs.version_blocks(mv, paths, _RingCfg(
-                next(iter(template_state.mv.ring.values())).shape[0]))
-        state = template_state._replace(mv=mv, opt=restored["opt"])
-        return step, state
 
 
 class _RingCfg:

@@ -1,0 +1,366 @@
+"""Crash matrix: every fault point x pipeline x backend must recover.
+
+The PR's test centerpiece.  Each case injects a simulated crash at one
+named fault point (``repro.reliability.faultpoints``) inside one commit
+pipeline — solo commit, group commit, or the MVStore fused publish —
+then runs recovery and asserts the recovered state IS the
+committed-prefix reference:
+
+  * heap equals the reference — every transaction that finished commit,
+    plus the crashed one iff its commit record (``publish_started``) was
+    written (roll forward), and excluding it otherwise (roll back);
+  * the lock table is empty (orphaned locks released);
+  * no torn PackedVLT mirror rows;
+  * the clock never went backwards.
+
+``test_crash_quick_*`` is the 6-case smoke subset CI selects with
+``-k "crash and quick"``.
+"""
+import numpy as np
+import pytest
+
+from repro.api.substrate import run
+from repro.core.baselines import DCTL, TL2, TinySTM
+from repro.core.engine.groupcommit import CommitBatcher
+from repro.core.stm import Multiverse
+from repro.reliability import faultpoints as FP
+from repro.reliability.recovery import (check_engine_invariants,
+                                        check_store_invariants,
+                                        recover_engine, recover_handle)
+
+N = 300          # >= BULK_MIN so the bulk claim/scatter paths (and their
+#                  fault points) are actually on the commit path
+
+WORD_BACKENDS = {
+    "multiverse": lambda n: Multiverse(n, start_bg=False),
+    "tl2": TL2,
+    "dctl": DCTL,
+    "tinystm": TinySTM,
+}
+
+POINTS = ("pre_claim", "post_claim", "pre_clock_tick",
+          "pre_scatter", "post_scatter", "pre_release")
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_schedule():
+    yield
+    FP.uninstall()
+    FP.reset_thread()
+
+
+def _committed_write(tm, base):
+    def w0(tx):
+        tx.write_bulk(np.arange(base, base + N), list(range(N)))
+    run(tm, w0, tid=0)
+
+
+def _crashing_write(tm, tid):
+    def w1(tx):
+        tx.write_bulk(np.arange(N), [v + 1000 for v in range(N)])
+    run(tm, w1, tid=tid)
+
+
+def _heap_prefix(tm, n):
+    return [tm.peek(i) for i in range(n)]
+
+
+def _assert_recovered(tm, dead, clock0, *, expect_committed,
+                      expect_rolled_back):
+    """Run recovery, then assert the committed-prefix invariants."""
+    rep = recover_engine(tm, dead)
+    violations = check_engine_invariants(tm, clock_at_least=clock0)
+    assert violations == [], violations
+    got = _heap_prefix(tm, N)
+    assert got == (expect_committed if not expect_rolled_back
+                   else [v for v in range(N)])
+    return rep
+
+
+def _run_solo_case(backend, point):
+    tm = WORD_BACKENDS[backend](2)
+    base = tm.alloc(N, 0)
+    assert base == 0
+    _committed_write(tm, base)
+    clock0 = tm.clock.load() if hasattr(tm.clock, "load") else 0
+    sched = FP.install(FP.FaultSchedule([FP.Fault(point, 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        _crashing_write(tm, tid=1)
+    FP.uninstall()
+    assert sched.fired and sched.fired[0][0] == point
+    d = tm.ctx(1) if hasattr(tm, "ctx") else tm.raw.ctx(1)
+    decided = d.publish_started
+    rep = _assert_recovered(
+        tm, [1], clock0,
+        expect_committed=[v + 1000 for v in range(N)],
+        expect_rolled_back=not decided)
+    if decided:
+        assert rep.rolled_forward == [1]
+    else:
+        assert rep.rolled_back == [1] or rep.released_locks >= 0
+    # the store stays usable: the next transaction commits normally
+    def w2(tx):
+        tx.write_bulk(np.arange(8), [7] * 8)
+    run(tm, w2, tid=1)
+    assert _heap_prefix(tm, 8) == [7] * 8
+
+
+# ---------------------------------------------------------------------------
+# solo commit pipeline: every backend x every commit-path fault point
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", sorted(WORD_BACKENDS))
+@pytest.mark.parametrize("point", POINTS)
+def test_crash_solo_commit(backend, point):
+    # encounter backends reach claim/scatter points via write_bulk, the
+    # buffered ones via commit: every point is on some backend's path —
+    # a point NOT on this backend's path simply never fires, which the
+    # schedule journal makes explicit
+    tm = WORD_BACKENDS[backend](2)
+    base = tm.alloc(N, 0)
+    _committed_write(tm, base)
+    clock0 = tm.clock.load()
+    sched = FP.install(FP.FaultSchedule([FP.Fault(point, 1, "kill")]))
+    crashed = False
+    try:
+        _crashing_write(tm, tid=1)
+    except FP.SimulatedCrash:
+        crashed = True
+    FP.uninstall()
+    if not crashed:
+        # off-path point for this backend: nothing fired, nothing broke
+        assert sched.fired == []
+        assert check_engine_invariants(tm, clock_at_least=clock0) == []
+        return
+    decided = tm.ctx(1).publish_started
+    _assert_recovered(
+        tm, [1], clock0,
+        expect_committed=[v + 1000 for v in range(N)],
+        expect_rolled_back=not decided)
+
+
+# ---------------------------------------------------------------------------
+# group commit pipeline
+# ---------------------------------------------------------------------------
+
+
+def _run_group_case(backend, point):
+    cls = WORD_BACKENDS[backend]
+    tm = cls(4)
+    n_members = 3
+    base = tm.alloc(n_members * N, 0)
+    txs = []
+    for t in range(n_members):
+        tx = tm.begin(t)
+        a = np.arange(base + t * N, base + (t + 1) * N)
+        tx.write_bulk(a, [t * 10000 + i for i in range(N)])
+        txs.append(tx)
+    clock0 = tm.clock.load()
+    batcher = CommitBatcher(tm)
+    for tx in txs:
+        batcher.add(tx)
+    sched = FP.install(FP.FaultSchedule([FP.Fault(point, 1, "kill")]))
+    crashed = False
+    try:
+        batcher.commit_all()
+    except FP.SimulatedCrash:
+        crashed = True
+    FP.uninstall()
+    if not crashed:
+        pytest.skip(f"{point} not on the {backend} group path")
+    rep = recover_engine(tm, list(range(n_members)))
+    violations = check_engine_invariants(tm, clock_at_least=clock0)
+    assert violations == [], violations
+    got = np.array([tm.peek(base + i) for i in range(n_members * N)])
+    decided = [tm.ctx(t).publish_started for t in range(n_members)]
+    exp = np.concatenate([
+        np.arange(N) + t * 10000 if decided[t] else np.zeros(N, np.int64)
+        for t in range(n_members)])
+    assert np.array_equal(got, exp)
+    assert rep.dead_tids == [0, 1, 2]
+
+
+@pytest.mark.parametrize("point", POINTS)
+def test_crash_group_buffered(point):
+    _run_group_case("tl2", point)
+
+
+@pytest.mark.parametrize("point", ("pre_clock_tick", "pre_release"))
+def test_crash_group_encounter(point):
+    _run_group_case("dctl", point)
+
+
+# ---------------------------------------------------------------------------
+# MVStore fused publish
+# ---------------------------------------------------------------------------
+
+
+MV_POINTS = ("pre_clock_tick", "pre_scatter", "post_scatter", "pre_release")
+
+
+def _run_mvstore_case(point):
+    from repro.api.mvhandle import MVStoreHandle
+    h = MVStoreHandle(n_threads=2, versioned="all", start_bg=False)
+    h.alloc(32, 0)
+
+    def w0(tx):
+        tx.write_bulk(np.arange(32), list(range(32)))
+    run(h, w0, tid=0)
+    clock0 = h.clock
+    sched = FP.install(FP.FaultSchedule([FP.Fault(point, 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        def w1(tx):
+            tx.write_bulk(np.arange(32), [v + 100 for v in range(32)])
+        run(h, w1, tid=1)
+    FP.uninstall()
+    assert sched.fired and sched.fired[0][0] == point
+    rep = recover_handle(h)
+    violations = check_store_invariants(h, clock_at_least=clock0)
+    assert violations == [], violations
+    vals, ok = h.snapshot_bulk(np.arange(32))
+    assert ok
+    exp = ([v + 100 for v in range(32)] if rep.completed_install
+           else list(range(32)))
+    assert list(np.asarray(vals)) == exp
+    # the fused-publish donation race is healed: a crash past the fused
+    # call strands readers on deleted buffers, and completing the
+    # install is the ONLY way forward — pin the direction
+    if point in ("post_scatter", "pre_release"):
+        assert rep.completed_install
+    # store stays usable
+    def w2(tx):
+        tx.write_bulk(np.arange(8), [7] * 8)
+    run(h, w2, tid=0)
+    vals, _ = h.snapshot_bulk(np.arange(8))
+    assert list(np.asarray(vals)) == [7] * 8
+    h.stop()
+
+
+@pytest.mark.parametrize("point", MV_POINTS)
+def test_crash_mvstore_fused(point):
+    _run_mvstore_case(point)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manifest publish
+# ---------------------------------------------------------------------------
+
+
+def test_crash_manifest_publish(tmp_path):
+    """A crash before the manifest rename leaves only the .tmp directory;
+    restore skips it and replays the previous complete checkpoint."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint.snapshotter import (restore_checkpoint,
+                                              save_checkpoint)
+    state1 = {"params": {"w": jnp.arange(4)}, "opt": {"m": jnp.zeros(4)}}
+    save_checkpoint(str(tmp_path), 1, state1)
+    sched = FP.install(FP.FaultSchedule(
+        [FP.Fault("pre_manifest_publish", 1, "crash")]))
+    state2 = {"params": {"w": jnp.arange(4) + 9}, "opt": {"m": jnp.ones(4)}}
+    with pytest.raises(FP.ProcessCrashed):
+        save_checkpoint(str(tmp_path), 2, state2)
+    FP.uninstall()
+    FP.reset_thread()
+    assert sched.process_dead
+    step, restored, _ = restore_checkpoint(str(tmp_path), state1)
+    assert step == 1
+    assert list(np.asarray(restored["params"]["w"])) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# fault actions beyond kill
+# ---------------------------------------------------------------------------
+
+
+def test_crash_raise_action_is_retryable():
+    """action='raise' injects an ordinary error: before the commit
+    record, the txn scope rolls it back like any user exception and the
+    engine stays consistent."""
+    tm = WORD_BACKENDS["multiverse"](2)
+    tm.alloc(N, 0)
+    _committed_write(tm, 0)
+    FP.install(FP.FaultSchedule([FP.Fault("pre_claim", 1, "raise")]))
+    with pytest.raises(FP.FaultError):
+        _crashing_write(tm, tid=1)
+    FP.uninstall()
+    # run() aborted the txn on the FaultError (not a simulated crash):
+    # no recovery needed, the engine is already consistent
+    assert check_engine_invariants(tm) == []
+    assert _heap_prefix(tm, N) == list(range(N))
+
+
+def test_crash_raise_after_commit_record_rolls_forward():
+    """action='raise' PAST the commit record cannot abort any more: the
+    policy completes publication (versions are already visible and the
+    scatter has no undo), then lets the error propagate."""
+    for backend in ("multiverse", "tl2", "dctl"):
+        tm = WORD_BACKENDS[backend](2)
+        tm.alloc(N, 0)
+        _committed_write(tm, 0)
+        FP.install(FP.FaultSchedule([FP.Fault("pre_release", 1, "raise")]))
+        with pytest.raises(FP.FaultError):
+            _crashing_write(tm, tid=1)
+        FP.uninstall()
+        assert check_engine_invariants(tm) == [], backend
+        assert _heap_prefix(tm, N) == [v + 1000 for v in range(N)], backend
+
+
+def test_crash_process_drop_marks_schedule():
+    tm = WORD_BACKENDS["tl2"](2)
+    tm.alloc(N, 0)
+    _committed_write(tm, 0)
+    sched = FP.install(FP.FaultSchedule(
+        [FP.Fault("post_claim", 1, "crash")]))
+    with pytest.raises(FP.ProcessCrashed):
+        _crashing_write(tm, tid=1)
+    FP.uninstall()
+    assert sched.process_dead
+    recover_engine(tm, [0, 1])
+    assert check_engine_invariants(tm) == []
+
+
+def test_crash_schedule_seeded_periodic_is_deterministic():
+    s1 = FP.FaultSchedule(seed=7, kill_every=5, points=("pre_release",),
+                          max_fires=3)
+    s2 = FP.FaultSchedule(seed=7, kill_every=5, points=("pre_release",),
+                          max_fires=3)
+    log1, log2 = [], []
+    for i in range(60):
+        log1.append(s1.arrive("pre_release", i % 4))
+        log2.append(s2.arrive("pre_release", i % 4))
+    assert log1 == log2
+    assert sum(a is not None for a in log1) == 3
+
+
+def test_crash_dying_thread_suppresses_nested_fires():
+    FP.install(FP.FaultSchedule([FP.Fault("pre_claim", 1, "kill"),
+                                 FP.Fault("pre_release", 1, "kill")]))
+    with pytest.raises(FP.ThreadKilled):
+        FP.fire("pre_claim", 0)
+    # unwinding code that passes another fault point must NOT re-fire
+    FP.fire("pre_release", 0)        # no raise: thread is dying
+    FP.uninstall()
+    FP.reset_thread()
+
+
+# ---------------------------------------------------------------------------
+# quick subset: 6 representative cases CI smoke runs via
+#   -k "crash and quick"
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,point", [
+    ("multiverse", "pre_release"),
+    ("multiverse", "pre_claim"),
+    ("tl2", "post_claim"),
+    ("tl2", "pre_release"),
+    ("dctl", "pre_scatter"),
+])
+def test_crash_quick_solo(backend, point):
+    _run_solo_case(backend, point)
+
+
+def test_crash_quick_mvstore():
+    _run_mvstore_case("post_scatter")

@@ -13,7 +13,7 @@ from repro.eval import WORKLOADS, longread_headline, run_eval
 
 
 def test_workload_registry_names():
-    assert {"longread", "rwmix", "structrq"} <= set(WORKLOADS)
+    assert {"longread", "rwmix", "structrq", "reliability"} <= set(WORKLOADS)
     for w in WORKLOADS.values():
         variants = w.variants(quick=True)
         assert variants and all(v.workload == w.name for v in variants)

@@ -112,11 +112,16 @@ def test_snapshot_pallas_path_matches_xla():
 
 def test_controller_full_mode_cycle():
     """Reader aborts CAS the mode to QtoU; the controller walks
-    QtoU->U->UtoQ->Q as participants catch up and stickies clear."""
+    QtoU->U->UtoQ->Q as participants catch up and stickies clear.
+
+    Driven SYNCHRONOUSLY (``start_bg=False`` + ``step_once``): each
+    transition depends only on announcement state, so the test asserts
+    the walk deterministically instead of sleeping until a background
+    poller observes it."""
     params = MultiverseParams(k1=1, k2=1, k3=1, s=1)
     ctl = mvcontroller.MVController(params=params,
                                     mvcfg=MVStoreConfig(ring_slots=2),
-                                    poll_s=0.005)
+                                    start_bg=False)
     cfg = ctl.mvcfg
     st = mvstore.mv_init(params_tree(), cfg, versioned="none")
     reader = ctl.reader()
@@ -134,26 +139,28 @@ def test_controller_full_mode_cycle():
     assert ctl.mode != M.MODE_Q
 
     # trainer keeps ticking; controller must reach Mode U
-    deadline = time.time() + 5
-    while ctl.mode != M.MODE_U and time.time() < deadline:
+    for _ in range(20):
+        if ctl.mode == M.MODE_U:
+            break
         st = ctl.trainer_tick(st)
         st = mvstore.mv_commit(st, params_tree(3.0),
                                local_mode=ctl.current_local_mode(),
                                cfg=cfg)
         reader.begin(int(st.clock))
-        time.sleep(0.01)
+        ctl.step_once()
     assert ctl.mode == M.MODE_U
     assert len(st.ring) == len(mvstore.block_paths(st.live))
 
     # reader commits small txns -> sticky clears -> back to Q eventually
-    deadline = time.time() + 5
-    while ctl.mode != M.MODE_Q and time.time() < deadline:
+    for _ in range(20):
+        if ctl.mode == M.MODE_Q:
+            break
         reader.begin(int(st.clock))
         view, ok = mvstore.mv_snapshot(st, read_clock=int(st.clock),
                                        assume_versioned=True)
         reader.on_commit(1, int(st.clock))
         st = ctl.trainer_tick(st)
-        time.sleep(0.01)
+        ctl.step_once()
     assert ctl.mode == M.MODE_Q
     ctl.stop()
 

@@ -177,3 +177,75 @@ def test_pipeline_shards_partition_global_batch(step, n_shards):
     # labels are the next-token shift of tokens under the affine process
     b = src.shard_batch(step, 0, n_shards)
     assert ((b["labels"][:, :-1] == b["tokens"][:, 1:]).all())
+
+
+# ---------------------------------------------------------------------------
+# Reliability: any seeded FaultSchedule recovers to the committed prefix
+# ---------------------------------------------------------------------------
+
+
+_FAULT_POINTS = ("pre_claim", "post_claim", "pre_clock_tick",
+                 "pre_scatter", "post_scatter", "pre_release")
+
+_fault_st = st.builds(
+    lambda p, n, a: (p, n, a),
+    st.sampled_from(_FAULT_POINTS),
+    st.integers(1, 3),
+    st.sampled_from(["raise", "kill"]))
+
+
+@given(backend=st.sampled_from(["multiverse", "tl2", "dctl"]),
+       faults=st.lists(_fault_st, max_size=4, unique=True))
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_random_fault_schedule_recovers_committed_prefix(backend, faults):
+    """Random seeded FaultSchedule vs the fault-free reference: the
+    recovered heap must equal the reference truncated at the last
+    durable commit (every finished txn, plus a crashed one iff its
+    commit record was written).  On failure hypothesis shrinks to a
+    minimal failing schedule."""
+    from repro.api.substrate import MaxRetriesExceeded, run as api_run
+    from repro.core.baselines import DCTL, TL2
+    from repro.core.stm import Multiverse
+    from repro.reliability import faultpoints as FP
+    from repro.reliability.recovery import (check_engine_invariants,
+                                            recover_engine)
+    mk = {"multiverse": lambda: Multiverse(1, start_bg=False),
+          "tl2": lambda: TL2(1), "dctl": lambda: DCTL(1)}
+    tm = mk[backend]()
+    n = 300
+    tm.alloc(n, 0)
+    expected = [0] * n
+    sched = FP.FaultSchedule(
+        [FP.Fault(p, nth, a) for (p, nth, a) in faults])
+    FP.install(sched)
+    try:
+        for g in range(1, 5):
+            vals = [g * 1000 + i for i in range(n)]
+
+            def w(tx, vals=vals):
+                tx.write_bulk(np.arange(n), vals)
+            try:
+                api_run(tm, w, tid=0, max_retries=10)
+                expected = vals
+            except FP.FaultError:
+                # injected recoverable error: rolled back — unless it hit
+                # past the commit record, where the policy rolls forward
+                # (the buffered scatter has no undo to take it back)
+                if tm.ctx(0).publish_started:
+                    expected = vals
+            except MaxRetriesExceeded:
+                pass                      # repeated injected aborts
+            except FP.SimulatedCrash:
+                d = tm.ctx(0)
+                decided = d.active and d.publish_started
+                recover_engine(tm, [0])
+                if decided:
+                    expected = vals       # rolled forward: commit landed
+    finally:
+        FP.uninstall()
+        FP.reset_thread()
+    violations = check_engine_invariants(tm, clock_at_least=0)
+    assert violations == [], (violations, sched.fired)
+    got = [tm.peek(i) for i in range(n)]
+    assert got == expected, (sched.fired,)

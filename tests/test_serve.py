@@ -309,6 +309,34 @@ def test_e2e_mode_u_zero_torn_reads_under_live_commits():
     assert row["stm_stats"]["commits"] == row["completed"]
 
 
+def test_mode_u_commit_between_steps_never_aborts_deterministically():
+    """Deterministic Mode-U twin of the threaded e2e smoke: drive the
+    scheduler by hand and commit between EVERY decode step — the pinned
+    ring version keeps serving (zero aborts, one version per request)
+    no matter how many commits land mid-request.  Same property the
+    threaded test asserts, with the trainer race replaced by explicit
+    interleaving."""
+    trainer = SyntheticTrainer(mode="U", commit_interval_s=3600.0,
+                               ring_slots=8)
+    metrics = ServeMetrics()
+    ex = StoreExecutor(lambda: trainer.state, policy="U", n_slots=1,
+                       work_s=0.0, metrics=metrics)
+    q = RequestQueue()
+    sched = ContinuousBatchingScheduler(q, ex, metrics,
+                                        max_request_aborts=8)
+    r = Request(1, max_new=6)
+    q.offer(r)
+    sched.step()                      # prefill pins a ring version
+    pinned = r.pinned_clock
+    while r.outcome is Outcome.PENDING:
+        trainer.commit_once()         # a commit between every step
+        sched.step()
+        assert r.pinned_clock in (pinned, -1)   # never re-pins mid-flight
+    assert r.outcome is Outcome.COMPLETED
+    assert r.aborts == 0 and metrics.snapshot_aborts == 0
+    assert metrics.violations == 0
+
+
 def test_mode_q_commit_between_steps_aborts_deterministically():
     """Deterministic Mode-Q abort (no thread races): drive the scheduler
     by hand and commit between decode steps — the pinned snapshot fails

@@ -48,6 +48,42 @@ def test_checkpoint_keeps_latest(tmp_path):
     assert not mgr.errors
 
 
+def test_checkpoint_submit_reports_queue_full(tmp_path, monkeypatch):
+    """A full serializer queue is a TYPED outcome, not a silent drop: the
+    caller sees QUEUE_FULL (falsy), the drop lands in stats(), and the
+    reader heuristics record an abort — never a commit for a checkpoint
+    that was thrown away."""
+    from repro.checkpoint.snapshotter import SubmitOutcome
+
+    # park the serializer so the maxsize-2 queue never drains
+    monkeypatch.setattr(CheckpointManager, "_loop", lambda self: None)
+
+    class _Reader:
+        def __init__(self):
+            self.commits, self.aborts = 0, 0
+
+        def begin(self, clock):
+            pass
+
+        def on_commit(self, n, clock):
+            self.commits += 1
+
+        def on_abort(self, n):
+            self.aborts += 1
+
+    reader = _Reader()
+    mgr = CheckpointManager(str(tmp_path), reader=reader)
+    cfg = MVStoreConfig(ring_slots=2)
+    st = mvstore.mv_init({"w": jnp.zeros((4,))}, cfg, versioned="none")
+    outcomes = [mgr.submit(i, st, {"count": jnp.asarray(i)})
+                for i in range(1, 4)]
+    assert outcomes[:2] == [SubmitOutcome.SAVED, SubmitOutcome.SAVED]
+    assert outcomes[2] is SubmitOutcome.QUEUE_FULL
+    assert all(outcomes[:2]) and not outcomes[2]   # bool contract
+    assert mgr.stats()["dropped"] == 1
+    assert reader.commits == 2 and reader.aborts == 1
+
+
 def test_checkpoint_snapshot_abort_on_stale_clock(tmp_path):
     """Checkpointer is a Mode-Q reader: a commit between clock capture and
     snapshot makes it retry, never write a torn view."""
