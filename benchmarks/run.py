@@ -331,6 +331,30 @@ def bench_rwmix():
     return rows
 
 
+def bench_shardscale():
+    """Shard-scaling eval headline re-saved under the bench_ prefix:
+    two disjoint-block updaters over the same total heap words at 1 and
+    2 shards; the headline is the 2-shard throughput ratio (>=1.6x),
+    the shard==1 bit-parity check vs mvstore, and the zero-violation
+    gate (CI's results artifact wants bench_shardscale.json next to
+    the other bench_*.json)."""
+    from repro.eval.driver import run_eval, shardscale_headline
+    from repro.eval.results import save_results
+
+    rows, _ = run_eval("shardscale", seed=SEED, quick=True, save=False)
+    head = shardscale_headline(rows)
+    for r in rows:
+        _emit(f"shardscale/{r.get('variant', '?')}/{r['backend']}",
+              1e6 / max(r.get("updates_per_sec", 0.0), 1e-9),
+              f"upd/s={r.get('updates_per_sec', 0.0):.0f};"
+              f"shards={r.get('n_shards', 1)};"
+              f"parity={r.get('parity_ok')};"
+              f"violations={r.get('violations', 0)}")
+    save_results("shardscale", rows, SEED, out_dir=RESULTS_DIR,
+                 extra_meta={"headline": head}, prefix="bench")
+    return rows
+
+
 def bench_reliability():
     """Crash-recovery eval headline re-saved under the bench_ prefix:
     rwmix rotations under a seeded kill schedule, recovery after every
@@ -383,6 +407,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "groupcommit": bench_groupcommit,
     "rwmix": bench_rwmix,
+    "shardscale": bench_shardscale,
     "reliability": bench_reliability,
     "roofline": bench_roofline_report,
 }

@@ -301,38 +301,55 @@ class MVStoreHandle(SubstrateBase):
             return
         conflict = False
         with self._commit_lock:
-            state = self._state
-            if int(state.clock) != ctx.read_clock:
+            if self._check_conflict(ctx):
                 conflict = True            # another step committed first
             else:
-                if FP.ACTIVE is not None:
-                    FP.fire("pre_clock_tick", ctx.tid)
-                state = self.controller.trainer_tick(state)
-                mode = self.controller.current_local_mode()
-                idx = np.array(sorted(ctx.write_buf), dtype=np.int64)
-                vals = np.array([ctx.write_buf[int(i)] for i in idx])
-                # ONE fused publish under the held commit lock (the
-                # seqlock bracket): scatter into the live row AND the
-                # PackedVLT ring refresh ride a single device-resident
-                # ``ops.commit_fused`` call — no scatter-then-rotate
-                # host round trip (``mvstore.mv_commit_fused``).  The
-                # fused call fires pre_scatter itself (before donation);
-                # from the call's return until _install the new state is
-                # parked in _inflight so recovery can finish the publish
-                state = self._mvstore.mv_commit_fused(
-                    state, self._key, idx, vals, local_mode=mode,
-                    cfg=self.cfg)
-                self._inflight = state
-                if FP.ACTIVE is not None:
-                    FP.fire("post_scatter", ctx.tid)
-                    FP.fire("pre_release", ctx.tid)
-                self._install(state)
-                self._inflight = None
+                self._publish_locked(ctx)
         if conflict:
             self._abort_ctx(ctx)
         c["commits"] += 1
         h.attempts = 0
         ctx.active = False
+
+    def _check_conflict(self, ctx: _MVCtx) -> bool:
+        """Commit-time validation, ``self._commit_lock`` held: has any
+        block this transaction touched been committed past its begin
+        pin?  Per-block last-writer stamps (``mvstore.blocks_conflict``)
+        — for the single-block handle this equals the old global
+        ``clock != read_clock`` check (every commit stamps the one heap
+        block); the sharded store calls it per shard so disjoint-shard
+        commits never conflict."""
+        return self._mvstore.blocks_conflict(
+            self._state, (self._path,), ctx.read_clock)
+
+    def _publish_locked(self, ctx: _MVCtx) -> None:
+        """The publish half of commit, ``self._commit_lock`` held and
+        validation already passed.  Also the recovery redo entry point:
+        the cross-shard epoch roll-forward replays a crashed member's
+        parked context through exactly this path."""
+        if FP.ACTIVE is not None:
+            FP.fire("pre_clock_tick", ctx.tid)
+        state = self.controller.trainer_tick(self._state)
+        mode = self.controller.current_local_mode()
+        idx = np.array(sorted(ctx.write_buf), dtype=np.int64)
+        vals = np.array([ctx.write_buf[int(i)] for i in idx])
+        # ONE fused publish under the held commit lock (the
+        # seqlock bracket): scatter into the live row AND the
+        # PackedVLT ring refresh ride a single device-resident
+        # ``ops.commit_fused`` call — no scatter-then-rotate
+        # host round trip (``mvstore.mv_commit_fused``).  The
+        # fused call fires pre_scatter itself (before donation);
+        # from the call's return until _install the new state is
+        # parked in _inflight so recovery can finish the publish
+        state = self._mvstore.mv_commit_fused(
+            state, self._key, idx, vals, local_mode=mode,
+            cfg=self.cfg)
+        self._inflight = state
+        if FP.ACTIVE is not None:
+            FP.fire("post_scatter", ctx.tid)
+            FP.fire("pre_release", ctx.tid)
+        self._install(state)
+        self._inflight = None
 
     def abort(self, txn: Txn) -> None:
         ctx = txn._ctx
@@ -383,7 +400,8 @@ class MVStoreHandle(SubstrateBase):
             new_live = {self._key: jnp.concatenate(
                 [live, jnp.full((n,), fill, live.dtype)])}
             state = self._mvstore.MVStoreState(
-                live=new_live, ring={}, ring_ts={}, clock=state.clock)
+                live=new_live, ring={}, ring_ts={}, clock=state.clock,
+                block_clocks=state.block_clocks)
             if was_versioned:   # reseed the ring at the new block shape
                 state = self._mvstore.version_blocks(
                     state, {self._path}, self.cfg,

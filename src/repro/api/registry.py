@@ -133,6 +133,32 @@ def _make_mvstore(n_threads: int, params=None, forced_mode=None,
     return h
 
 
+def _make_shardstore(n_threads: int, params=None, forced_mode=None,
+                     **kw) -> SubstrateBase:
+    """The mesh-sharded MVStore (`core/shardstore.ShardStoreHandle`).
+
+    `n_shards` / `span` pick the partitioning; `forced_mode` mirrors the
+    mvstore factory (the shards share ONE controller, so the pin applies
+    store-wide)."""
+    from repro.configs.paper_stm import MultiverseParams
+    from repro.core.shardstore import ShardStoreHandle
+
+    if "ring_slots" in kw:
+        from repro.configs.base import MVStoreConfig
+        kw.setdefault("cfg", MVStoreConfig(ring_slots=kw.pop("ring_slots")))
+    if forced_mode == "Q":
+        params = dataclasses.replace(params or MultiverseParams(),
+                                     k2=1 << 30, k3=1 << 30)
+    h = ShardStoreHandle(n_threads, params=params, **kw)
+    if forced_mode == "U":
+        ctl = h.controller
+        ctl.mode_counter = 2                      # Q -> QtoU -> U
+        ctl.stats["mode_transitions"] += 2
+        ctl.first_obs_mode_u_ts = 0
+        ctl.reader().ann.sticky_mode_u = True
+    return h
+
+
 def _register_builtins() -> None:
     from repro.core.baselines import BASELINES
 
@@ -140,6 +166,7 @@ def _register_builtins() -> None:
     for name, cls in BASELINES.items():
         register_backend(name, _make_baseline(cls, name))
     register_backend("mvstore", _make_mvstore)
+    register_backend("shardstore", _make_shardstore)
 
 
 _register_builtins()

@@ -44,6 +44,7 @@ clock and lock table.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Iterable, List, Optional
 
 import numpy as np
@@ -55,6 +56,29 @@ from repro.reliability import faultpoints as FP
 # ---------------------------------------------------------------------------
 # shared vector helpers
 # ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def acquire_ascending(locks):
+    """Hold several commit locks at once, released in reverse order.
+
+    The caller passes the locks already sorted by a global total order
+    (shard id for the sharded store) — the same ascending discipline
+    ``Striped.for_indices`` uses for lock-table stripes, lifted to whole
+    commit locks, so two cross-shard commits with overlapping footprints
+    can never deadlock.  Unwind (including a simulated crash) releases
+    whatever was acquired: lock state models hardware mutexes, which the
+    fault-injection contract says still clean up.
+    """
+    held = []
+    try:
+        for lk in locks:
+            lk.acquire()
+            held.append(lk)
+        yield
+    finally:
+        for lk in reversed(held):
+            lk.release()
 
 
 def addr_lock_indices(eng, addrs: Iterable[int]) -> np.ndarray:

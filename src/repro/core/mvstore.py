@@ -41,11 +41,21 @@ NO_TS = jnp.int32(-1)          # empty ring slot
 
 class MVStoreState(NamedTuple):
     """live: the in-place values ('addresses').  ring/ring_ts exist only for
-    versioned blocks (dict keyed by block path -> [R, ...] / [R])."""
+    versioned blocks (dict keyed by block path -> [R, ...] / [R]).
+
+    ``block_clocks`` is the per-block level of the two-level clock scheme:
+    the LAST-WRITER stamp of every block (dict path -> int32 scalar, in
+    the same units as ``clock``).  Commits to disjoint blocks advance
+    their own stamps, so conflict detection (``blocks_conflict``) only
+    fires when footprints overlap — the global ``clock`` stays the total
+    order that ring timestamps and snapshot pins are expressed in.
+    ``None`` means a pre-sharding state: every check falls back to the
+    global clock (the old single-clock semantics)."""
     live: Any
     ring: dict
     ring_ts: dict
     clock: jnp.ndarray          # int32 global clock
+    block_clocks: Any = None    # dict path -> int32 last-writer stamp
 
 
 VersionedSet = Union[str, FrozenSet[str]]  # 'all' | 'none' | explicit paths
@@ -82,14 +92,17 @@ def mv_init(params, cfg: MVStoreConfig,
     R = cfg.ring_slots
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
     ring, ring_ts = {}, {}
+    block_clocks = {}
     for p, leaf in flat:
         path = jax.tree_util.keystr(p)
+        block_clocks[path] = jnp.zeros((), jnp.int32)
         if _is_versioned(path, versioned):
             buf = jnp.zeros((R,) + leaf.shape, leaf.dtype)
             ring[path] = buf.at[0].set(leaf)
             ring_ts[path] = jnp.full((R,), NO_TS).at[0].set(0)
     return MVStoreState(live=params, ring=ring, ring_ts=ring_ts,
-                        clock=jnp.zeros((), jnp.int32))
+                        clock=jnp.zeros((), jnp.int32),
+                        block_clocks=block_clocks)
 
 
 # ---------------------------------------------------------------------------
@@ -128,8 +141,13 @@ def mv_commit(state: MVStoreState, new_params, *, local_mode: str,
                 new_ts[path] = jax.lax.dynamic_update_index_in_dim(
                     ring_ts[path], new_clock.astype(jnp.int32), slot, 0)
         ring, ring_ts = new_ring, new_ts
+    # a whole-store publish stamps every block it carries
+    stamp = new_clock.astype(jnp.int32)
+    block_clocks = dict(state.block_clocks or {})
+    for path in block_paths(new_params):
+        block_clocks[path] = stamp
     return MVStoreState(live=new_params, ring=ring, ring_ts=ring_ts,
-                        clock=new_clock)
+                        clock=new_clock, block_clocks=block_clocks)
 
 
 def mv_commit_fused(state: MVStoreState, key: str, addrs, values, *,
@@ -189,13 +207,17 @@ def mv_commit_fused(state: MVStoreState, key: str, addrs, values, *,
         int(new_clock), 1, **kw)
     new_live = dict(state.live)
     new_live[key] = out[0]
+    # sparse publish touches ONE block: only its stamp advances
+    block_clocks = dict(state.block_clocks or {})
+    block_clocks[path] = new_clock.astype(jnp.int32)
     if ring is not None:
         ring_d, ts_d = dict(state.ring), dict(state.ring_ts)
         ring_d[path], ts_d[path] = out[3], out[4]
         return MVStoreState(live=new_live, ring=ring_d, ring_ts=ts_d,
-                            clock=new_clock)
+                            clock=new_clock, block_clocks=block_clocks)
     return MVStoreState(live=new_live, ring=state.ring,
-                        ring_ts=state.ring_ts, clock=new_clock)
+                        ring_ts=state.ring_ts, clock=new_clock,
+                        block_clocks=block_clocks)
 
 
 # ---------------------------------------------------------------------------
@@ -240,11 +262,41 @@ def mv_snapshot(state: MVStoreState, read_clock, *,
             out.append(val.astype(leaf.dtype))
         else:
             if not assume_versioned:
-                ok = jnp.logical_and(ok, state.clock <= read_clock)
+                # per-block validation: only a write to THIS block since
+                # read_clock invalidates the view (two-level clock rule)
+                bc = state.block_clocks
+                stamp = (state.clock if bc is None or path not in bc
+                         else bc[path])
+                ok = jnp.logical_and(ok, stamp <= read_clock)
             out.append(leaf)
     view = jax.tree_util.tree_unflatten(
         treedef, out)
     return view, ok
+
+
+# ---------------------------------------------------------------------------
+# per-block clock queries (host-side conflict detection)
+# ---------------------------------------------------------------------------
+
+
+def block_clock(state: MVStoreState, path: str) -> int:
+    """Last-writer stamp of ``path`` as a host int.  States predating
+    per-block stamps (``block_clocks is None``) fall back to the global
+    clock — the conservative old semantics."""
+    bc = state.block_clocks
+    if bc is None or path not in bc:
+        return int(state.clock)
+    return int(bc[path])
+
+
+def blocks_conflict(state: MVStoreState, paths, read_clock: int) -> bool:
+    """True iff any block in ``paths`` was committed after ``read_clock``.
+
+    The per-block spelling of the old global ``clock != read_clock``
+    commit check: a transaction whose write footprint is disjoint from
+    every commit since its begin pin validates cleanly even though the
+    GLOBAL clock advanced — disjoint-block updaters never conflict."""
+    return any(block_clock(state, p) > read_clock for p in paths)
 
 
 # ---------------------------------------------------------------------------

@@ -65,8 +65,24 @@ def default_rules(mesh: Mesh, *, fsdp: bool = True,
         "kv_flat": model,                      # flattened kv*dh cache dim
         "seq_shard": data if shard_seq else None,  # SP for long decode
         "ring": None,                          # MVStore version-ring dim
+        "heap_shard": data,                    # sharded-store shard dim
     }
     return Rules(tuple(table.items()))
+
+
+def shard_device_slices(mesh: Mesh, n_shards: int):
+    """One device slice per store shard (``core/shardstore.py``).
+
+    The sharded store partitions its heap at the ADDRESS level (spans
+    round-robin over shards), so its unit of placement is a whole
+    shard, not a tensor axis: shard ``s``'s buffers are ``device_put``
+    onto slice ``s``.  Slices round-robin over the mesh's devices in
+    row-major order — with fewer shards than devices each shard owns a
+    distinct device; with more, shards wrap (clock independence is
+    preserved either way, placement is only locality)."""
+    import numpy as _np
+    devs = list(_np.asarray(mesh.devices).flat)
+    return [devs[s % len(devs)] for s in range(n_shards)]
 
 
 # Current (rules, mesh), set by the launcher around trace time.

@@ -99,8 +99,13 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
                 new_mv = mvstore.mv_commit(state.mv, new_params,
                                            local_mode=mvcfg.mode, cfg=mvcfg)
             else:
-                new_mv = state.mv._replace(live=new_params,
-                                           clock=state.mv.clock + 1)
+                nc = state.mv.clock + 1
+                bc = state.mv.block_clocks
+                if bc is not None:      # whole-store step stamps every block
+                    stamp = nc.astype(jnp.int32)
+                    bc = {p: stamp for p in bc}
+                new_mv = state.mv._replace(live=new_params, clock=nc,
+                                           block_clocks=bc)
             metrics = {"loss": loss, "clock": new_mv.clock}
             return TrainState(new_mv, new_opt), metrics
 
@@ -140,7 +145,11 @@ def _fused_commit(mv, grads, opt, params, opt_cfg, mvcfg):
     params2 = jax.tree.unflatten(tdef, new_p)
     mu2 = jax.tree.unflatten(tdef, new_m)
     nu2 = jax.tree.unflatten(tdef, new_v)
-    return {"mv": MVStoreState(params2, new_ring, new_ts, new_clock),
+    bc = mv.block_clocks
+    if bc is not None:                  # fused step stamps every block too
+        stamp = new_clock.astype(jnp.int32)
+        bc = {p: stamp for p in bc}
+    return {"mv": MVStoreState(params2, new_ring, new_ts, new_clock, bc),
             "opt": adamw.AdamWState(mu2, nu2, count)}
 
 
@@ -217,7 +226,10 @@ def train_state_specs(cfg: ModelConfig, mvcfg: MVStoreConfig, rules: Rules,
             ring_ts[path] = jax.ShapeDtypeStruct(
                 (mvcfg.ring_slots,), jnp.int32,
                 sharding=NamedSharding(mesh, P(None)))
-    mv = MVStoreState(live=live, ring=ring, ring_ts=ring_ts, clock=scal)
+    flat_live, _ = jax.tree_util.tree_flatten_with_path(live)
+    bclocks = {jax.tree_util.keystr(p): scal for p, _ in flat_live}
+    mv = MVStoreState(live=live, ring=ring, ring_ts=ring_ts, clock=scal,
+                      block_clocks=bclocks)
     opt = adamw.AdamWState(mu=mu, nu=nu, count=scal)
     return TrainState(mv=mv, opt=opt)
 

@@ -297,6 +297,105 @@ def check_store_invariants(handle: Any, *,
 
 
 # ---------------------------------------------------------------------------
+# sharded-store recovery (cross-shard epoch publish)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    """The cross-shard commit record: ``publish_started`` generalized
+    from one transaction to one EPOCH of shard-local publishes.
+
+    A multi-shard commit parks this in ``ShardStoreHandle._epoch_inflight``
+    before bumping the epoch seqlock odd.  ``pins[s]`` is write shard
+    ``s``'s clock at validation time; a shard whose clock still equals
+    its pin after a crash has NOT published (each shard-local publish
+    ticks its clock by exactly one), so recovery can tell redo from done
+    without any per-shard journal:
+
+      * ``publish_started`` False — the epoch never decided: roll BACK.
+        No shard published (the flag flips before the first shard-local
+        publish), so rollback is dropping the record and re-evening the
+        seqlock.
+      * ``publish_started`` True — the epoch decided: roll FORWARD.
+        Replay every write shard still at its pin through the exact
+        publish path (``MVStoreHandle._publish_locked`` on the parked
+        per-shard context), so after recovery either ALL shards carry
+        the epoch's writes or the epoch is re-driven to completion —
+        never a torn cut.
+    """
+    epoch: int
+    write_shards: tuple
+    pins: dict                      # shard id -> clock pinned at validate
+    ctxs: dict                      # shard id -> parked _MVCtx (write_buf)
+    tid: int = -1
+    publish_started: bool = False
+    published: list = dataclasses.field(default_factory=list)
+
+
+def recover_shardstore(store: Any) -> RecoveryReport:
+    """Recover a ``ShardStoreHandle`` after a crashed commit.
+
+    Stop-world like every recovery here: first each member shard recovers
+    exactly as a solo handle (completing crashed installs, truncating
+    torn ring slots), then the epoch record applies the roll-forward /
+    roll-back rule above, and finally the epoch seqlock is forced even so
+    new transactions stop spinning in ``begin``.
+    """
+    rep = RecoveryReport()
+    rep.clock_before = int(store._epoch.load())
+    for shard in store._shards:
+        sub = recover_handle(shard)
+        rep.truncated_ring_slots += sub.truncated_ring_slots
+        rep.completed_install = rep.completed_install or sub.completed_install
+    rec = store._epoch_inflight
+    if rec is not None:
+        if rec.publish_started:
+            for s in rec.write_shards:
+                shard = store._shards[s]
+                if int(shard._state.clock) == rec.pins[s]:
+                    # still at its pin => this shard never published:
+                    # redo through the exact commit publish path
+                    with shard._commit_lock:
+                        shard._publish_locked(rec.ctxs[s])
+                    rec.published.append(s)
+            rep.rolled_forward.append(rec.tid)
+        else:
+            rep.rolled_back.append(rec.tid)
+        for ctx in rec.ctxs.values():
+            ctx.active = False
+        store._epoch_inflight = None
+    if store._epoch_seq.load() & 1:
+        store._epoch_seq.increment()
+    rep.clock_after = int(store._epoch.load())
+    FP.reset_thread()
+    return rep
+
+
+def check_shardstore_invariants(store: Any, *,
+                                clocks_at_least: Optional[Sequence[int]]
+                                = None) -> List[str]:
+    """Post-recovery sharded-store invariants; returns violations.
+
+    Per-shard ``check_store_invariants`` plus the epoch level: no parked
+    epoch record, epoch seqlock even (readers can pin), and every shard
+    clock monotone against ``clocks_at_least``.
+    """
+    out: List[str] = []
+    if store._epoch_inflight is not None:
+        out.append("unresolved cross-shard epoch record")
+    if store._epoch_seq.load() & 1:
+        out.append("epoch seqlock left odd (readers starve)")
+    for s, shard in enumerate(store._shards):
+        floor = (None if clocks_at_least is None
+                 else int(clocks_at_least[s]))
+        out.extend(f"shard {s}: {v}"
+                   for v in check_store_invariants(shard,
+                                                   clock_at_least=floor))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # checkpoint replay (TrainSupervisor restore path)
 # ---------------------------------------------------------------------------
 

@@ -243,6 +243,104 @@ def test_crash_mvstore_fused(point):
 
 
 # ---------------------------------------------------------------------------
+# ShardStore cross-shard epoch publish
+# ---------------------------------------------------------------------------
+
+# fire order for a 2-write-shard epoch publish: pre_claim(1),
+# post_claim(1), pre_clock_tick(1) = the EPOCH tick, then per write
+# shard the solo publish's pre_clock_tick/pre_scatter/post_scatter/
+# pre_release, and finally the epoch-level pre_release as its 3rd fire.
+# expect_forward: None = crash before the record exists (clean unwind),
+# False = record parked but publish_started unset (roll back), True =
+# publish_started set (roll the WHOLE epoch forward).
+SHARD_EPOCH_CASES = [
+    ("pre_claim", 1, None),        # before the locks: no record at all
+    ("pre_clock_tick", 1, False),  # epoch tick: parked, nothing started
+    ("pre_scatter", 1, True),      # mid shard-0 publish
+    ("pre_scatter", 2, True),      # shard 0 done, mid shard-1 publish
+    ("pre_release", 3, True),      # both published, epoch not released
+]
+
+
+def _run_shardstore_epoch_case(point, nth, expect_forward):
+    from repro.core.shardstore import ShardStoreHandle
+    from repro.reliability.recovery import (check_shardstore_invariants,
+                                            recover_shardstore)
+    st = ShardStoreHandle(2, n_shards=2, span=4, start_bg=False)
+    st.alloc(32, 0)
+
+    def w0(tx):
+        tx.write_bulk(np.arange(32), list(range(32)))
+    run(st, w0, tid=0)             # committed cross-shard prefix
+    clocks0 = st.clocks
+    sched = FP.install(FP.FaultSchedule([FP.Fault(point, nth, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        def w1(tx):
+            tx.write_bulk(np.arange(32), [v + 100 for v in range(32)])
+        run(st, w1, tid=1)
+    FP.uninstall()
+    assert sched.fired and sched.fired[-1][0] == point
+    rep = recover_shardstore(st)
+    violations = check_shardstore_invariants(st, clocks_at_least=clocks0)
+    assert violations == [], violations
+    # ATOMIC epoch: the heap is ALL-old or ALL-new, never a torn cut —
+    # a crash between the two shard-local publishes must not leave
+    # shard 0 new and shard 1 old
+    vals, ok = st.snapshot_bulk(np.arange(32))
+    assert ok
+    got = list(np.asarray(vals))
+    if expect_forward:
+        assert got == [v + 100 for v in range(32)]
+        assert rep.rolled_forward == [1]
+    else:
+        assert got == list(range(32))
+        if expect_forward is False:
+            assert rep.rolled_back == [1]
+        else:
+            assert rep.rolled_forward == [] and rep.rolled_back == []
+    # begin() must not spin on a stale odd seqlock after recovery, and
+    # the store stays usable across BOTH shards
+    def w2(tx):
+        tx.write_bulk(np.arange(16), [7] * 16)
+    run(st, w2, tid=0)
+    vals, ok = st.snapshot_bulk(np.arange(16))
+    assert ok and list(np.asarray(vals)) == [7] * 16
+    st.stop()
+
+
+@pytest.mark.parametrize("point,nth,expect_forward", SHARD_EPOCH_CASES)
+def test_crash_shardstore_epoch(point, nth, expect_forward):
+    _run_shardstore_epoch_case(point, nth, expect_forward)
+
+
+def test_crash_shardstore_single_shard_commit_unaffected():
+    """A crash in a SINGLE-shard commit on a sharded store is the solo
+    handle's case: per-shard recover_handle (inside recover_shardstore)
+    heals it without any epoch record existing."""
+    from repro.core.shardstore import ShardStoreHandle
+    from repro.reliability.recovery import (check_shardstore_invariants,
+                                            recover_shardstore)
+    st = ShardStoreHandle(2, n_shards=2, span=4, start_bg=False)
+    st.alloc(32, 0)
+
+    def w0(tx):
+        tx.write_bulk(np.arange(0, 4), [5] * 4)    # shard 0 only
+    run(st, w0, tid=0)
+    FP.install(FP.FaultSchedule([FP.Fault("pre_scatter", 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        def w1(tx):
+            tx.write_bulk(np.arange(0, 4), [9] * 4)
+        run(st, w1, tid=1)
+    FP.uninstall()
+    assert st._epoch_inflight is None              # never an epoch case
+    recover_shardstore(st)
+    assert check_shardstore_invariants(st) == []
+    vals, ok = st.snapshot_bulk(np.arange(4))
+    assert ok and set(np.asarray(vals).tolist()) <= {5, 9}
+    st.stop()
+
+
+# ---------------------------------------------------------------------------
 # checkpoint manifest publish
 # ---------------------------------------------------------------------------
 
@@ -364,3 +462,9 @@ def test_crash_quick_solo(backend, point):
 
 def test_crash_quick_mvstore():
     _run_mvstore_case("post_scatter")
+
+
+def test_crash_quick_shardstore_epoch():
+    # the sharpest epoch case: crash BETWEEN the two shard-local
+    # publishes; recovery must roll the whole epoch forward atomically
+    _run_shardstore_epoch_case("pre_scatter", 2, True)

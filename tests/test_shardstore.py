@@ -1,0 +1,432 @@
+"""ShardStoreHandle conformance: routing, parity vs the solo store,
+per-shard clock independence, cross-shard epoch commits, the sharded
+group-commit batcher.
+
+The parity ladder (`-k "shard and parity"` — CI's smoke subset):
+
+  * shard==1 is BIT-IDENTICAL to a solo ``MVStoreHandle`` on the same
+    seeded history (routing is the identity, the shard clock IS the
+    store clock);
+  * shards in {2, 4} produce the SAME final heap as the solo store for
+    any sequential history (sharding changes placement, never values);
+  * scalar and bulk paths agree with each other across shard counts.
+
+Clock independence is the tentpole's observable: a transaction pinned
+BEFORE a commit to a different shard still commits (at one shard the
+same schedule aborts), and cross-shard commits tick the coarse epoch
+exactly once while ticking each touched shard-local clock exactly once.
+"""
+import numpy as np
+import pytest
+
+from repro.api import make_tm
+from repro.api.substrate import Txn
+from repro.configs.paper_stm import MultiverseParams
+from repro.core.engine import AbortTx
+from repro.core.engine.bulkread import shard_partition
+from repro.core.engine.groupcommit import ShardedCommitBatcher
+from repro.core.shardstore import ShardStoreHandle, shard_devices
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def make_store(n_shards, span=8, n_threads=4, **kw):
+    params = MultiverseParams(k1=2, k2=50, k3=50, lock_table_bits=8)
+    return ShardStoreHandle(n_threads, n_shards=n_shards, span=span,
+                            params=params, start_bg=False, **kw)
+
+
+def make_solo(n_threads=4):
+    params = MultiverseParams(k1=2, k2=50, k3=50, lock_table_bits=8)
+    return make_tm("mvstore", n_threads, params=params, start_bg=False)
+
+
+def seeded_history(seed, n_words, n_ops=40):
+    """A deterministic mixed scalar/bulk history over [0, n_words)."""
+    r = np.random.RandomState(seed)
+    ops = []
+    for i in range(n_ops):
+        kind = r.randint(3)
+        if kind == 0:                                  # scalar write
+            ops.append(("w", int(r.randint(n_words)), int(r.randint(100))))
+        elif kind == 1:                                # bulk rotate
+            lo = int(r.randint(n_words - 4))
+            ln = int(r.randint(2, min(16, n_words - lo) + 1))
+            ops.append(("rot", lo, ln))
+        else:                                          # bulk stamp
+            lo = int(r.randint(n_words - 4))
+            ln = int(r.randint(2, min(16, n_words - lo) + 1))
+            ops.append(("stamp", lo, ln, int(r.randint(1000))))
+    return ops
+
+
+def drive(tm, ops, base, n_words, tid=0):
+    """Run one op per transaction; return the final full-heap values."""
+    def one(tx, op):
+        if op[0] == "w":
+            tx.write(base + op[1], op[2])
+        elif op[0] == "rot":
+            lo, ln = op[1], op[2]
+            vals = np.asarray(tx.read_bulk(range(base + lo, base + lo + ln)),
+                              np.int64)
+            tx.write_bulk(range(base + lo, base + lo + ln),
+                          np.roll(vals, 1))
+        else:
+            lo, ln, v = op[1], op[2], op[3]
+            tx.write_bulk(range(base + lo, base + lo + ln),
+                          np.arange(v, v + ln, dtype=np.int64))
+    for op in ops:
+        with tm.txn(tid=tid) as tx:
+            one(tx, op)
+    with tm.txn(tid=tid) as tx:
+        return np.asarray(tx.read_bulk(range(base, base + n_words)),
+                          np.int64)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def test_route_identity_at_one_shard():
+    st = make_store(1, span=8)
+    a = np.arange(100, dtype=np.int64)
+    sid, local = st._route(a)
+    assert (sid == 0).all()
+    np.testing.assert_array_equal(local, a)
+    st.stop()
+
+
+@pytest.mark.parametrize("n_shards", (2, 3, 4))
+@pytest.mark.parametrize("span", (1, 4, 8))
+def test_route_is_a_bijection(n_shards, span):
+    st = make_store(n_shards, span=span)
+    top = span * n_shards * 5 + (span // 2)
+    a = np.arange(top, dtype=np.int64)
+    sid, local = st._route(a)
+    # (shard, local) pairs are unique and land below the shard's top
+    pairs = set(zip(sid.tolist(), local.tolist()))
+    assert len(pairs) == top
+    for s in range(n_shards):
+        lt = st._local_top(s, top)
+        assert all(l < lt for sh, l in pairs if sh == s)
+    # local tops partition the global heap exactly
+    assert sum(st._local_top(s, top) for s in range(n_shards)) == top
+    # scalar and vector routing agree
+    for addr in (0, span - 1, span, top - 1):
+        assert st._route1(addr) == (int(sid[addr]), int(local[addr]))
+    st.stop()
+
+
+def test_shard_partition_covers_in_order():
+    parts = shard_partition(np.array([2, 0, 2, 1, 0]), 4)
+    assert [s for s, _ in parts] == [0, 1, 2]
+    got = sorted(int(i) for _, pos in parts for i in pos)
+    assert got == [0, 1, 2, 3, 4]
+
+
+def test_shard_devices_single_host_is_noop():
+    assert shard_devices(3) in ([None, None, None],
+                               shard_devices(3))  # deterministic
+    assert len(shard_devices(5)) == 5
+
+
+def test_shard_devices_mesh_round_robin():
+    """With an explicit mesh, shards stripe over its device slices
+    (launch/sharding.shard_device_slices) and placement is real."""
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    devs = shard_devices(3, mesh=mesh)
+    assert len(devs) == 3 and all(d is not None for d in devs)
+    st = make_store(2, span=4, mesh=mesh)   # device_put path exercised
+    base = st.alloc(16, 1)
+    with st.txn(tid=0) as tx:
+        tx.write_bulk(range(base, base + 16), np.arange(16))
+    assert [st.peek(base + i) for i in range(16)] == list(range(16))
+    st.stop()
+
+
+# ---------------------------------------------------------------------------
+# parity: sharded store vs the solo MVStoreHandle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("seed", (0, 1))
+def test_shard_parity_seeded_history(n_shards, seed):
+    """Same sequential history -> same final heap at every shard count."""
+    n_words = 64
+    ops = seeded_history(seed, n_words)
+    solo = make_solo()
+    base_s = solo.alloc(n_words, 7)
+    want = drive(solo, ops, base_s, n_words)
+    solo.stop()
+    st = make_store(n_shards)
+    base = st.alloc(n_words, 7)
+    got = drive(st, ops, base, n_words)
+    st.stop()
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", (0, 3))
+def test_shard1_parity_is_bit_identical(seed):
+    """shard==1: not just the final heap — the clock and every
+    intermediate peek match the solo store step for step."""
+    n_words = 48
+    ops = seeded_history(seed, n_words, n_ops=25)
+    solo, st = make_solo(), make_store(1, span=8)
+    bs, bt = solo.alloc(n_words, 7), st.alloc(n_words, 7)
+    assert bs == bt == 0
+
+    def step(tm, base, op):
+        with tm.txn(tid=0) as tx:
+            if op[0] == "w":
+                tx.write(base + op[1], op[2])
+            elif op[0] == "rot":
+                lo, ln = op[1], op[2]
+                vals = np.asarray(
+                    tx.read_bulk(range(base + lo, base + lo + ln)),
+                    np.int64)
+                tx.write_bulk(range(base + lo, base + lo + ln),
+                              np.roll(vals, 1))
+            else:
+                lo, ln, v = op[1], op[2], op[3]
+                tx.write_bulk(range(base + lo, base + lo + ln),
+                              np.arange(v, v + ln, dtype=np.int64))
+    for op in ops:
+        step(solo, bs, op)
+        step(st, bt, op)
+        assert st.clocks == (solo.clock,)
+        got = [st.peek(bt + i) for i in range(n_words)]
+        want = [solo.peek(bs + i) for i in range(n_words)]
+        assert got == want
+    assert st.epoch == 0          # no cross-shard traffic at one shard
+    solo.stop()
+    st.stop()
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_shard_parity_bulk_vs_scalar_paths(n_shards):
+    """write_bulk over a shard-spanning range == scalar writes."""
+    st = make_store(n_shards, span=4)
+    base = st.alloc(32, 0)
+    vals = np.arange(100, 132, dtype=np.int64)
+    with st.txn(tid=0) as tx:
+        tx.write_bulk(range(base, base + 32), vals)
+    with st.txn(tid=0) as tx:
+        got_bulk = np.asarray(tx.read_bulk(range(base, base + 32)),
+                              np.int64)
+        got_scalar = [tx.read(base + i) for i in range(32)]
+    np.testing.assert_array_equal(got_bulk, vals)
+    assert got_scalar == vals.tolist()
+    assert [st.peek(base + i) for i in range(32)] == vals.tolist()
+    st.stop()
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_shard_parity_registry_backend(n_shards):
+    """`make_tm("shardstore")` builds the same store the ctor does."""
+    tm = make_tm("shardstore", 2,
+                 params=MultiverseParams(k1=2, k2=50, k3=50,
+                                         lock_table_bits=8),
+                 n_shards=n_shards, span=8, start_bg=False)
+    assert isinstance(tm, ShardStoreHandle)
+    base = tm.alloc(16, 5)
+    with tm.txn(tid=0) as tx:
+        tx.write_bulk(range(base, base + 16), np.arange(16))
+    st = tm.stats()
+    assert st["backend"] == "shardstore"
+    assert st["n_shards"] == n_shards and st["commits"] == 1
+    tm.stop()
+
+
+# ---------------------------------------------------------------------------
+# per-shard clock independence (the tentpole's observable)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_disjoint_commits_do_not_conflict():
+    """A txn pinned BEFORE a commit to a DIFFERENT shard still commits;
+    the same schedule on one shard aborts.  This is the per-shard clock
+    doing its job."""
+    st = make_store(2, span=8)
+    base = st.alloc(16, 0)                 # words 0-7 -> shard 0, 8-15 -> 1
+    tx = st.begin(tid=0)
+    tx.write(base + 0, 11)                 # shard 0
+    with st.txn(tid=1) as tx2:
+        tx2.write(base + 8, 22)            # shard 1 commits in between
+    st.commit(tx)                          # must NOT abort
+    assert st.peek(base + 0) == 11 and st.peek(base + 8) == 22
+    assert st.clocks == (1, 1) and st.epoch == 0
+    st.stop()
+
+    solo = make_store(1, span=8)
+    base = solo.alloc(16, 0)
+    tx = solo.begin(tid=0)
+    tx.write(base + 0, 11)
+    with solo.txn(tid=1) as tx2:
+        tx2.write(base + 8, 22)
+    with pytest.raises(AbortTx):
+        solo.commit(tx)                    # one shard = one clock: stale
+    solo.stop()
+
+
+def test_shard_same_shard_conflict_still_aborts():
+    st = make_store(2, span=8)
+    base = st.alloc(16, 0)
+    tx = st.begin(tid=0)
+    tx.write(base + 1, 1)
+    with st.txn(tid=1) as tx2:
+        tx2.write(base + 2, 2)             # same shard 0
+    with pytest.raises(AbortTx):
+        st.commit(tx)
+    assert st.stats()["aborts"] == 1
+    st.stop()
+
+
+def test_shard_cross_commit_epoch_and_clocks():
+    st = make_store(2, span=4)
+    base = st.alloc(16, 0)
+    vals = np.arange(50, 66, dtype=np.int64)
+    with st.txn(tid=0) as tx:           # spans both shards
+        tx.write_bulk(range(base, base + 16), vals)
+    assert [st.peek(base + i) for i in range(16)] == vals.tolist()
+    assert st.epoch == 1                   # one cross-shard publish
+    assert st.clocks == (1, 1)             # each write shard ticked once
+    s = st.stats()
+    assert s["cross_shard_commits"] == 1 and s["commits"] == 1
+    st.stop()
+
+
+def test_shard_cross_commit_conflict_aborts_all_shards():
+    st = make_store(2, span=4)
+    base = st.alloc(16, 3)
+    tx = st.begin(tid=0)
+    tx.write_bulk(range(base, base + 16), np.arange(16))   # both shards
+    with st.txn(tid=1) as tx2:
+        tx2.write(base + 0, 99)            # stales shard 0's pin
+    with pytest.raises(AbortTx):
+        st.commit(tx)
+    # neither shard published the doomed cross-shard write
+    assert st.peek(base + 0) == 99 and st.peek(base + 8) == 3
+    assert st.epoch == 0 and st._epoch_seq.load() % 2 == 0
+    st.stop()
+
+
+def test_shard_cross_read_validates_every_touched_shard():
+    """Read one shard, write another: the read shard's pin is validated
+    under the locks, so a stale read aborts the commit."""
+    st = make_store(2, span=4)
+    base = st.alloc(16, 3)
+    tx = st.begin(tid=0)
+    v = tx.read(base + 0)                  # read shard 0
+    tx.write(base + 4, v + 1)              # write shard 1
+    with st.txn(tid=1) as tx2:
+        tx2.write(base + 0, 99)            # invalidate the read
+    with pytest.raises(AbortTx):
+        st.commit(tx)
+    assert st.peek(base + 4) == 3          # write never published
+    st.stop()
+
+
+def test_shard_readonly_commit_needs_no_epoch():
+    st = make_store(4, span=4)
+    base = st.alloc(32, 9)
+    with st.txn(tid=0) as tx:
+        got = tx.read_bulk(range(base, base + 32))    # touches all shards
+    assert list(got) == [9] * 32
+    assert st.epoch == 0 and st.clocks == (0, 0, 0, 0)
+    assert st.stats()["ro_commits"] == 1
+    st.stop()
+
+
+def test_shard_snapshot_bulk_pinned_vector():
+    st = make_store(2, span=4)
+    base = st.alloc(16, 0)
+    with st.txn(tid=0) as tx:
+        tx.write_bulk(range(base, base + 16), np.arange(16))
+    pins = st.clocks                       # the cut right after epoch 1
+    vals, ok = st.snapshot_bulk(np.arange(base, base + 16), list(pins))
+    assert ok
+    np.testing.assert_array_equal(vals, np.arange(16))
+    vals, ok = st.snapshot_bulk(np.arange(base, base + 16))   # now
+    assert ok
+    np.testing.assert_array_equal(vals, np.arange(16))
+    st.stop()
+
+
+def test_shard_alloc_grows_each_local_heap_to_its_top():
+    st = make_store(3, span=4)
+    st.alloc(10, 1)                        # partial span tail
+    st.alloc(30, 2)
+    top = 40
+    for s in range(3):
+        sh = st._shards[s]
+        have = int(sh._state.live[sh._key].shape[0])
+        assert have == st._local_top(s, top)
+    # every global address readable with its init value
+    got = [st.peek(a) for a in range(top)]
+    assert got[:10] == [1] * 10 and got[10:] == [2] * 30
+    st.stop()
+
+
+# ---------------------------------------------------------------------------
+# sharded group commit
+# ---------------------------------------------------------------------------
+
+
+def test_shard_batcher_groups_blind_writers_one_tick():
+    st = make_store(2, span=4, n_threads=8)
+    base = st.alloc(64, 0)
+    b = ShardedCommitBatcher(st)
+    # four span-aligned blind writes, all landing on shard 0
+    spans = [0, 2, 4, 6]                   # span index k: shard = k % 2
+    for t, k in enumerate(spans):
+        tx = st.begin(tid=t)
+        tx.write_bulk(range(base + 4 * k, base + 4 * k + 4),
+                      np.full(4, 100 + t, np.int64))
+        b.add(tx)
+    ok = b.commit_all()
+    assert ok == [True] * 4
+    assert b.stats["grouped"] == 4 and b.stats["groups"] == 1
+    assert b.stats["failed"] == 0
+    assert st.clocks[0] == 1               # ONE tick for the whole group
+    for t, k in enumerate(spans):
+        assert st.peek(base + 4 * k) == 100 + t
+    assert st.stats()["commits"] == 4      # four logical commits
+    st.stop()
+
+
+def test_shard_batcher_readers_and_cross_shard_fall_back_solo():
+    st = make_store(2, span=4, n_threads=8)
+    base = st.alloc(64, 5)
+    b = ShardedCommitBatcher(st)
+    tx1 = st.begin(tid=0)                  # has a read: not blind
+    v = tx1.read(base + 0)
+    tx1.write(base + 0, v + 1)
+    tx2 = st.begin(tid=1)                  # spans two shards: not blind
+    tx2.write_bulk(range(base, base + 16), np.arange(16))
+    b.add(tx1)
+    b.add(tx2)
+    ok = b.commit_all()
+    # neither is blind, so neither groups; tx1 commits solo first, which
+    # stales tx2's shard-0 pin — exactly the solo path's semantics
+    assert b.stats["grouped"] == 0 and b.stats["solo"] == 2
+    assert ok[0] is True
+    assert st.peek(base + 0) == 6          # tx1's increment landed
+    st.stop()
+
+
+def test_shard_batcher_overlapping_blind_writers_split():
+    st = make_store(2, span=4, n_threads=8)
+    base = st.alloc(32, 0)
+    b = ShardedCommitBatcher(st)
+    for t in range(2):                     # the SAME word: true overlap
+        tx = st.begin(tid=t)
+        tx.write(base + 0, t + 1)
+        b.add(tx)
+    ok = b.commit_all()
+    assert b.stats["grouped"] == 0         # overlap -> solo, 2nd aborts
+    assert ok == [True, False] and b.stats["failed"] == 1
+    assert st.peek(base + 0) == 1          # first writer won, no merge
+    st.stop()
