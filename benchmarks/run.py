@@ -377,6 +377,31 @@ def bench_reliability():
     return rows
 
 
+def bench_durability():
+    """Durable-commit eval headline re-saved under the bench_ prefix:
+    rwmix rotations with vs without the fsync'd write-ahead commit log,
+    plus the end-of-trial restart drill (a FRESH engine replays the log
+    and every block sum must be conserved).  The headline gate is
+    durable >= 0.5x in-memory throughput with zero violations (CI's
+    results artifact wants bench_durability.json next to the other
+    bench_*.json)."""
+    from repro.eval.driver import durability_headline, run_eval
+    from repro.eval.results import save_results
+
+    rows, _ = run_eval("durability", seed=SEED, quick=True, save=False)
+    head = durability_headline(rows)
+    for r in rows:
+        _emit(f"durability/{r.get('variant', '?')}/{r['backend']}",
+              1e6 / max(r.get("updates_per_sec", 0.0), 1e-9),
+              f"upd/s={r.get('updates_per_sec', 0.0):.0f};"
+              f"fsyncs={r.get('wal_stats', {}).get('fsyncs', 0)};"
+              f"replayed={r.get('wal_records_replayed', 0)};"
+              f"violations={r.get('violations', 0)}")
+    save_results("durability", rows, SEED, out_dir=RESULTS_DIR,
+                 extra_meta={"headline": head}, prefix="bench")
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Roofline report (reads the dry-run sweep results)
 # ---------------------------------------------------------------------------
@@ -409,6 +434,7 @@ BENCHES = {
     "rwmix": bench_rwmix,
     "shardscale": bench_shardscale,
     "reliability": bench_reliability,
+    "durability": bench_durability,
     "roofline": bench_roofline_report,
 }
 

@@ -32,7 +32,7 @@ import numpy as np
 from repro.api.substrate import SubstrateBase, Txn
 from repro.core import modes as M
 from repro.core.engine import AbortTx
-from repro.core.stats_schema import base_stats
+from repro.core.stats_schema import RECOVERY_STAT_KEYS, base_stats
 from repro.reliability import faultpoints as FP
 
 __all__ = ["MVStoreHandle"]
@@ -110,6 +110,13 @@ class MVStoreHandle(SubstrateBase):
         # this in-flight state — a crash there strands readers on deleted
         # buffers until recovery completes the install
         self._inflight = None
+        # durable commit log (reliability/wal.py, via attach_wal): when
+        # set, _publish_locked appends PREPARE + fsync'd DECIDE before
+        # the donating fused call — the only window whole-process
+        # recovery cannot rebuild from in-memory state
+        self.wal = None
+        self.wal_shard = -1
+        self.recovery_counters = {k: 0 for k in RECOVERY_STAT_KEYS}
         self._readers = [self.controller.reader() for _ in range(n_threads)]
         self._counters = [{k: 0 for k in _COUNTER_KEYS}
                          for _ in range(n_threads)]
@@ -322,17 +329,29 @@ class MVStoreHandle(SubstrateBase):
         return self._mvstore.blocks_conflict(
             self._state, (self._path,), ctx.read_clock)
 
-    def _publish_locked(self, ctx: _MVCtx) -> None:
+    def _publish_locked(self, ctx: _MVCtx, wal_log: bool = True) -> None:
         """The publish half of commit, ``self._commit_lock`` held and
         validation already passed.  Also the recovery redo entry point:
-        the cross-shard epoch roll-forward replays a crashed member's
-        parked context through exactly this path."""
+        the cross-shard epoch roll-forward and the WAL replay drive a
+        crashed member's parked context through exactly this path with
+        ``wal_log=False`` (replay must not re-journal itself; the
+        cross-shard caller journals the EPOCH instead)."""
         if FP.ACTIVE is not None:
             FP.fire("pre_clock_tick", ctx.tid)
         state = self.controller.trainer_tick(self._state)
         mode = self.controller.current_local_mode()
         idx = np.array(sorted(ctx.write_buf), dtype=np.int64)
         vals = np.array([ctx.write_buf[int(i)] for i in idx])
+        lsn = None
+        if wal_log and self.wal is not None and idx.size:
+            # PREPARE + DECIDE before the donating fused call: past the
+            # donation the old buffers are GONE, so the WAL record is
+            # the only thing a whole-process crash can recover from
+            lsn = self.wal.append_prepare(
+                ctx.tid, idx, vals,
+                clocks=(int(self._state.clock) + 1,),
+                shard=self.wal_shard)
+            self.wal.append_decide(lsn)
         # ONE fused publish under the held commit lock (the
         # seqlock bracket): scatter into the live row AND the
         # PackedVLT ring refresh ride a single device-resident
@@ -350,6 +369,8 @@ class MVStoreHandle(SubstrateBase):
             FP.fire("pre_release", ctx.tid)
         self._install(state)
         self._inflight = None
+        if lsn is not None:
+            self.wal.append_complete(lsn)
 
     def abort(self, txn: Txn) -> None:
         ctx = txn._ctx
@@ -468,6 +489,8 @@ class MVStoreHandle(SubstrateBase):
         out["mode_transitions"] = self.controller.stats["mode_transitions"]
         out["unversioned_buckets"] = self.controller.stats[
             "blocks_unversioned"]
+        for k, v in self.recovery_counters.items():
+            out[k] += v
         return out
 
     def stop(self) -> None:

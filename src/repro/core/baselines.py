@@ -221,7 +221,7 @@ class DCTLPolicy(PolicyBase):
         C.merge_undo(eng, d, addrs)
         if FP.ACTIVE is not None:
             FP.fire("pre_scatter", d.tid)
-        C.heap_scatter(eng.heap, addrs, values)
+        C.heap_scatter(eng.heap, addrs, values, tid=d.tid)
         if FP.ACTIVE is not None:
             FP.fire("post_scatter", d.tid)
 
@@ -236,7 +236,10 @@ class DCTLPolicy(PolicyBase):
         cv = eng.clock.load()
         # encounter-time commit record: the heap already holds the final
         # values, so past this point recovery rolls FORWARD (release at a
-        # fresh tick) rather than restoring the undo log
+        # fresh tick) rather than restoring the undo log; the durable
+        # DECIDE (redo image gathered from the locked heap words) lands
+        # at the same instant
+        C.wal_log_decide_encounter(eng, d)
         d.publish_started = True
         if FP.ACTIVE is not None:
             try:
@@ -417,6 +420,7 @@ class TinySTMPolicy(DCTLPolicy):
         if FP.ACTIVE is not None:
             FP.fire("pre_clock_tick", d.tid)
         wv = eng.clock.increment()
+        C.wal_log_decide_encounter(eng, d)
         d.publish_started = True
         if FP.ACTIVE is not None:
             try:

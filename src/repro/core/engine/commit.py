@@ -216,7 +216,7 @@ def merge_undo(eng, d, addrs: np.ndarray) -> None:
     d.undo = merged
 
 
-def heap_scatter(heap, addrs, values) -> None:
+def heap_scatter(heap, addrs, values, tid: int = -1) -> None:
     """``heap[addrs] = values`` in one pass (the write-back twin of
     ``bulkread.heap_gather``).
 
@@ -228,11 +228,23 @@ def heap_scatter(heap, addrs, values) -> None:
     trip per commit — the ``scatter_write`` kernel serves the
     FUNCTIONAL rows (``scatter_row`` below, the MVStore commit's
     device-side block), which is where a TPU deployment's heap lives.
+
+    When a fault schedule is installed the sweep splits in half around
+    the ``mid_scatter`` point — a crash there leaves a PARTIAL-LANE
+    heap image (half the record's lanes scattered, the rest not), the
+    torn state whole-record idempotent WAL redo must heal.
     """
     sc = getattr(heap, "scatter", None)
     if sc is None:
-        for a, v in zip(addrs, values):
-            heap[int(a)] = v
+        def sc(a, v):  # noqa: E731 - scalar-store fallback
+            for ai, vi in zip(a, v):
+                heap[int(ai)] = vi
+    n = len(values) if hasattr(values, "__len__") else 0
+    if FP.ACTIVE is not None and n > 1:
+        h = n // 2
+        sc(addrs[:h], values[:h])
+        FP.fire("mid_scatter", tid)
+        sc(addrs[h:], values[h:])
         return
     sc(addrs, values)
 
@@ -268,6 +280,60 @@ def scatter_row(row, addrs, values):
 
 
 # ---------------------------------------------------------------------------
+# durable commit log hooks (reliability/wal.py)
+# ---------------------------------------------------------------------------
+#
+# Protocol (the append-before-claim invariant): a PREPARE frame carrying
+# the full redo image is buffered-appended BEFORE the claim/scatter
+# phase; the fsync'd DECIDE marker lands at the exact instant
+# ``publish_started`` flips True, before the first heap mutation — file
+# appends are sequential, so the one DECIDE fsync also makes the
+# PREPARE durable.  An abandoned prepare (abort, or crash before
+# DECIDE) is never replayed: rollback is free.
+
+
+def wal_log_prepare(eng, d) -> None:
+    """Buffered PREPARE from the buffered write map (before the claim)."""
+    wal = eng.wal
+    if wal is None or not d.write_map:
+        return
+    wm = d.write_map
+    d.wal_lsn = wal.append_prepare(
+        d.tid, np.fromiter(wm.keys(), np.int64, len(wm)),
+        list(wm.values()), clocks=(eng.clock.load(),))
+
+
+def wal_log_decide(eng, d) -> None:
+    """fsync'd DECIDE at the publish_started flip (buffered path)."""
+    wal = eng.wal
+    if wal is None or d.wal_lsn is None:
+        return
+    wal.append_decide(d.wal_lsn)
+
+
+def wal_log_decide_encounter(eng, d) -> None:
+    """PREPARE + DECIDE for encounter-time policies, at their decide
+    point (revalidation passed, locks still held).
+
+    In-place backends scattered their values during execution, so the
+    redo image is gathered FROM THE HEAP at the undo log's addresses —
+    the locks guarantee those words still hold this transaction's
+    values.  There is no earlier correct hook: before revalidation the
+    commit may still abort (and the undo restore would un-publish the
+    prepared image), so prepare and decide collapse into one append +
+    one fsync here.
+    """
+    wal = eng.wal
+    if wal is None or not d.undo:
+        return
+    addrs = np.fromiter(d.undo.keys(), np.int64, len(d.undo))
+    vals = eng.heap.gather(addrs)
+    d.wal_lsn = wal.append_prepare(
+        d.tid, addrs, vals, clocks=(eng.clock.load(),))
+    wal.append_decide(d.wal_lsn)
+
+
+# ---------------------------------------------------------------------------
 # pipeline steps
 # ---------------------------------------------------------------------------
 
@@ -284,6 +350,7 @@ def acquire_write_locks(eng, d,
     acquisition order on the scalar path).
     """
     bm = BULK_MIN if bulk_min is None else bulk_min
+    wal_log_prepare(eng, d)
     if FP.ACTIVE is not None:
         FP.fire("pre_claim", d.tid)
     try_bulk = getattr(eng.locks, "try_lock_bulk", None)
@@ -325,14 +392,31 @@ def write_back(eng, d, bulk_min: Optional[int] = None) -> None:
     wm = d.write_map
     if FP.ACTIVE is not None:
         FP.fire("pre_scatter", d.tid)
+    if d.wal_lsn is None:
+        # policy skipped acquire_write_locks (or the WAL was attached
+        # mid-operation): prepare here so the decide below has a frame
+        wal_log_prepare(eng, d)
     # commit record: from here the decision is publish — a crash below
-    # rolls FORWARD from write_map (recovery.recover_engine)
+    # rolls FORWARD from write_map (recovery.recover_engine), and the
+    # durable DECIDE marker lands BEFORE the first heap mutation
+    wal_log_decide(eng, d)
     d.publish_started = True
     if len(wm) >= bm and getattr(eng.heap, "scatter", None) is not None:
         addrs = np.fromiter(wm.keys(), np.int64, len(wm))
-        heap_scatter(eng.heap, addrs, list(wm.values()))
+        heap_scatter(eng.heap, addrs, list(wm.values()), tid=d.tid)
         if FP.ACTIVE is not None:
             FP.fire("post_scatter", d.tid)
+        return
+    if FP.ACTIVE is not None and len(wm) > 1:
+        # same partial-lane split as heap_scatter, for the scalar path
+        items = list(wm.items())
+        h = len(items) // 2
+        for addr, value in items[:h]:
+            eng.heap[addr] = value
+        FP.fire("mid_scatter", d.tid)
+        for addr, value in items[h:]:
+            eng.heap[addr] = value
+        FP.fire("post_scatter", d.tid)
         return
     for addr, value in wm.items():
         eng.heap[addr] = value
@@ -376,7 +460,7 @@ def rollback_inplace(eng, d, bump_clock: bool = True,
     undo = d.undo
     if len(undo) >= bm and getattr(eng.heap, "scatter", None) is not None:
         addrs = np.fromiter(undo.keys(), np.int64, len(undo))
-        heap_scatter(eng.heap, addrs, list(undo.values()))
+        heap_scatter(eng.heap, addrs, list(undo.values()), tid=d.tid)
     else:
         for addr, old in undo.items():
             eng.heap[addr] = old

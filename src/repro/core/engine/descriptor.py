@@ -43,7 +43,7 @@ class TxnDescriptor:
         "r_clock", "read_only", "read_cnt", "read_set", "read_vals",
         "write_map", "locked_idxs", "undo", "versioned_write_set",
         "alloc_log", "local_mode_counter", "local_mode",
-        "dedup_read_set", "read_set_seen", "publish_started",
+        "dedup_read_set", "read_set_seen", "publish_started", "wal_lsn",
         # per-operation (survive retries)
         "versioned", "no_versioning", "initial_versioned_ts", "irrevocable")
 
@@ -83,6 +83,10 @@ class TxnDescriptor:
         # crash, True means roll FORWARD from write_map, False means roll
         # back from undo
         self.publish_started = False
+        # the durable twin (reliability/wal.py): lsn of this attempt's
+        # WAL PREPARE; an abandoned prepare (abort/crash before DECIDE)
+        # simply never replays
+        self.wal_lsn: Optional[int] = None
 
     def reset_operation(self) -> None:
         """Per-operation reset (a NEW logical operation, not a retry)."""

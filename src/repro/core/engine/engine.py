@@ -33,7 +33,7 @@ from repro.core.engine import validation as V
 from repro.core.engine.arrayheap import ArrayLockTable, ObjectHeap
 from repro.core.engine.descriptor import COUNTER_KEYS, TxnDescriptor
 from repro.core.engine.errors import AbortTx
-from repro.core.stats_schema import base_stats
+from repro.core.stats_schema import RECOVERY_STAT_KEYS, base_stats
 
 
 class TMBase:
@@ -109,6 +109,12 @@ class TransactionEngine(TMBase):
         self.clock = GlobalClock(0)
         self.locks = ArrayLockTable(lock_bits)
         self._descs = [TxnDescriptor(t) for t in range(n_threads)]
+        # durability (reliability/wal.py): when attached, the commit
+        # pipeline appends a PREPARE before the claim and fsyncs a
+        # DECIDE at the publish_started flip; recovery accumulates its
+        # typed counters here so stats()/normalize_stats surface them
+        self.wal = None
+        self.recovery_counters = {k: 0 for k in RECOVERY_STAT_KEYS}
         policy.setup(self)
 
     # ------------------------------------------------------------------
@@ -135,6 +141,12 @@ class TransactionEngine(TMBase):
         else:
             self.policy.commit_update(self, d)
             d.stats["commits"] += 1
+            if self.wal is not None and d.wal_lsn is not None:
+                # publish finished: buffered COMPLETE marker (replay is
+                # idempotent without it; recovery uses it to report
+                # decided-but-unpublished as rolled forward)
+                self.wal.append_complete(d.wal_lsn)
+                d.wal_lsn = None
         d.active = False
         self.policy.on_finish(self, d)
 
@@ -247,6 +259,8 @@ class TransactionEngine(TMBase):
         for d in self._descs:
             for k in COUNTER_KEYS:
                 out[k] += d.stats[k]
+        for k, v in self.recovery_counters.items():
+            out[k] += v
         self.policy.extra_stats(self, out)
         return out
 

@@ -342,6 +342,18 @@ class CommitBatcher:
                                                  _UNLOCKED_WORD,
                                                  _VER_SHIFT)
 
+        # durable group commit: ONE buffered append carries every
+        # member's PREPARE frame, landed BEFORE the claim window (the
+        # append-before-claim invariant); the single fsync'd group
+        # DECIDE below covers the whole batch
+        wal = eng.wal
+        if wal is not None:
+            lsns = wal.append_prepare_group(
+                [(int(d.tid), a, v, (eng.clock.load(),), -1, -1)
+                 for d, a, v in zip(group, w_addrs, w_vals)])
+            for d, lsn in zip(group, lsns):
+                d.wal_lsn = lsn
+
         # ONE hoisted CAS window for verdict + claim + tick + publish +
         # release: the group analogue of try_lock_bulk's
         # gather/check/scatter under held stripes.  Solo TL2 pays two
@@ -408,7 +420,12 @@ class CommitBatcher:
                     FP.fire("pre_scatter", int(tids[0]))
                 # group commit record: every surviving member is decided
                 # and about to publish — a crash from here rolls them
-                # all FORWARD (recovery.recover_engine)
+                # all FORWARD (recovery.recover_engine); ONE fsync'd
+                # group DECIDE makes the whole batch durable first
+                if wal is not None:
+                    wal.append_decide_group(
+                        [d.wal_lsn for d, okd in zip(group, ok)
+                         if okd and d.wal_lsn is not None])
                 for d, okd in zip(group, ok):
                     if okd:
                         d.publish_started = True
@@ -423,6 +440,11 @@ class CommitBatcher:
                 locks.store_words(
                     claim,
                     np.int64((wv << _VER_SHIFT) | _UNLOCKED_WORD))
+        if wal is not None:
+            for d, okd in zip(group, ok):
+                if okd and d.wal_lsn is not None:
+                    wal.append_complete(d.wal_lsn)
+                d.wal_lsn = None    # losers: abandoned prepare = rollback
         self._bookkeep(group, ok)
         return ok
 
@@ -471,7 +493,7 @@ class CommitBatcher:
             vals = []
             for vs in sel_vals:
                 vals.extend(vs)
-        C.heap_scatter(eng.heap, addrs, vals)
+        C.heap_scatter(eng.heap, addrs, vals, tid=int(tids[0]))
 
     # -- encounter (DCTL-style) group window ----------------------------
     def _commit_group_encounter(self, gp) -> np.ndarray:
@@ -500,13 +522,35 @@ class CommitBatcher:
                 FP.fire("pre_clock_tick", int(tids[0]))
             cv = eng.clock.load()
             # encounter group commit record: the heap already holds the
-            # surviving members' values — crash from here rolls forward
+            # surviving members' values — crash from here rolls forward.
+            # Durable twin: redo images gathered from the locked heap
+            # words, one buffered prepare-group + one fsync'd DECIDE
+            wal = eng.wal
+            if wal is not None:
+                recs, owners = [], []
+                for d, okd in zip(group, ok):
+                    if not okd or not d.undo:
+                        continue
+                    a = list(d.undo.keys())
+                    recs.append((int(d.tid), a,
+                                 [eng.heap[x] for x in a], (cv,), -1, -1))
+                    owners.append(d)
+                if recs:
+                    lsns = wal.append_prepare_group(recs)
+                    for d, lsn in zip(owners, lsns):
+                        d.wal_lsn = lsn
+                    wal.append_decide_group(lsns)
             for d, okd in zip(group, ok):
                 if okd:
                     d.publish_started = True
             if FP.ACTIVE is not None:
                 FP.fire("pre_release", int(tids[0]))
             eng.locks.unlock_bulk(np.concatenate(sel_l), cv)
+            if wal is not None:
+                for d, okd in zip(group, ok):
+                    if okd and d.wal_lsn is not None:
+                        wal.append_complete(d.wal_lsn)
+                    d.wal_lsn = None
         self._bookkeep(group, ok, clear_locked=True)
         return ok
 

@@ -205,6 +205,12 @@ def mv_commit_fused(state: MVStoreState, key: str, addrs, values, *,
         empty, empty, empty, empty, empty,
         np.zeros(1, np.int64), np.zeros(1, np.int64),
         int(new_clock), 1, **kw)
+    # fired AFTER the donating call, before the caller installs the
+    # result: a crash here is UNRECOVERABLE in-process (the old buffers
+    # are deleted, the new state not yet parked) — exactly the window
+    # only the durable WAL can cover (reliability/wal.recover_from_wal)
+    if FP.ACTIVE is not None:
+        FP.fire("mid_scatter")
     new_live = dict(state.live)
     new_live[key] = out[0]
     # sparse publish touches ONE block: only its stamp advances

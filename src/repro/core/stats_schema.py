@@ -16,13 +16,31 @@ Keys:
   mode_transitions     total mode-counter advances
   unversioned_buckets  buckets (word level) / blocks (store level) reclaimed
   ebr_freed            version nodes freed by epoch-based reclamation
+  rolled_forward       crashed commits recovery redid (decided records)
+  rolled_back          crashed attempts recovery dropped (undecided)
+  locks_swept          orphaned lock words the owner scan released
+  torn_rows_repaired   torn PackedVLT mirror rows reset by recovery
+  wal_records_replayed durable WAL records replayed on restart
   mode                 current global mode name ("Q"/"QtoU"/"U"/"UtoQ"),
                        or "-" for backends with no mode machinery
   backend              backend class/registry name
+
+The five recovery counters are ``reliability.recovery.RecoveryReport``
+projected through ``as_stats()`` — every ``recover_*`` accumulates them
+into the target's ``recovery_counters`` so they surface here instead of
+as ad-hoc report fields.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
+
+RECOVERY_STAT_KEYS = (
+    "rolled_forward",
+    "rolled_back",
+    "locks_swept",
+    "torn_rows_repaired",
+    "wal_records_replayed",
+)
 
 STATS_COUNTER_KEYS = (
     "commits",
@@ -33,7 +51,7 @@ STATS_COUNTER_KEYS = (
     "mode_transitions",
     "unversioned_buckets",
     "ebr_freed",
-)
+) + RECOVERY_STAT_KEYS
 
 STATS_KEYS = STATS_COUNTER_KEYS + ("mode", "backend")
 

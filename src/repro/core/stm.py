@@ -139,7 +139,9 @@ class MultiversePolicy(PolicyBase):
         # commit record: versioned readers can observe cleared-TBD
         # versions the instant _publish_versions runs, and the in-place
         # heap already holds the final values — from here a crash must
-        # roll FORWARD (finish publish + release), never back
+        # roll FORWARD (finish publish + release), never back; the
+        # durable DECIDE lands at the same instant
+        C.wal_log_decide_encounter(eng, d)
         d.publish_started = True
         if d.versioned_write_set:
             self._publish_versions(eng, d, commit_clock)
@@ -373,7 +375,7 @@ class MultiversePolicy(PolicyBase):
         C.merge_undo(eng, d, addrs)
         if FP.ACTIVE is not None:
             FP.fire("pre_scatter", d.tid)
-        C.heap_scatter(eng.heap, addrs, values)
+        C.heap_scatter(eng.heap, addrs, values, tid=d.tid)
         if FP.ACTIVE is not None:
             FP.fire("post_scatter", d.tid)
 

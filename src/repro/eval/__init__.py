@@ -20,6 +20,7 @@ same ``{git_sha, seed, backends, mode_transitions}`` meta block.
 See BENCHMARKS.md for how each experiment maps to a paper figure.
 """
 from repro.eval.driver import (  # noqa: F401
+    durability_headline,
     longread_headline,
     run_eval,
     serving_headline,
@@ -35,6 +36,6 @@ from repro.eval.workloads import (  # noqa: F401
 
 __all__ = [
     "DEFAULT_BACKENDS", "TrialSpec", "UNVERSIONED", "WORKLOADS",
-    "longread_headline", "run_eval", "save_results", "serving_headline",
-    "time_trial",
+    "durability_headline", "longread_headline", "run_eval",
+    "save_results", "serving_headline", "time_trial",
 ]

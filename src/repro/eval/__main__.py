@@ -15,9 +15,9 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.eval.driver import longread_headline, reliability_headline, \
-    run_eval, rwmix_headline, serving_headline, shardscale_headline, \
-    structrq_headline
+from repro.eval.driver import durability_headline, longread_headline, \
+    reliability_headline, run_eval, rwmix_headline, serving_headline, \
+    shardscale_headline, structrq_headline
 from repro.eval.workloads import WORKLOADS
 
 
@@ -80,6 +80,9 @@ def main(argv=None) -> int:
                          "(default: 1 2 4, or 1 2 with --quick)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer variants, short windows")
+    ap.add_argument("--durable", action="store_true",
+                    help="reliability only: journal every commit to an "
+                         "fsync'd WAL during the kill/recover trials")
     ap.add_argument("--out", default=None,
                     help="results directory (default: results/)")
     ap.add_argument("--no-save", action="store_true")
@@ -96,6 +99,8 @@ def main(argv=None) -> int:
 
     if args.shards:
         WORKLOADS["shardscale"].shards = tuple(args.shards)
+    if args.durable:
+        WORKLOADS["reliability"].durable = True
     rows, path = run_eval(
         args.workload, backends=args.backends, seed=args.seed,
         quick=args.quick, out_dir=args.out, save=not args.no_save,
@@ -163,6 +168,20 @@ def main(argv=None) -> int:
                   f"({d['ratio_vs_nofault']:.2f}x) kills={d['kills']} "
                   f"recovered={d['recoveries']} "
                   f"(fwd={d['rolled_forward']} back={d['rolled_back']}) "
+                  f"violations={d['violations']} -> {verdict}")
+    if args.workload == "durability":
+        h = durability_headline(rows)
+        for backend, d in sorted(h.items()):
+            verdict = (">=0.5x of in-memory with a clean restart drill"
+                       if d["holds"] else "does NOT hold")
+            solo = (f" solo={d['solo_ratio_vs_inmem']:.2f}x"
+                    if d.get("solo_ratio_vs_inmem") is not None else "")
+            print(f"\nheadline [{d['gated_on']}]: {backend} durable="
+                  f"{d['durable_updates_per_sec']:.1f} vs inmem="
+                  f"{d['inmem_updates_per_sec']:.1f} updates/s "
+                  f"({d['ratio_vs_inmem']:.2f}x{solo}) "
+                  f"fsyncs={d['fsyncs']} groups={d['commit_groups']} "
+                  f"replayed={d['wal_records_replayed']} "
                   f"violations={d['violations']} -> {verdict}")
     if args.workload == "structrq":
         h = structrq_headline(rows)

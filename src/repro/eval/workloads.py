@@ -726,6 +726,11 @@ class ReliabilityWorkload:
     name = "reliability"
     metric = "updates_per_sec"
     default_backends = ("multiverse", "tl2", "dctl")
+    #: CLI ``--durable``: journal every commit to an fsync'd WAL during
+    #: the trial, and hand the log to recovery so rolled-forward commits
+    #: get their COMPLETE marker — the kill/recover cycle measured WITH
+    #: the durability tax it would pay in production
+    durable = False
 
     def variants(self, quick: bool = False) -> List[TrialSpec]:
         dur, warm = (0.6, 0.2) if quick else (1.2, 0.3)
@@ -756,6 +761,12 @@ class ReliabilityWorkload:
         block_sum = wb * INITIAL
         eng = getattr(tm, "raw", tm)
         clock0 = eng.clock.load()
+        wal_dir = None
+        if self.durable:
+            import tempfile
+            from repro.reliability.wal import WriteAheadLog, attach_wal
+            wal_dir = tempfile.mkdtemp(prefix="repro-wal-")
+            attach_wal(tm, WriteAheadLog(wal_dir, group_sync=True))
         sched = None
         if p["kill_every"]:
             # one commit = one pre_claim + one pre_release arrival, so
@@ -787,7 +798,8 @@ class ReliabilityWorkload:
                     # worker dies mid-publish: recover its slot, plan the
                     # degraded + re-admitted fleet, rejoin at the same tid
                     c["kills"] += 1
-                    rep = recover_engine(tm, [tid])
+                    rep = recover_engine(tm, [tid], wal=eng.wal
+                                         if wal_dir else None)
                     c["rolled_forward"] += len(rep.rolled_forward)
                     c["rolled_back"] += len(rep.rolled_back)
                     rescale_plan(n_devices=max(1, n_upd - 1),
@@ -828,11 +840,19 @@ class ReliabilityWorkload:
             expect_sums=[(base + wb * b, wb, block_sum)
                          for b in range(n_blocks)])
         stats = tm.stats()
+        wal_stats = {}
+        if wal_dir is not None:
+            import shutil
+            wal_stats = eng.wal.stats()
+            eng.wal.close()
+            eng.wal = None
+            shutil.rmtree(wal_dir, ignore_errors=True)
         tm.stop()
         return {
             "workload": self.name, "backend": backend, "tm": backend,
             "variant": spec.variant, "seed": seed,
             "write_words": wb, "n_blocks": n_blocks,
+            "durable": bool(self.durable), "wal_stats": wal_stats,
             "kill_every": p["kill_every"],
             "updates_per_sec": counters["updates"] / dt,
             "failed_updates": counters["failed_updates"],
@@ -849,7 +869,203 @@ class ReliabilityWorkload:
         }
 
 
+# ---------------------------------------------------------------------------
+# durability: rwmix commit throughput with vs without the fsync'd WAL,
+# plus a whole-process restart drill on the durable log
+# ---------------------------------------------------------------------------
+
+
+class DurabilityWorkload:
+    """rwmix's sum-preserving rotations, in-memory vs durable.
+
+    Two variants on identical op streams: ``inmem`` is the plain rwmix
+    commit pipeline; ``durable`` attaches a ``reliability.wal``
+    WriteAheadLog, so every commit buffers a PREPARE before its claim
+    and fsyncs a DECIDE at the publish flip.  The headline asks what
+    fraction of in-memory commit throughput survives the durability tax
+    (>= 0.5x — the fsync batches with group commit, it doesn't gate
+    every scatter).
+
+    The durable trial ends with a RESTART DRILL: the engine that ran
+    the trial is discarded wholesale, a FRESH engine replays the log
+    via ``recover_from_wal``, and every block sum must still be
+    conserved on the rebuilt heap.  Drill failures land in
+    ``violations`` so the CLI's non-zero-exit gate sees them alongside
+    the live checker's torn-snapshot count.
+    """
+
+    name = "durability"
+    metric = "updates_per_sec"
+    # tl2 = the buffered WAL hook (PREPARE before claim, DECIDE at the
+    # publish flip), dctl = the encounter hook (prepare+decide collapse
+    # at the decide point) — together they cover both journaling
+    # flavors, and both policies have a fused group-commit path so the
+    # *-group variants measure the amortized configuration the headline
+    # gates on.  multiverse's durable operation is exercised by
+    # ``reliability --durable`` (its versioned write sets commit solo).
+    default_backends = ("tl2", "dctl")
+
+    def variants(self, quick: bool = False) -> List[TrialSpec]:
+        dur, warm = (0.6, 0.2) if quick else (1.2, 0.3)
+        return [TrialSpec(
+            workload=self.name, variant=v, n_readers=1, n_updaters=2,
+            duration_s=dur, warmup_s=warm,
+            params=dict(write_words=256, n_blocks=8, max_retries=2000,
+                        durable=d, grouped=g),
+        ) for v, d, g in (("inmem", False, False),
+                          ("durable", True, False),
+                          ("inmem-group", False, True),
+                          ("durable-group", True, True))]
+
+    def run_trial(self, backend: str, spec: TrialSpec, seed: int) -> Dict:
+        import shutil
+        import tempfile
+        from repro.eval.driver import time_trial
+        from repro.reliability.recovery import check_engine_invariants
+        from repro.reliability.wal import (WriteAheadLog, attach_wal,
+                                           recover_from_wal)
+        from repro.core.engine.errors import AbortTx
+        from repro.core.engine.groupcommit import CommitBatcher
+        p = spec.params
+        wb, n_blocks = p["write_words"], p["n_blocks"]
+        n_upd = spec.n_updaters
+        grouped = bool(p.get("grouped"))
+        mk_params = MultiverseParams(k1=30, k2=200, k3=200,
+                                     lock_table_bits=16)
+        # group variants hand every batch member its own descriptor:
+        # member tids are the block ids, checkers sit above them
+        n_threads = (n_blocks + spec.n_readers if grouped
+                     else spec.total_threads)
+        tm = _make(backend, n_threads, params=mk_params)
+        base = tm.alloc(wb * n_blocks, INITIAL)
+        block_sum = wb * INITIAL
+        eng = getattr(tm, "raw", tm)
+        clock0 = eng.clock.load()
+        wal_dir = None
+        if p["durable"]:
+            wal_dir = tempfile.mkdtemp(prefix="repro-wal-")
+            attach_wal(tm, WriteAheadLog(wal_dir, group_sync=True))
+
+        def updater(tid, stop, c):
+            r = random.Random(seed * 10007 + 300 + tid)
+            mine = [b for b in range(n_blocks) if b % n_upd == tid]
+
+            def rotate(tx):
+                off = base + wb * mine[r.randrange(len(mine))]
+                vals = np.asarray(tx.read_bulk(range(off, off + wb)),
+                                  np.int64)
+                tx.write_bulk(range(off, off + wb), np.roll(vals, 1))
+            while not stop.is_set():
+                try:
+                    run(tm, rotate, tid=tid,
+                        max_retries=p["max_retries"])
+                    c["updates"] += 1
+                except MaxRetriesExceeded:
+                    c["failed_updates"] += 1
+
+        def group_updater(worker, stop, c):
+            # one txn per owned block, disjoint write sets -> one fused
+            # publish and (durable) ONE journal fsync per batch
+            mine = [b for b in range(n_blocks) if b % n_upd == worker]
+            batcher = CommitBatcher(eng)
+            while not stop.is_set():
+                txs = []
+                for b in mine:
+                    off = base + wb * b
+                    for _attempt in range(4):
+                        tx = eng.begin(b)
+                        try:
+                            vals = np.asarray(
+                                tx.read_bulk(range(off, off + wb)),
+                                np.int64)
+                            tx.write_bulk(range(off, off + wb),
+                                          np.roll(vals, 1))
+                            txs.append(tx)
+                            break
+                        except AbortTx:
+                            continue
+                for tx in txs:
+                    batcher.add(tx)
+                ok = batcher.commit_all()
+                good = sum(ok)
+                c["updates"] += good
+                c["failed_updates"] += len(ok) - good
+            c["groups"] = batcher.stats["groups"]
+            c["grouped_members"] = batcher.stats["grouped"]
+
+        def checker(tid, stop, c):
+            r = random.Random(seed * 10007 + 900 + tid)
+
+            def check(tx):
+                off = base + wb * r.randrange(n_blocks)
+                return _batch_sum(tx.read_bulk(range(off, off + wb)))
+            while not stop.is_set():
+                try:
+                    got = run(tm, check, tid=tid,
+                              max_retries=p["max_retries"])
+                    c["checks"] += 1
+                    if got != block_sum:
+                        c["violations"] += 1
+                except MaxRetriesExceeded:
+                    c["failed_checks"] += 1
+
+        upd_fn = group_updater if grouped else updater
+        chk_base = n_blocks if grouped else n_upd
+        workers = [lambda stop, c, t=t: upd_fn(t, stop, c)
+                   for t in range(n_upd)]
+        workers += [lambda stop, c, t=t: checker(chk_base + t, stop, c)
+                    for t in range(spec.n_readers)]
+        counters, dt = time_trial(workers, spec)
+        post = check_engine_invariants(
+            tm, clock_at_least=clock0,
+            expect_sums=[(base + wb * b, wb, block_sum)
+                         for b in range(n_blocks)])
+        stats = tm.stats()
+        wal_stats: Dict = {}
+        replayed = 0
+        drill_failures: List = []
+        if wal_dir is not None:
+            wal_stats = eng.wal.stats()
+            eng.wal.close()
+            eng.wal = None
+            tm.stop()
+            # restart drill: the process image is gone — only the log
+            # survives, and the fresh engine must conserve every block
+            fresh = _make(backend, 1, params=mk_params)
+            fresh.alloc(wb * n_blocks, INITIAL)
+            rep = recover_from_wal(wal_dir, fresh)
+            replayed = rep.wal_records_replayed
+            drill_failures = check_engine_invariants(
+                fresh, expect_sums=[(base + wb * b, wb, block_sum)
+                                    for b in range(n_blocks)])
+            fresh.stop()
+            shutil.rmtree(wal_dir, ignore_errors=True)
+        else:
+            tm.stop()
+        return {
+            "workload": self.name, "backend": backend, "tm": backend,
+            "variant": spec.variant, "seed": seed,
+            "write_words": wb, "n_blocks": n_blocks,
+            "durable": bool(p["durable"]), "grouped": grouped,
+            "commit_groups": counters.get("groups", 0),
+            "grouped_members": counters.get("grouped_members", 0),
+            "updates_per_sec": counters["updates"] / dt,
+            "failed_updates": counters["failed_updates"],
+            "checks_per_sec": counters["checks"] / dt,
+            "failed_checks": counters["failed_checks"],
+            "violations": (counters["violations"] + len(post)
+                           + len(drill_failures)),
+            "post_invariant_failures": post,
+            "restart_drill_failures": drill_failures,
+            "wal_records_replayed": replayed,
+            "wal_stats": wal_stats,
+            "mode_transitions": stats.get("mode_transitions", 0),
+            "stm_stats": stats,
+        }
+
+
 WORKLOADS = {w.name: w for w in (LongReadWorkload(), RWMixWorkload(),
                                  ShardScaleWorkload(), StructRQWorkload(),
                                  ServingWorkload(),
-                                 ReliabilityWorkload())}
+                                 ReliabilityWorkload(),
+                                 DurabilityWorkload())}

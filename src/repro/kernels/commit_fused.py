@@ -46,6 +46,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+# fault injection only (stdlib-only module — keeps the kernels
+# engine-import-free): np_commit_fused splits its scatter around the
+# ``mid_scatter`` point so crash drills can freeze a partial-lane image
+from repro.reliability import faultpoints as FP
+
 # validation predicate selectors — same encoding as engine/validation.py
 # (kernels stay engine-import-free, so the constants are mirrored here
 # and pinned equal by tests/test_groupcommit.py)
@@ -144,7 +149,20 @@ def np_commit_fused(heap, w_addr, w_val, w_seg,
         a = np.asarray(w_addr, np.int64)[sel]
         if a.size and int(a.min(initial=0)) < 0:
             raise IndexError(int(a.min()))
-        out[a] = np.asarray(w_val)[sel]
+        v = np.asarray(w_val)[sel]
+        if FP.ACTIVE is not None and a.size > 1:
+            # partial-lane completion fault: half the surviving lanes
+            # land, then the injection point — a crash here freezes the
+            # batch mid-scatter, the torn image whole-record idempotent
+            # WAL redo must heal (the caller's claim words are already
+            # stamped, so in-process recovery rolls the group forward)
+            h = a.size // 2
+            out[a[:h]] = v[:h]
+            FP.fire("mid_scatter",
+                    int(np.asarray(tids)[0]) if len(tids) else -1)
+            out[a[h:]] = v[h:]
+        else:
+            out[a] = v
     return out, ok, new_l_ver
 
 

@@ -31,22 +31,29 @@ from repro.reliability.faultpoints import (  # noqa: F401
     FaultSchedule,
     ProcessCrashed,
     SimulatedCrash,
+    SimulatedProcessDeath,
     ThreadKilled,
 )
 
 __all__ = [
     "FAULT_POINTS", "Fault", "FaultError", "FaultSchedule",
-    "ProcessCrashed", "SimulatedCrash", "ThreadKilled",
+    "ProcessCrashed", "SimulatedCrash", "SimulatedProcessDeath",
+    "ThreadKilled",
     "recover_engine", "recover_handle", "RecoveryReport",
+    "WriteAheadLog", "attach_wal", "recover_from_wal",
 ]
 
 
 def __getattr__(name):
-    # recovery pulls in numpy/engine internals; keep the package import
-    # featherweight for the faultpoints hooks in core modules
+    # recovery/wal pull in numpy/engine internals; keep the package
+    # import featherweight for the faultpoints hooks in core modules
     if name in ("recover_engine", "recover_handle", "RecoveryReport",
                 "check_engine_invariants", "check_store_invariants",
                 "replay_from_checkpoint"):
         from repro.reliability import recovery
         return getattr(recovery, name)
+    if name in ("WriteAheadLog", "attach_wal", "recover_from_wal",
+                "WalRecord", "scan_dir"):
+        from repro.reliability import wal
+        return getattr(wal, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -18,19 +18,33 @@ Design contract with the hot paths:
   nested hooks on the unwind path never double-fire, and so cleanup
   code can ask ``FP.dying()`` directly.
 
-The seven points::
+The eight points::
 
     pre_claim           before write locks are claimed
     post_claim          after all write locks are held
     pre_clock_tick      before the commit timestamp is taken
     pre_scatter         before heap publication starts
+    mid_scatter         INSIDE the publish sweep — some lanes already
+                        scattered, the rest not (the commit_fused
+                        partial-lane completion fault; recovery must
+                        redo the whole record idempotently)
     post_scatter        after heap publication completes
     pre_release         before write locks are released
     pre_manifest_publish before the checkpoint manifest rename
+
+Actions: ``raise`` (recoverable ``FaultError``), ``kill`` (the owning
+thread dies), ``crash`` (the simulated process drops; in-memory state
+survives for the in-process recovery drills), and ``die`` — the REAL
+thing: ``SIGKILL`` to our own pid, discarding ALL in-memory state.
+``die`` is for subprocess drills only (the parent restarts a fresh
+process and recovers from the durable WAL); firing it inside a test
+runner would take the runner down with it.
 """
 from __future__ import annotations
 
+import os
 import random
+import signal
 import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -40,12 +54,13 @@ FAULT_POINTS: Tuple[str, ...] = (
     "post_claim",
     "pre_clock_tick",
     "pre_scatter",
+    "mid_scatter",
     "post_scatter",
     "pre_release",
     "pre_manifest_publish",
 )
 
-ACTIONS: Tuple[str, ...] = ("raise", "kill", "crash")
+ACTIONS: Tuple[str, ...] = ("raise", "kill", "crash", "die")
 
 
 class FaultError(RuntimeError):
@@ -79,6 +94,13 @@ class ThreadKilled(SimulatedCrash):
 
 class ProcessCrashed(SimulatedCrash):
     """The whole simulated process dropped; recovery restarts it."""
+
+
+class SimulatedProcessDeath(ProcessCrashed):
+    """The OS process image is GONE — every in-memory structure (heap,
+    lock table, descriptors, parked epoch records) is lost.  The ``die``
+    action delivers a real ``SIGKILL``; this exception only surfaces if
+    the signal could not be delivered (never, on POSIX)."""
 
 
 def is_simulated_crash(exc: BaseException) -> bool:
@@ -247,4 +269,9 @@ def fire(point: str, tid: int = -1) -> None:
     if action == "kill":
         raise ThreadKilled(point, tid)
     sched.process_dead = True
+    if action == "die":
+        # the real thing: no unwind, no cleanup, no exception — the
+        # kernel reaps us mid-instruction (subprocess drills only)
+        os.kill(os.getpid(), signal.SIGKILL)
+        raise SimulatedProcessDeath(point, tid)  # pragma: no cover
     raise ProcessCrashed(point, tid)

@@ -44,6 +44,11 @@ import numpy as np
 from repro.reliability import faultpoints as FP
 
 
+#: the typed recovery counters every recover_* surfaces — their one
+#: home is the shared stats schema (``as_stats`` projects onto them)
+from repro.core.stats_schema import RECOVERY_STAT_KEYS  # noqa: E402,F401
+
+
 @dataclasses.dataclass
 class RecoveryReport:
     dead_tids: List[int] = dataclasses.field(default_factory=list)
@@ -55,6 +60,36 @@ class RecoveryReport:
     completed_install: bool = False
     clock_before: int = 0
     clock_after: int = 0
+    wal_records_replayed: int = 0
+    wal_torn_bytes: int = 0
+
+    # canonical satellite names for the sweep counters
+    @property
+    def locks_swept(self) -> int:
+        return self.released_locks
+
+    @property
+    def torn_rows_repaired(self) -> int:
+        return self.repaired_mirror_rows
+
+    def as_stats(self) -> dict:
+        """The report projected onto the shared stats schema keys —
+        ``normalize_stats`` carries these through unchanged."""
+        return {"rolled_forward": len(self.rolled_forward),
+                "rolled_back": len(self.rolled_back),
+                "locks_swept": self.released_locks,
+                "torn_rows_repaired": self.repaired_mirror_rows,
+                "wal_records_replayed": self.wal_records_replayed}
+
+    def apply_to(self, target: Any) -> None:
+        """Accumulate into the target's ``recovery_counters`` so its
+        ``stats()`` (and thus ``normalize_stats``) surfaces recovery
+        work instead of ad-hoc fields."""
+        t = getattr(target, "raw", target)
+        rc = getattr(t, "recovery_counters", None)
+        if rc is not None:
+            for k, v in self.as_stats().items():
+                rc[k] += v
 
     def summary(self) -> str:
         return (f"recovered tids={self.dead_tids} "
@@ -62,6 +97,7 @@ class RecoveryReport:
                 f"locks={self.released_locks} "
                 f"mirror={self.repaired_mirror_rows} "
                 f"ring={self.truncated_ring_slots} "
+                f"wal={self.wal_records_replayed} "
                 f"clock {self.clock_before}->{self.clock_after}")
 
 
@@ -87,11 +123,13 @@ def _roll_forward(eng, d, commit_clock: int) -> None:
     scatter/publish below races nobody.
     """
     if d.write_map and not d.undo:
-        # buffered: redo the write-back from the redo log (idempotent)
-        from repro.core.engine import commit as C
+        # buffered: redo the write-back from the redo log (idempotent);
+        # recovery never routes through heap_scatter — an installed
+        # fault schedule must not inject into the repair itself
+        from repro.reliability.wal import _plain_scatter
         wm = d.write_map
         addrs = np.fromiter(wm.keys(), np.int64, len(wm))
-        C.heap_scatter(eng.heap, addrs, list(wm.values()))
+        _plain_scatter(eng.heap, addrs, list(wm.values()))
     if d.versioned_write_set:
         # Multiverse: finish clearing TBD marks / refreshing the mirror
         # at the recovery clock (>= the tick the crashed commit took)
@@ -104,13 +142,20 @@ def _roll_forward(eng, d, commit_clock: int) -> None:
     eng.policy.on_finish(eng, d)
 
 
-def recover_engine(tm: Any, dead_tids: Sequence[int]) -> RecoveryReport:
+def recover_engine(tm: Any, dead_tids: Sequence[int],
+                   wal: Any = None) -> RecoveryReport:
     """Scan a word-level engine after a crash and restore consistency.
 
     ``dead_tids`` are the threads that died (every transaction they
-    owned is orphaned).  Safe to call with live threads quiesced — the
-    crash matrix and the reliability workload both stop the world first,
-    exactly like a real restart.
+    owned is orphaned) — MULTIPLE dead workers recover in this one
+    sweep, including group-commit batch mates.  Safe to call with live
+    threads quiesced — the crash matrix and the reliability workload
+    both stop the world first, exactly like a real restart.
+
+    ``wal`` (optional): the engine's attached WAL — a rolled-forward
+    descriptor's durable record gets its COMPLETE marker here, so the
+    journal reflects the finished publish.  (Replay stays idempotent
+    without it; whole-process recovery is ``wal.recover_from_wal``.)
     """
     eng = _unwrap(tm)
     rep = RecoveryReport(dead_tids=sorted(int(t) for t in dead_tids))
@@ -127,6 +172,9 @@ def recover_engine(tm: Any, dead_tids: Sequence[int]) -> RecoveryReport:
                     eng.locks.unlock(int(idx), cv)
                 rep.released_locks += len(held)
                 rep.rolled_forward.append(tid)
+                if wal is not None and d.wal_lsn is not None:
+                    wal.append_complete(d.wal_lsn)
+                    d.wal_lsn = None
             else:
                 # the engine's abort already knows every policy's
                 # rollback: undo restore, TBD unlink, deferred-clock bump
@@ -137,6 +185,7 @@ def recover_engine(tm: Any, dead_tids: Sequence[int]) -> RecoveryReport:
         rep.released_locks += eng.release_thread_locks(tid)
     rep.repaired_mirror_rows = repair_mirror(eng)
     rep.clock_after = eng.clock.load()
+    rep.apply_to(eng)
     FP.reset_thread()
     return rep
 
@@ -262,6 +311,7 @@ def recover_handle(handle: Any) -> RecoveryReport:
                 state = state._replace(ring_ts=new_ts)
         handle._install(state)
         rep.clock_after = int(handle._state.clock)
+    rep.apply_to(handle)
     FP.reset_thread()
     return rep
 
@@ -331,16 +381,21 @@ class EpochRecord:
     tid: int = -1
     publish_started: bool = False
     published: list = dataclasses.field(default_factory=list)
+    # the epoch's durable twin: one WAL prepare per write shard, all
+    # covered by ONE group DECIDE — so a restart replays the epoch
+    # all-or-nothing (wal.recover_from_wal)
+    wal_lsns: tuple = ()
 
 
-def recover_shardstore(store: Any) -> RecoveryReport:
+def recover_shardstore(store: Any, wal: Any = None) -> RecoveryReport:
     """Recover a ``ShardStoreHandle`` after a crashed commit.
 
     Stop-world like every recovery here: first each member shard recovers
     exactly as a solo handle (completing crashed installs, truncating
     torn ring slots), then the epoch record applies the roll-forward /
     roll-back rule above, and finally the epoch seqlock is forced even so
-    new transactions stop spinning in ``begin``.
+    new transactions stop spinning in ``begin``.  With ``wal`` given, a
+    rolled-forward epoch's durable records get their COMPLETE markers.
     """
     rep = RecoveryReport()
     rep.clock_before = int(store._epoch.load())
@@ -357,9 +412,13 @@ def recover_shardstore(store: Any) -> RecoveryReport:
                     # still at its pin => this shard never published:
                     # redo through the exact commit publish path
                     with shard._commit_lock:
-                        shard._publish_locked(rec.ctxs[s])
+                        shard._publish_locked(rec.ctxs[s],
+                                              wal_log=False)
                     rec.published.append(s)
             rep.rolled_forward.append(rec.tid)
+            if wal is not None:
+                for lsn in rec.wal_lsns:
+                    wal.append_complete(lsn)
         else:
             rep.rolled_back.append(rec.tid)
         for ctx in rec.ctxs.values():
@@ -368,6 +427,7 @@ def recover_shardstore(store: Any) -> RecoveryReport:
     if store._epoch_seq.load() & 1:
         store._epoch_seq.increment()
     rep.clock_after = int(store._epoch.load())
+    rep.apply_to(store)
     FP.reset_thread()
     return rep
 

@@ -37,12 +37,19 @@ class FaultPlan:
 class TrainSupervisor:
     def __init__(self, *, ckpt_dir: str, ckpt_every: int = 20,
                  max_restarts: int = 5, reader=None,
-                 straggler: Optional[StragglerMonitor] = None):
+                 straggler: Optional[StragglerMonitor] = None,
+                 wal=None):
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
         self.manager = CheckpointManager(ckpt_dir, reader=reader)
         self.straggler = straggler or StragglerMonitor()
+        # optional durable commit log (reliability/wal.WriteAheadLog):
+        # checkpoints double as WAL truncation points (the base image
+        # reclaims segments below the floor), and every restore logs the
+        # journal's decided-but-unpublished tail so drills can assert
+        # the committed prefix survived the restart
+        self.wal = wal
         self.restarts = 0
         self.events = []
 
@@ -84,6 +91,10 @@ class TrainSupervisor:
     def _checkpoint(self, step, state):
         outcome = self.manager.submit(step, state.mv, state.opt,
                                       extra={"restarts": self.restarts})
+        if self.wal is not None:
+            key = next(iter(state.mv.live))
+            self.wal.checkpoint(np.asarray(state.mv.live[key]),
+                                int(state.mv.clock))
         self.events.append(
             ("checkpoint", step,
              "ok" if outcome else getattr(outcome, "value", "aborted")))
@@ -92,11 +103,24 @@ class TrainSupervisor:
         self.manager.wait_idle()          # in-flight async save may be ours
         from repro.reliability.recovery import replay_from_checkpoint
         try:
-            return replay_from_checkpoint(self.ckpt_dir, template_state)
+            out = replay_from_checkpoint(self.ckpt_dir, template_state)
         except FileNotFoundError:
             # cold restart: no checkpoint landed yet -> replay from step 0
             self.events.append(("cold_restart", 0, ""))
-            return 0, template_state
+            out = 0, template_state
+        if self.wal is not None:
+            # counter-based replay recomputes the lost steps exactly, so
+            # the WAL tail is not re-applied here — but its decided
+            # records ARE the committed prefix, and the scan both proves
+            # they survived and journals the torn tail for the drills
+            from repro.reliability.wal import scan_dir
+            self.wal.flush()
+            recs, torn, _base = scan_dir(self.wal.path)
+            undrained = sum(1 for r in recs if r.decided and not r.completed)
+            self.events.append(
+                ("wal_scan", out[0],
+                 f"records={len(recs)} undrained={undrained} torn={torn}"))
+        return out
 
 
 class _RingCfg:

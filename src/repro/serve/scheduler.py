@@ -119,13 +119,20 @@ class ContinuousBatchingScheduler:
         """
         self.queue.close()
         t0 = time.perf_counter()
-        while self.busy:
-            if timeout_s is not None \
-                    and time.perf_counter() - t0 > timeout_s:
-                self._fail_remaining()
-                return False
-            if not self.step():
-                time.sleep(idle_sleep_s)
+        try:
+            while self.busy:
+                if timeout_s is not None \
+                        and time.perf_counter() - t0 > timeout_s:
+                    self._fail_remaining()
+                    return False
+                if not self.step():
+                    time.sleep(idle_sleep_s)
+        except BaseException:
+            # executor crash mid-drain: leave no slot half-served — every
+            # in-flight request is either re-admitted (salvageable) or
+            # failed (at the abort cap) before the crash propagates
+            self._crash_sweep()
+            raise
         return True
 
     # -- internals -------------------------------------------------------
@@ -200,6 +207,40 @@ class ContinuousBatchingScheduler:
 
     def _free(self, i: int) -> None:
         self.slots[i] = None
+
+    def _crash_sweep(self) -> dict:
+        """Sweep the slot pool after an executor crash.
+
+        A request caught mid-decode when the executor died holds a
+        pinned clock and partial tokens that no longer mean anything —
+        the snapshot it was reading may not survive recovery.  Requests
+        below the abort cap are re-admitted: progress discarded, decode
+        state reset, charged one abort, left in their slot so a later
+        drain (same or fresh scheduler over this slot list) re-prefills
+        them at a post-recovery clock.  Requests at the cap are FAILED
+        so callers still see a complete accounting.  Queued (never
+        admitted) requests are untouched — they carry no stale state.
+        """
+        now = time.perf_counter()
+        swept = {"readmitted": 0, "failed": 0}
+        for i, slot in enumerate(self.slots):
+            if slot is None or not slot.decoding:
+                continue
+            req = slot.req
+            req.aborts += 1
+            self.metrics.on_snapshot_abort()
+            if req.aborts >= self.max_request_aborts:
+                self.metrics.on_failed(req, now)
+                self._free(i)
+                swept["failed"] += 1
+                continue
+            req.tokens.clear()
+            req.served_clocks.clear()
+            req.pinned_clock = -1
+            slot.produced = 0
+            slot.decoding = False
+            swept["readmitted"] += 1
+        return swept
 
     def _fail_remaining(self) -> None:
         now = time.perf_counter()

@@ -16,6 +16,8 @@ committed-prefix reference:
 ``test_crash_quick_*`` is the 6-case smoke subset CI selects with
 ``-k "crash and quick"``.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -441,6 +443,294 @@ def test_crash_dying_thread_suppresses_nested_fires():
     FP.fire("pre_release", 0)        # no raise: thread is dying
     FP.uninstall()
     FP.reset_thread()
+
+
+# ---------------------------------------------------------------------------
+# multi-worker simultaneous crashes: >= 2 dead tids, ONE recovery sweep
+# ---------------------------------------------------------------------------
+
+
+def _two_worker_crash(backend, point0, point1):
+    """Worker tids 1 and 2 crash on DISJOINT ranges; both descriptors
+    stay dead until one recover_engine sweep handles the pair."""
+    tm = WORD_BACKENDS[backend](3)
+    tm.alloc(2 * N, 0)
+    _committed_write(tm, 0)            # tid 0 seeds [0, N)
+    clock0 = tm.clock.load()
+    # per-point arrival counters: tid 1 runs first and bumps point1's
+    # counter iff it reaches point1 before dying at point0 — i.e. iff
+    # point1 is at or before point0 in the pipeline order
+    order = {p: i for i, p in enumerate(POINTS)}
+    nth1 = 2 if order[point1] <= order[point0] else 1
+    sched = FP.install(FP.FaultSchedule([
+        FP.Fault(point0, 1, "kill", tid=1),
+        FP.Fault(point1, nth1, "kill", tid=2)]))
+    dead = []
+    for tid, lo in ((1, 0), (2, N)):
+        def w(tx, lo=lo):
+            tx.write_bulk(np.arange(lo, lo + N),
+                          [lo + v + 1000 for v in range(N)])
+        try:
+            run(tm, w, tid=tid)
+        except FP.SimulatedCrash:
+            dead.append(tid)
+            FP.reset_thread()          # the next WORKER is its own thread
+    FP.uninstall()
+    assert dead == [1, 2], sched.fired
+    decided = {t: tm.ctx(t).publish_started for t in dead}
+    rep = recover_engine(tm, dead)     # ONE sweep over both corpses
+    assert rep.dead_tids == [1, 2]
+    violations = check_engine_invariants(tm, clock_at_least=clock0)
+    assert violations == [], violations
+    for tid, lo in ((1, 0), (2, N)):
+        exp = ([lo + v + 1000 for v in range(N)] if decided[tid]
+               else ([v for v in range(N)] if lo == 0 else [0] * N))
+        assert [tm.peek(lo + i) for i in range(N)] == exp, (tid, decided)
+    return rep, decided
+
+
+@pytest.mark.parametrize("backend", ["multiverse", "tl2"])
+def test_crash_multi_worker_both_roll_forward(backend):
+    rep, decided = _two_worker_crash(backend, "pre_release", "pre_release")
+    assert decided == {1: True, 2: True}
+    assert sorted(rep.rolled_forward) == [1, 2]
+
+
+def test_crash_multi_worker_mixed_directions():
+    """tid 1 dies BEFORE its commit record (roll back), tid 2 dies
+    holding its locks AFTER (roll forward) — one sweep, two verdicts."""
+    rep, decided = _two_worker_crash("tl2", "pre_claim", "pre_release")
+    assert decided == {1: False, 2: True}
+    assert rep.rolled_forward == [2]
+
+
+def test_crash_group_two_dead_same_batch_mid_scatter():
+    """mid_scatter inside the GROUP publish: the concatenated scatter
+    stops with some members' lanes written and others not — every
+    member already flipped publish_started off the shared decide, so
+    the sweep must roll the WHOLE batch forward."""
+    tm = WORD_BACKENDS["tl2"](4)
+    n_members = 3
+    tm.alloc(n_members * N, 0)
+    txs = []
+    for t in range(n_members):
+        tx = tm.begin(t)
+        tx.write_bulk(np.arange(t * N, (t + 1) * N),
+                      [t * 10000 + i for i in range(N)])
+        txs.append(tx)
+    clock0 = tm.clock.load()
+    batcher = CommitBatcher(tm)
+    for tx in txs:
+        batcher.add(tx)
+    FP.install(FP.FaultSchedule([FP.Fault("mid_scatter", 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        batcher.commit_all()
+    FP.uninstall()
+    assert all(tm.ctx(t).publish_started for t in range(n_members))
+    rep = recover_engine(tm, list(range(n_members)))
+    assert sorted(rep.rolled_forward) == [0, 1, 2]
+    assert check_engine_invariants(tm, clock_at_least=clock0) == []
+    got = [tm.peek(i) for i in range(n_members * N)]
+    assert got == [t * 10000 + i for t in range(n_members)
+                   for i in range(N)]
+
+
+# ---------------------------------------------------------------------------
+# partial-lane completion (mid_scatter) across the pipelines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, N], ids=["scalar", "bulk"])
+def test_crash_partial_lane_write_back_rolls_forward(n):
+    """Both write_back publication paths (scalar loop below BULK_MIN,
+    bulk scatter above) crash with HALF the lanes written; redo is
+    whole-record, so recovery lands the full write set."""
+    tm = WORD_BACKENDS["tl2"](2)
+    tm.alloc(n, 0)
+
+    def w0(tx):
+        tx.write_bulk(np.arange(n), list(range(n)))
+    run(tm, w0, tid=0)
+    clock0 = tm.clock.load()
+    FP.install(FP.FaultSchedule([FP.Fault("mid_scatter", 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        def w1(tx):
+            tx.write_bulk(np.arange(n), [v + 1000 for v in range(n)])
+        run(tm, w1, tid=1)
+    FP.uninstall()
+    torn = [tm.peek(i) for i in range(n)]
+    assert any(v >= 1000 for v in torn) and any(v < 1000 for v in torn)
+    rep = recover_engine(tm, [1])
+    assert rep.rolled_forward == [1]
+    assert check_engine_invariants(tm, clock_at_least=clock0) == []
+    assert [tm.peek(i) for i in range(n)] == [v + 1000 for v in range(n)]
+
+
+def test_crash_partial_lane_encounter_rolls_back():
+    """Encounter-time (DCTL) scatter happens at WRITE time, before any
+    commit record: a partial-lane crash there must roll back via the
+    undo log — the heap returns to the committed prefix."""
+    tm = WORD_BACKENDS["dctl"](2)
+    tm.alloc(N, 0)
+    _committed_write(tm, 0)
+    clock0 = tm.clock.load()
+    FP.install(FP.FaultSchedule([FP.Fault("mid_scatter", 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        _crashing_write(tm, tid=1)
+    FP.uninstall()
+    assert not tm.ctx(1).publish_started
+    rep = recover_engine(tm, [1])
+    assert rep.rolled_back == [1]
+    assert check_engine_invariants(tm, clock_at_least=clock0) == []
+    assert _heap_prefix(tm, N) == list(range(N))
+
+
+def test_crash_partial_lane_mvstore_fused_wal_recovers(tmp_path):
+    """mid_scatter past the fused commit's buffer DONATION is the one
+    window in-process recovery cannot heal (the old buffers are gone,
+    the new state never parked) — the durable WAL is the only cover:
+    a FRESH handle replays the decided record and serves the commit."""
+    from repro.api.mvhandle import MVStoreHandle
+    from repro.reliability.wal import (WriteAheadLog, attach_wal,
+                                       recover_from_wal)
+    h = MVStoreHandle(n_threads=2, versioned="all", start_bg=False)
+    h.alloc(32, 0)
+    attach_wal(h, WriteAheadLog(str(tmp_path)))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(32), list(range(32)))
+    run(h, w0, tid=0)
+    FP.install(FP.FaultSchedule([FP.Fault("mid_scatter", 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        def w1(tx):
+            tx.write_bulk(np.arange(32), [v + 100 for v in range(32)])
+        run(h, w1, tid=1)
+    FP.uninstall()
+    FP.reset_thread()
+    h.wal.close()
+    h.stop()
+    h2 = MVStoreHandle(n_threads=2, versioned="all", start_bg=False)
+    h2.alloc(32, 0)
+    rep = recover_from_wal(str(tmp_path), h2)
+    assert rep.wal_records_replayed == 2
+    vals, ok = h2.snapshot_bulk(np.arange(32))
+    assert ok and list(np.asarray(vals)) == [v + 100 for v in range(32)]
+    assert check_store_invariants(h2) == []
+    h2.stop()
+
+
+# ---------------------------------------------------------------------------
+# durable WAL x crash matrix: restart-grade recovery (fresh target)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_wal_group_batch_two_dead_survive_restart(tmp_path):
+    """Two members dead in the SAME group-commit batch, process image
+    lost: the group shares ONE fsync'd DECIDE frame, so the whole batch
+    replays all-or-nothing into the fresh engine."""
+    from repro.reliability.wal import (WriteAheadLog, attach_wal,
+                                       recover_from_wal)
+    tm = WORD_BACKENDS["tl2"](4)
+    n_members = 3
+    tm.alloc(n_members * N, 0)
+    attach_wal(tm, WriteAheadLog(str(tmp_path)))
+    batcher = CommitBatcher(tm)
+    for t in range(n_members):
+        tx = tm.begin(t)
+        tx.write_bulk(np.arange(t * N, (t + 1) * N),
+                      [t * 10000 + i for i in range(N)])
+        batcher.add(tx)
+    FP.install(FP.FaultSchedule([FP.Fault("mid_scatter", 1, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        batcher.commit_all()
+    FP.uninstall()
+    FP.reset_thread()
+    tm.wal.close()
+    tm2 = WORD_BACKENDS["tl2"](4)
+    tm2.alloc(n_members * N, 0)
+    rep = recover_from_wal(str(tmp_path), tm2)
+    assert rep.wal_records_replayed == n_members
+    assert sorted(set(rep.rolled_forward)) == [0, 1, 2]
+    assert check_engine_invariants(tm2) == []
+    got = [tm2.peek(i) for i in range(n_members * N)]
+    assert got == [t * 10000 + i for t in range(n_members)
+                   for i in range(N)]
+
+
+def test_crash_wal_shardstore_epoch_mid_publish_survives_restart(tmp_path):
+    """Crash BETWEEN the two shard-local publishes of a cross-shard
+    epoch, process image lost: the epoch's members share one group
+    DECIDE, so the fresh store replays ALL of it — never a torn cut."""
+    from repro.core.shardstore import ShardStoreHandle
+    from repro.reliability.recovery import check_shardstore_invariants
+    from repro.reliability.wal import (WriteAheadLog, attach_wal,
+                                       recover_from_wal)
+    st = ShardStoreHandle(2, n_shards=2, span=4, start_bg=False)
+    st.alloc(32, 0)
+    attach_wal(st, WriteAheadLog(str(tmp_path)))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(32), list(range(32)))
+    run(st, w0, tid=0)
+    FP.install(FP.FaultSchedule([FP.Fault("pre_scatter", 2, "kill")]))
+    with pytest.raises(FP.SimulatedCrash):
+        def w1(tx):
+            tx.write_bulk(np.arange(32), [v + 100 for v in range(32)])
+        run(st, w1, tid=1)
+    FP.uninstall()
+    FP.reset_thread()
+    st.wal.close()
+    st.stop()
+    st2 = ShardStoreHandle(2, n_shards=2, span=4, start_bg=False)
+    st2.alloc(32, 0)
+    recover_from_wal(str(tmp_path), st2)
+    vals, ok = st2.snapshot_bulk(np.arange(32))
+    assert ok
+    got = list(np.asarray(vals))
+    # ATOMIC across the restart: all-old or all-new, never shard 0 new
+    # with shard 1 old — and the fsync'd decide means all-new here
+    assert got == [v + 100 for v in range(32)]
+    assert check_shardstore_invariants(st2) == []
+    st2.stop()
+
+
+@pytest.mark.parametrize("cut", [1, 24, 200])
+def test_crash_wal_torn_tail_truncation_recovers_prefix(cut, tmp_path):
+    """SIGKILL can tear the last write() at any byte: whatever the cut,
+    the scan stops at the tear and replay yields a consistent committed
+    prefix — never a misparse, never a half-applied record."""
+    from repro.reliability.wal import (WriteAheadLog, attach_wal,
+                                       recover_from_wal, scan_dir)
+    tm = WORD_BACKENDS["tl2"](2)
+    tm.alloc(N, 0)
+    attach_wal(tm, WriteAheadLog(str(tmp_path)))
+    _committed_write(tm, 0)
+
+    def w1(tx):
+        tx.write_bulk(np.arange(N), [v + 1000 for v in range(N)])
+    run(tm, w1, tid=1)
+    seg = tm.wal._f.name
+    tm.wal.close()
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:
+        f.truncate(size - cut)
+    recs, torn, _ = scan_dir(str(tmp_path))
+    tm2 = WORD_BACKENDS["tl2"](2)
+    tm2.alloc(N, 0)
+    rep = recover_from_wal(str(tmp_path), tm2)
+    assert check_engine_invariants(tm2) == []
+    # the recovered heap IS the replay of the surviving decided records
+    ref = np.zeros(N, np.int64)
+    for r in recs:
+        if r.decided:
+            ref[np.asarray(r.addrs)] = np.asarray(r.values)
+    assert [tm2.peek(i) for i in range(N)] == ref.tolist()
+    # prefix-consistency: the heap is one of the three commit states,
+    # never an interleave of txn 0 and txn 1 values
+    got = [tm2.peek(i) for i in range(N)]
+    assert got in ([0] * N, list(range(N)),
+                   [v + 1000 for v in range(N)])
+    assert rep.wal_records_replayed == sum(r.decided for r in recs)
 
 
 # ---------------------------------------------------------------------------

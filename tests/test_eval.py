@@ -69,3 +69,71 @@ def test_structrq_quick_single_backend(tmp_path):
     # the quiescent reference pair: struct query vs equal-word flat scan
     assert rows[0]["rq_words"] > 0
     assert rows[0]["rq_vs_scan"] > 0
+
+
+def _durability_row(backend, variant, ups, *, violations=0, replayed=5,
+                    grouped_members=0):
+    return {"workload": "durability", "backend": backend,
+            "variant": variant, "durable": "durable" in variant,
+            "updates_per_sec": ups, "violations": violations,
+            "wal_records_replayed": replayed if "durable" in variant
+            else 0, "grouped_members": grouped_members,
+            "commit_groups": 3 if grouped_members else 0,
+            "wal_stats": {"fsyncs": 4} if "durable" in variant else {}}
+
+
+def test_durability_headline_gates_on_group_pair():
+    from repro.eval import durability_headline
+    rows = [
+        _durability_row("tl2", "inmem", 2000.0),
+        _durability_row("tl2", "durable", 700.0),          # 0.35x solo
+        _durability_row("tl2", "inmem-group", 2400.0),
+        _durability_row("tl2", "durable-group", 1600.0,    # 0.67x group
+                        grouped_members=12),
+    ]
+    h = durability_headline(rows)["tl2"]
+    assert h["gated_on"] == "group"
+    assert h["holds"] is True
+    assert abs(h["ratio_vs_inmem"] - 1600.0 / 2400.0) < 1e-9
+    assert abs(h["solo_ratio_vs_inmem"] - 0.35) < 1e-9
+
+
+def test_durability_headline_falls_back_to_solo_and_fails_closed():
+    from repro.eval import durability_headline
+    # no grouped members -> solo pair gates; 0.35x -> does not hold
+    rows = [
+        _durability_row("multiverse", "inmem", 2000.0),
+        _durability_row("multiverse", "durable", 700.0),
+        _durability_row("multiverse", "inmem-group", 2000.0),
+        _durability_row("multiverse", "durable-group", 700.0),
+    ]
+    h = durability_headline(rows)["multiverse"]
+    assert h["gated_on"] == "solo"
+    assert h["holds"] is False
+    # a violation anywhere in the quartet kills the claim
+    rows2 = [
+        _durability_row("tl2", "inmem", 2000.0, violations=1),
+        _durability_row("tl2", "inmem-group", 2400.0),
+        _durability_row("tl2", "durable-group", 1600.0,
+                        grouped_members=12),
+    ]
+    assert durability_headline(rows2)["tl2"]["holds"] is False
+
+
+def test_durability_group_trial_smoke():
+    """One live durable-group trial: fused batches journal through the
+    WAL, the restart drill replays them, the checker stays clean."""
+    from repro.eval.workloads import WORKLOADS, TrialSpec
+    w = WORKLOADS["durability"]
+    spec = TrialSpec(
+        workload="durability", variant="durable-group", n_readers=1,
+        n_updaters=2, duration_s=0.25, warmup_s=0.1,
+        params=dict(write_words=64, n_blocks=8, max_retries=2000,
+                    durable=True, grouped=True))
+    row = w.run_trial("tl2", spec, seed=3)
+    assert row["violations"] == 0
+    assert row["updates_per_sec"] > 0
+    assert row["grouped_members"] > 0          # batches really fused
+    assert row["wal_records_replayed"] > 0     # restart drill replayed
+    assert row["restart_drill_failures"] == []
+    assert row["wal_stats"]["fsyncs"] <= row["wal_stats"]["decides"]

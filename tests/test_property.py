@@ -249,3 +249,73 @@ def test_random_fault_schedule_recovers_committed_prefix(backend, faults):
     assert violations == [], (violations, sched.fired)
     got = [tm.peek(i) for i in range(n)]
     assert got == expected, (sched.fired,)
+
+
+@given(backend=st.sampled_from(["multiverse", "tl2"]),
+       p0=st.sampled_from(_FAULT_POINTS),
+       p1=st.sampled_from(_FAULT_POINTS),
+       nth0=st.integers(1, 3), nth1=st.integers(1, 3),
+       rounds=st.integers(2, 4))
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_multi_fault_schedule_recovers_all_dead_in_one_sweep(
+        backend, p0, p1, nth0, nth1, rounds):
+    """Multi-worker crash schedules: tids 0 and 1 alternate commits on
+    DISJOINT ranges while tid-filtered faults pick them off — possibly
+    BOTH, possibly at a pre-record point for one and a post-record point
+    for the other.  A single recover_engine sweep over every dead tid
+    must land each region on its own committed-prefix value: finished
+    commits, plus the crashed one iff its commit record was written."""
+    from repro.api.substrate import MaxRetriesExceeded, run as api_run
+    from repro.core.baselines import TL2
+    from repro.core.stm import Multiverse
+    from repro.reliability import faultpoints as FP
+    from repro.reliability.recovery import (check_engine_invariants,
+                                            recover_engine)
+    tm = (Multiverse(2, start_bg=False) if backend == "multiverse"
+          else TL2(2))
+    n = 300
+    tm.alloc(2 * n, 0)
+    expected = {0: [0] * n, 1: [0] * n}
+    pending = {}                       # tid -> values of the crashed txn
+    dead = set()
+    FP.install(FP.FaultSchedule([FP.Fault(p0, nth0, "kill", tid=0),
+                                 FP.Fault(p1, nth1, "kill", tid=1)]))
+    try:
+        for g in range(1, rounds + 1):
+            for tid in (0, 1):
+                if tid in dead:
+                    continue           # a dead worker stays dead
+                lo = tid * n
+                vals = [g * 1000 + tid * 100000 + i for i in range(n)]
+
+                def w(tx, lo=lo, vals=vals):
+                    tx.write_bulk(np.arange(lo, lo + n), vals)
+                try:
+                    api_run(tm, w, tid=tid, max_retries=10)
+                    expected[tid] = vals
+                except FP.FaultError:
+                    if tm.ctx(tid).publish_started:
+                        expected[tid] = vals
+                except MaxRetriesExceeded:
+                    pass
+                except FP.SimulatedCrash:
+                    dead.add(tid)
+                    pending[tid] = vals
+                    FP.reset_thread()  # next worker = its own thread
+    finally:
+        FP.uninstall()
+        FP.reset_thread()
+    if dead:
+        decided = {t: tm.ctx(t).active and tm.ctx(t).publish_started
+                   for t in dead}
+        rep = recover_engine(tm, sorted(dead))   # ONE sweep, all corpses
+        assert rep.dead_tids == sorted(dead)
+        for t in sorted(dead):
+            if decided[t]:
+                expected[t] = pending[t]
+    violations = check_engine_invariants(tm, clock_at_least=0)
+    assert violations == [], violations
+    for tid in (0, 1):
+        got = [tm.peek(tid * n + i) for i in range(n)]
+        assert got == expected[tid], (tid, sorted(dead))

@@ -274,6 +274,60 @@ def test_scheduler_drain_finishes_inflight_and_closes_queue():
     assert q.offer(Request(99)) is Admission.CLOSED
 
 
+class DyingExecutor(FakeExecutor):
+    """Aborts everything until the crash step, then dies for real."""
+
+    def __init__(self, n_slots=2, die_after_decodes=2):
+        super().__init__(n_slots=n_slots)
+        self.die_after_decodes = die_after_decodes
+
+    def decode(self, slots, clocks):
+        if len(self.decode_calls) + 1 >= self.die_after_decodes:
+            self.decode_calls.append((list(slots), list(clocks)))
+            raise RuntimeError("executor died mid-decode")
+        return super().decode(slots, clocks)
+
+
+def test_scheduler_crash_drain_sweeps_slots_then_reraises():
+    """Pinned: an executor crash inside run_until_drained leaves NO slot
+    half-served.  In-flight requests below the abort cap are re-admitted
+    (progress discarded, decode state reset, one abort charged); those
+    at the cap are FAILED; the crash still propagates; and a later drain
+    over the same scheduler completes the survivors."""
+    q = RequestQueue(max_depth=64)
+    ex = DyingExecutor(n_slots=2, die_after_decodes=2)
+    sched = ContinuousBatchingScheduler(
+        q, ex, ServeMetrics(), max_request_aborts=3)
+    ex._sched = sched
+    r1 = Request(1, max_new=6)
+    r2 = Request(2, max_new=6)
+    r2.aborts = 2                      # one more abort hits the cap
+    q.offer(r1)
+    q.offer(r2)
+    try:
+        sched.run_until_drained(timeout_s=5.0)
+        raise AssertionError("crash did not propagate")
+    except RuntimeError as e:
+        assert "died mid-decode" in str(e)
+    # r2 was at the cap: swept to FAILED with complete accounting
+    assert r2.outcome is Outcome.FAILED_ABORTS
+    # r1 survives: re-admitted with stale state fully discarded
+    assert r1.outcome is Outcome.PENDING
+    assert r1.aborts == 1 and r1.tokens == [] and r1.pinned_clock == -1
+    assert r1.served_clocks == []
+    slot = sched.slots[0]
+    assert slot is not None and not slot.decoding and slot.produced == 0
+    assert sched.metrics.snapshot_aborts >= 2
+    # post-recovery drain (executor healthy again) finishes r1
+    sched.executor = healthy = FakeExecutor(n_slots=2)
+    healthy.clock = 11
+    healthy._sched = sched
+    assert sched.run_until_drained(timeout_s=5.0)
+    assert r1.outcome is Outcome.COMPLETED
+    assert r1.pinned_clock == 11       # re-pinned at the fresh clock
+    assert r1.tokens == [1] * 6
+
+
 # ---------------------------------------------------------------------------
 # service: occupancy floor + e2e under a committing trainer
 # ---------------------------------------------------------------------------

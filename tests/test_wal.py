@@ -1,0 +1,429 @@
+"""Durable WAL: frame format, torn tails, segments, and real-SIGKILL
+whole-process recovery drills.
+
+Two layers:
+
+* ``test_wal_quick_*`` — fast, in-process: frame round-trips, torn-tail
+  truncation, segment roll + lsn continuation, checkpoint reclaim,
+  group-append fsync batching, and replay into a FRESH engine (the
+  in-process stand-in for losing the process image).  CI smoke selects
+  these with ``-k "wal and quick"``.
+* ``test_wal_sigkill_*`` — the real thing: a subprocess commits a
+  durable prefix, arms a ``die`` fault (actual ``SIGKILL`` to its own
+  pid) inside the commit pipeline, and is reaped mid-instruction.  The
+  parent asserts returncode ``-9``, restarts a fresh store, and
+  ``recover_from_wal`` must rebuild the heap bit-identical to the
+  committed-prefix reference derived from the scanned log.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api.substrate import run
+from repro.core.baselines import TL2
+from repro.core.stats_schema import normalize_stats
+from repro.core.stm import Multiverse
+from repro.reliability import faultpoints as FP
+from repro.reliability.recovery import check_engine_invariants
+from repro.reliability.wal import (WriteAheadLog, attach_wal,
+                                   recover_from_wal, scan_dir)
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_schedule():
+    yield
+    FP.uninstall()
+    FP.reset_thread()
+
+
+# ---------------------------------------------------------------------------
+# quick: frame format and file lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_wal_quick_prepare_decide_complete_roundtrip(tmp_path):
+    with WriteAheadLog(str(tmp_path)) as wal:
+        l0 = wal.append_prepare(3, [0, 1, 2], [10, 11, 12],
+                                clocks=(7,), epoch=-1, shard=-1)
+        l1 = wal.append_prepare(4, [5], [50], clocks=(8,))
+        wal.append_decide(l0)
+        wal.append_complete(l0)
+    recs, torn, base = scan_dir(str(tmp_path))
+    assert torn == 0 and base is None
+    assert [r.lsn for r in recs] == [l0, l1]
+    r0, r1 = recs
+    assert (r0.tid, r0.decided, r0.completed) == (3, True, True)
+    assert r0.clocks == (7,)
+    assert r0.addrs.tolist() == [0, 1, 2]
+    assert r0.values.tolist() == [10, 11, 12]
+    # prepared-but-undecided: the frame survives but replay drops it
+    assert (r1.tid, r1.decided, r1.completed) == (4, False, False)
+
+
+def test_wal_quick_torn_tail_is_detected_and_dropped(tmp_path):
+    with WriteAheadLog(str(tmp_path)) as wal:
+        l0 = wal.append_prepare(0, [0], [1], clocks=(1,))
+        wal.append_decide(l0)
+        l1 = wal.append_prepare(1, list(range(8)), list(range(8)),
+                                clocks=(2,))
+        wal.append_decide(l1)
+        seg = wal._f.name
+    # tear the tail: the dying write() cut the last frame in half
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:
+        f.truncate(size - 11)
+    recs, torn, _ = scan_dir(str(tmp_path))
+    assert torn > 0
+    # the prefix before the tear is intact; the torn frame was l1's
+    # DECIDE, so l1 reads back UNDECIDED — a torn commit record means
+    # the commit never decided, exactly the fail-closed direction
+    assert [r.lsn for r in recs] == [l0, l1]
+    assert recs[0].decided and not recs[1].decided
+
+
+def test_wal_quick_corrupt_frame_stops_scan_at_crc(tmp_path):
+    with WriteAheadLog(str(tmp_path)) as wal:
+        l0 = wal.append_prepare(0, [0], [1], clocks=(1,))
+        wal.append_decide(l0)
+        l1 = wal.append_prepare(1, [2], [3], clocks=(2,))
+        wal.append_decide(l1)
+        seg = wal._f.name
+    data = bytearray(open(seg, "rb").read())
+    # flip one payload byte in the MIDDLE record: CRC must catch it and
+    # the scan must stop there (everything after is suspect)
+    data[len(data) // 2] ^= 0xFF
+    open(seg, "wb").write(bytes(data))
+    recs, torn, _ = scan_dir(str(tmp_path))
+    assert torn > 0
+    assert len(recs) < 2 or not all(r.decided for r in recs)
+
+
+def test_wal_quick_segment_roll_and_reopen_continues_lsn(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=256)
+    lsns = []
+    for i in range(10):
+        lsn = wal.append_prepare(i, [i], [i * 10], clocks=(i,))
+        wal.append_decide(lsn)
+        lsns.append(lsn)
+    n_segs = len(wal._segments())
+    assert n_segs > 1                  # 256B forces rolls between frames
+    wal.close()
+    # reopen: lsn sequence continues, appends land in a FRESH segment
+    wal2 = WriteAheadLog(str(tmp_path), segment_bytes=256)
+    lsn = wal2.append_prepare(99, [0], [0], clocks=(99,))
+    wal2.append_decide(lsn)
+    assert lsn == lsns[-1] + 1
+    assert len(wal2._segments()) == n_segs + 1
+    wal2.close()
+    recs, torn, _ = scan_dir(str(tmp_path))
+    assert torn == 0
+    assert [r.lsn for r in recs] == lsns + [lsn]
+    assert all(r.decided for r in recs)
+
+
+def test_wal_quick_checkpoint_reclaims_segments(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=256)
+    for i in range(8):
+        wal.append_decide(wal.append_prepare(i, [i], [i], clocks=(i,)))
+    heap = np.arange(8, dtype=np.int64)
+    floor = wal.checkpoint(heap, clock=8)
+    assert floor == wal._next_lsn
+    # everything below the floor is in the base image: old segments gone
+    assert len(wal._segments()) == 1
+    lsn = wal.append_prepare(9, [3], [333], clocks=(9,))
+    wal.append_decide(lsn)
+    wal.close()
+    recs, torn, base = scan_dir(str(tmp_path))
+    assert torn == 0
+    assert base is not None
+    b_floor, b_heap, b_clock = base
+    assert b_floor == floor and b_clock == 8
+    assert b_heap.tolist() == heap.tolist()
+    # only the post-checkpoint record still needs replaying
+    assert [r.lsn for r in recs] == [lsn]
+
+
+def test_wal_quick_group_append_is_one_fsync(tmp_path):
+    wal = WriteAheadLog(str(tmp_path))
+    recs = [(t, [t * 4 + i for i in range(4)],
+             [t * 100 + i for i in range(4)], (5,), -1, -1)
+            for t in range(3)]
+    f0 = wal.counters["fsyncs"]
+    lsns = wal.append_prepare_group(recs)
+    assert wal.counters["fsyncs"] == f0          # prepares are buffered
+    wal.append_decide_group(lsns)
+    assert wal.counters["fsyncs"] == f0 + 1      # ONE fsync per group
+    assert wal.counters["decides"] == 3
+    wal.close()
+    scanned, _, _ = scan_dir(str(tmp_path))
+    assert [r.tid for r in scanned] == [0, 1, 2]
+    assert all(r.decided for r in scanned)
+
+
+def test_wal_rejects_non_numeric_heap_values(tmp_path):
+    with WriteAheadLog(str(tmp_path)) as wal:
+        with pytest.raises(TypeError, match="numeric heap"):
+            wal.append_prepare(0, [0], [object()], clocks=(1,))
+
+
+# ---------------------------------------------------------------------------
+# quick: replay into a fresh engine (in-process process-loss stand-in)
+# ---------------------------------------------------------------------------
+
+N = 300          # >= BULK_MIN so the bulk scatter (and mid_scatter) runs
+
+
+def test_wal_quick_replay_rebuilds_fresh_engine(tmp_path):
+    tm = TL2(2)
+    tm.alloc(N, 0)
+    attach_wal(tm, WriteAheadLog(str(tmp_path)))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(N), list(range(N)))
+    run(tm, w0, tid=0)
+
+    def w1(tx):
+        tx.write_bulk(np.arange(8), [v + 1000 for v in range(8)])
+    run(tm, w1, tid=1)
+    tm.wal.close()
+    # the process image is gone: all that survives is the directory
+    tm2 = TL2(2)
+    tm2.alloc(N, 0)
+    rep = recover_from_wal(str(tmp_path), tm2)
+    assert rep.wal_records_replayed == 2
+    exp = [v + 1000 for v in range(8)] + list(range(8, N))
+    assert [tm2.peek(i) for i in range(N)] == exp
+    assert check_engine_invariants(tm2) == []
+    # the typed counters surface through the shared stats schema
+    stats = normalize_stats(tm2.stats())
+    assert stats["wal_records_replayed"] == 2
+    assert stats["rolled_back"] == 0
+
+
+def test_wal_quick_partial_lane_crash_heals_by_whole_record_redo(tmp_path):
+    """mid_scatter crash: the dying process's heap is TORN (half the
+    lanes new, half old), the WAL already holds the fsync'd DECIDE, and
+    replay into a fresh engine redoes the WHOLE record idempotently."""
+    tm = TL2(2)
+    tm.alloc(N, 0)
+    attach_wal(tm, WriteAheadLog(str(tmp_path)))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(N), list(range(N)))
+    run(tm, w0, tid=0)
+    FP.install(FP.FaultSchedule([FP.Fault("mid_scatter", 1, "crash")]))
+    with pytest.raises(FP.ProcessCrashed):
+        def w1(tx):
+            tx.write_bulk(np.arange(N), [v + 1000 for v in range(N)])
+        run(tm, w1, tid=1)
+    FP.uninstall()
+    # the crash image really is partial-lane: some lanes new, some old
+    torn = [tm.peek(i) for i in range(N)]
+    assert any(v >= 1000 for v in torn) and any(v < 1000 for v in torn)
+    tm.wal.close()
+    tm2 = TL2(2)
+    tm2.alloc(N, 0)
+    rep = recover_from_wal(str(tmp_path), tm2)
+    assert 1 in rep.rolled_forward         # decided, never COMPLETEd
+    assert [tm2.peek(i) for i in range(N)] == [v + 1000 for v in range(N)]
+    assert check_engine_invariants(tm2) == []
+
+
+def test_wal_quick_undecided_prepare_rolls_back(tmp_path):
+    """A crash BEFORE the decide: the prepare never replays — rollback
+    is simply not replaying, and the report says so."""
+    tm = TL2(2)
+    tm.alloc(N, 0)
+    attach_wal(tm, WriteAheadLog(str(tmp_path)))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(N), list(range(N)))
+    run(tm, w0, tid=0)
+    FP.install(FP.FaultSchedule([FP.Fault("post_claim", 1, "crash")]))
+    with pytest.raises(FP.ProcessCrashed):
+        def w1(tx):
+            tx.write_bulk(np.arange(N), [v + 1000 for v in range(N)])
+        run(tm, w1, tid=1)
+    FP.uninstall()
+    tm.wal.flush()
+    tm.wal.close()
+    tm2 = TL2(2)
+    tm2.alloc(N, 0)
+    rep = recover_from_wal(str(tmp_path), tm2)
+    assert 1 in rep.rolled_back and 1 not in rep.rolled_forward
+    assert [tm2.peek(i) for i in range(N)] == list(range(N))
+    assert check_engine_invariants(tm2) == []
+
+
+def test_wal_mvhandle_replay_redrives_publish(tmp_path):
+    from repro.api.mvhandle import MVStoreHandle
+    h = MVStoreHandle(n_threads=2, versioned="all", start_bg=False)
+    h.alloc(32, 0)
+    attach_wal(h, WriteAheadLog(str(tmp_path)))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(32), [v + 5 for v in range(32)])
+    run(h, w0, tid=0)
+    h.wal.close()
+    h.stop()
+    h2 = MVStoreHandle(n_threads=2, versioned="all", start_bg=False)
+    h2.alloc(32, 0)
+    rep = recover_from_wal(str(tmp_path), h2)
+    assert rep.wal_records_replayed == 1
+    vals, ok = h2.snapshot_bulk(np.arange(32))
+    assert ok and list(np.asarray(vals)) == [v + 5 for v in range(32)]
+    assert h2.clock >= 1
+    assert normalize_stats(h2.stats())["wal_records_replayed"] == 1
+    h2.stop()
+
+
+def test_wal_shardstore_epoch_survives_restart_atomically(tmp_path):
+    """Cross-shard epoch: one prepare per write shard + one shared group
+    DECIDE — after a restart the epoch replays all-or-nothing."""
+    from repro.core.shardstore import ShardStoreHandle
+    from repro.reliability.recovery import check_shardstore_invariants
+    st = ShardStoreHandle(2, n_shards=2, span=4, start_bg=False)
+    st.alloc(32, 0)
+    attach_wal(st, WriteAheadLog(str(tmp_path)))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(32), [v + 100 for v in range(32)])
+    run(st, w0, tid=0)                 # spans both shards: epoch commit
+    st.wal.close()
+    st.stop()
+    recs, _, _ = scan_dir(str(tmp_path))
+    epochs = {r.epoch for r in recs if r.epoch >= 0}
+    shards = {r.shard for r in recs if r.epoch >= 0}
+    assert len(epochs) == 1 and shards == {0, 1}
+    st2 = ShardStoreHandle(2, n_shards=2, span=4, start_bg=False)
+    st2.alloc(32, 0)
+    rep = recover_from_wal(str(tmp_path), st2)
+    assert rep.wal_records_replayed == len(recs)
+    vals, ok = st2.snapshot_bulk(np.arange(32))
+    assert ok and list(np.asarray(vals)) == [v + 100 for v in range(32)]
+    assert check_shardstore_invariants(st2) == []
+    st2.stop()
+
+
+def test_wal_group_commit_batch_journals_one_decide(tmp_path):
+    from repro.core.engine.groupcommit import CommitBatcher
+    tm = TL2(4)
+    tm.alloc(3 * N, 0)
+    attach_wal(tm, WriteAheadLog(str(tmp_path)))
+    batcher = CommitBatcher(tm)
+    for t in range(3):
+        tx = tm.begin(t)
+        tx.write_bulk(np.arange(t * N, (t + 1) * N),
+                      [t * 10000 + i for i in range(N)])
+        batcher.add(tx)
+    f0 = tm.wal.counters["fsyncs"]
+    batcher.commit_all()
+    assert tm.wal.counters["fsyncs"] == f0 + 1     # group decide batches
+    tm.wal.close()
+    tm2 = TL2(4)
+    tm2.alloc(3 * N, 0)
+    rep = recover_from_wal(str(tmp_path), tm2)
+    assert rep.wal_records_replayed == 3
+    got = [tm2.peek(i) for i in range(3 * N)]
+    exp = [t * 10000 + i for t in range(3) for i in range(N)]
+    assert got == exp
+
+
+# ---------------------------------------------------------------------------
+# subprocess SIGKILL drills: the process image is REALLY gone
+# ---------------------------------------------------------------------------
+
+_WORKER = textwrap.dedent("""
+    import sys
+    import numpy as np
+    from repro.api.substrate import run
+    from repro.core.baselines import TL2
+    from repro.core.stm import Multiverse
+    from repro.reliability import faultpoints as FP
+    from repro.reliability.wal import WriteAheadLog, attach_wal
+
+    backend, point, wal_dir, n = (sys.argv[1], sys.argv[2], sys.argv[3],
+                                  int(sys.argv[4]))
+    tm = (Multiverse(2, start_bg=False) if backend == "multiverse"
+          else TL2(2))
+    tm.alloc(n, 0)
+    attach_wal(tm, WriteAheadLog(wal_dir))
+
+    def w0(tx):
+        tx.write_bulk(np.arange(n), list(range(n)))
+    run(tm, w0, tid=0)                 # the committed prefix
+
+    FP.install(FP.FaultSchedule([FP.Fault(point, 1, "die")]))
+
+    def w1(tx):
+        tx.write_bulk(np.arange(n), [v + 1000 for v in range(n)])
+    run(tm, w1, tid=1)                 # SIGKILLs itself mid-commit
+    sys.exit(3)                        # reached only if the fault missed
+""")
+
+
+def _sigkill_drill(tmp_path, backend, point, n):
+    """Run the worker, assert it was reaped by SIGKILL, and return the
+    recovered fresh store plus the recovery report and scanned records."""
+    script = tmp_path / "worker.py"
+    script.write_text(_WORKER)
+    wal_dir = str(tmp_path / "wal")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.getcwd(), "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(script), backend, point, wal_dir, str(n)],
+        env=env, capture_output=True, timeout=120)
+    assert proc.returncode == -signal.SIGKILL, (
+        proc.returncode, proc.stdout, proc.stderr)
+    recs, torn, base = scan_dir(wal_dir)
+    # restart: a FRESH process image recovers from the directory alone
+    tm2 = (Multiverse(2, start_bg=False) if backend == "multiverse"
+           else TL2(2))
+    tm2.alloc(n, 0)
+    rep = recover_from_wal(wal_dir, tm2)
+    # bit-identical to the committed-prefix reference: replay exactly
+    # the decided records, in lsn order, onto a zeroed heap
+    ref = np.zeros(n, np.int64)
+    for r in recs:
+        if r.decided:
+            ref[r.addrs] = r.values
+    got = np.array([tm2.peek(i) for i in range(n)])
+    assert np.array_equal(got, ref), (got[:8], ref[:8])
+    assert check_engine_invariants(tm2) == []
+    return tm2, rep, recs
+
+
+def test_wal_sigkill_pre_record_rolls_back(tmp_path):
+    """SIGKILL before the commit record exists: the crashed txn's
+    writes never became durable — the restart sees the prefix only."""
+    tm2, rep, recs = _sigkill_drill(tmp_path, "tl2", "pre_claim", N)
+    assert not any(r.decided for r in recs if r.tid == 1)
+    assert 1 not in rep.rolled_forward
+    assert [tm2.peek(i) for i in range(N)] == list(range(N))
+
+
+def test_wal_sigkill_mid_scatter_partial_lane_rolls_forward(tmp_path):
+    """SIGKILL INSIDE the bulk publish sweep (partial-lane completion):
+    the fsync'd DECIDE landed before the first heap write, so the fresh
+    process must roll the whole record forward idempotently."""
+    tm2, rep, recs = _sigkill_drill(tmp_path, "tl2", "mid_scatter", N)
+    assert any(r.decided and r.tid == 1 for r in recs)
+    assert 1 in rep.rolled_forward       # decided, COMPLETE never landed
+    assert [tm2.peek(i) for i in range(N)] == [v + 1000 for v in range(N)]
+
+
+def test_wal_sigkill_pre_release_rolls_forward_encounter(tmp_path):
+    """Encounter-time backend (Multiverse): prepare+decide collapse at
+    the decide point; SIGKILL holding every write lock still leaves a
+    durable record the restart honors."""
+    tm2, rep, recs = _sigkill_drill(tmp_path, "multiverse", "pre_release",
+                                    32)
+    assert any(r.decided and r.tid == 1 for r in recs)
+    assert 1 in rep.rolled_forward
+    assert [tm2.peek(i) for i in range(32)] == [v + 1000 for v in range(32)]
